@@ -1,0 +1,196 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For each (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = per_chip_dot_FLOPs / 197 TFLOP/s (bf16)
+    memory term     = per_chip_HBM_bytes / 819 GB/s
+    collective term = per_chip_link_traffic / 50 GB/s (per-link ICI)
+
+All three numerators come from the trip-count-aware HLO walker
+(hlo_analysis.py) over the compiled, partitioned module — i.e. they are
+per-chip quantities by construction.  The dominant term is the projected
+bottleneck; MODEL_FLOPS/HLO_FLOPs (the 'useful-compute' ratio) uses
+6*N*D (train), 2*N*tokens (prefill) or 2*N*B (decode, per step), with
+N_active for MoE.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../results/bench")
+
+
+def _param_counts(arch_id):
+    """(N_total, N_active) from the config via eval_shape (no allocation)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.base import get_family
+
+    cfg = get_config(arch_id)
+    fam = get_family(cfg.family)
+    key = jax.random.PRNGKey(0)
+    sds = jax.eval_shape(lambda: fam.init_params(key, cfg))
+    n_total = sum(l.size for l in jax.tree_util.tree_leaves(sds))
+    n_active = n_total
+    if cfg.n_experts:
+        F = cfg.d_expert or cfg.d_ff
+        per_layer_experts = cfg.n_experts * 3 * cfg.d_model * F
+        inactive = (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * F
+        n_active = n_total - cfg.n_layers * inactive
+    return n_total, n_active
+
+
+def model_flops(arch_id, shape_name, seq_len, batch, kind):
+    n_total, n_active = _param_counts(arch_id)
+    if kind == "train":
+        return 6.0 * n_active * seq_len * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * batch
+    return 2.0 * n_active * batch          # decode: one token per sequence
+
+
+SHAPE_KIND = {"train_4k": "train", "prefill_32k": "prefill",
+              "decode_32k": "decode", "long_500k": "decode"}
+SHAPE_DIMS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+              "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+CHIPS = 256
+
+
+def analytic_memory_bytes(arch_id, shape_name):
+    """First-order per-chip HBM-traffic floor (what a perfectly fused TPU
+    program must move), used alongside the HLO-bytes upper bound:
+
+      train:   client params fwd+bwd+delta (3 x 2N) + master Adam update
+               (read p,m,v + write p,m,v in f32 = 24N) + residual
+               activations (B*S*d*L*2, read+write)
+      prefill: params 2N + KV-cache write + activations
+      decode:  params 2N (every weight read once per token) + KV read
+    """
+    from repro.configs import get_config
+    cfg = get_config(arch_id, long_variant=(shape_name == "long_500k"))
+    S, B = SHAPE_DIMS[shape_name]
+    n_total, _ = _param_counts(arch_id)
+    kind = SHAPE_KIND[shape_name]
+    L, d = cfg.n_layers, cfg.d_model
+    if kind == "train":
+        params = 3 * 2 * n_total + 24 * n_total
+        acts = 2 * (B * S * d * L * 2)
+        total = params + acts
+    else:
+        # KV bytes (window-bounded for pure sliding-window configs)
+        eff_s = min(S, cfg.sliding_window) if (
+            cfg.sliding_window and not cfg.local_global_pattern) else S
+        kv = 2 * L * B * eff_s * cfg.n_kv_heads * cfg.head_dim * 2
+        if cfg.family in ("ssm", "hybrid"):
+            kv = L * B * 4 * d * cfg.ssm_state  # recurrent states, f32
+        if kind == "prefill":
+            total = 2 * n_total + kv + 2 * (B * S * d * L * 2)
+        else:
+            total = 2 * n_total + kv
+    return total / CHIPS
+
+
+def lever_sentence(dominant, arch, shape):
+    return {
+        "compute": ("raise MXU utilisation: remove remat waste / pad-free "
+                    "head sharding / larger microbatch"),
+        "memory": ("cut HBM traffic: fuse noise+clip, keep KV in bf16, "
+                   "window-bound the decode cache, reuse gathered params"),
+        "collective": ("reduce link traffic: reduce-scatter instead of "
+                       "all-reduce+slice, overlap param all-gather with "
+                       "compute, shard aggregation tree"),
+    }[dominant]
+
+
+def analyze_all(mesh="single", chips=256, tag=""):
+    rows = []
+    suffix = f"__{tag}" if tag else ""
+    for fn in sorted(glob.glob(os.path.join(
+            DRYRUN_DIR, f"*__{mesh}{suffix}.json"))):
+        base = os.path.basename(fn)[: -len(".json")]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        arch, shape = parts[0], parts[1]
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("status") != "ok" or "walk" not in d:
+            rows.append({"arch": arch, "shape": shape, "status":
+                         d.get("status", "?"),
+                         "error": d.get("error", "")[:100]})
+            continue
+        walk = d["walk"]
+        if "error" in walk:
+            rows.append({"arch": arch, "shape": shape,
+                         "status": "walk_error", "error": walk["error"]})
+            continue
+        t_comp = walk["dot_flops"] / PEAK_FLOPS
+        t_mem_hlo = walk["hbm_bytes"] / HBM_BW
+        t_mem_floor = analytic_memory_bytes(arch, shape) / HBM_BW
+        # the CPU-lowered HLO keeps donation copies / unaliased cache
+        # updates a TPU elides; classify with the geometric mean of the
+        # upper bound and the analytic floor, report both (EXPERIMENTS.md)
+        t_mem = (t_mem_hlo * t_mem_floor) ** 0.5
+        t_coll = walk["total_collective_bytes"] / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        S, B = SHAPE_DIMS[shape]
+        kind = SHAPE_KIND[shape]
+        mf = model_flops(arch, shape, S, B, kind)
+        hlo_total = walk["dot_flops"] * chips
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "compute_s": t_comp, "memory_s": t_mem,
+            "memory_hlo_s": t_mem_hlo, "memory_floor_s": t_mem_floor,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+            "model_flops": mf,
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": mf / hlo_total if hlo_total else None,
+            "lever": lever_sentence(dominant, arch, shape),
+        })
+    return rows
+
+
+def write_table(rows, name="roofline"):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    # markdown for EXPERIMENTS.md
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful FLOP ratio |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"{r.get('status')} | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | "
+            f"{(r['useful_ratio'] or 0):.2f} |")
+    md = "\n".join(lines)
+    with open(os.path.join(OUT_DIR, f"{name}.md"), "w") as f:
+        f.write(md + "\n")
+    return md
+
+
+if __name__ == "__main__":
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    rows = analyze_all(tag=tag)
+    print(write_table(rows, name=f"roofline{'_' + tag if tag else ''}"))

@@ -1,0 +1,168 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure
+plus kernel microbenchmarks and the roofline digest.
+
+    PYTHONPATH=src python -m benchmarks.run            # full pass
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+
+Prints ``name,us_per_call,derived`` CSV lines; full artifacts land in
+results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _line(name, us, derived=""):
+    print(f"{name},{us if us is not None else ''},{derived}", flush=True)
+
+
+def kernel_microbench():
+    """us_per_call for the three Pallas kernels (interpret mode on CPU —
+    correctness-path timing, not TPU perf; the roofline table carries the
+    TPU projection)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.dp_clip.ops import dp_clip_mean_flat
+    from repro.kernels.flash_attn.ops import flash_decode
+    from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+
+    key = jax.random.PRNGKey(0)
+
+    def timeit(f, *args, reps=3):
+        jax.block_until_ready(f(*args))  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(f(*args))
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    flat = jax.random.normal(key, (128, 4096), jnp.float32)
+    us = timeit(lambda x: dp_clip_mean_flat(x, 1.0), flat)
+    _line("kernel.dp_clip.128x4096", round(us), "interpret")
+
+    q = jax.random.normal(key, (2, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 1024, 2, 64), jnp.float32)
+    pos = jnp.array([900, 1000])
+    us = timeit(lambda a, b, c, d: flash_decode(a, b, c, d, window=512),
+                q, k, v, pos)
+    _line("kernel.flash_decode.S1024", round(us), "interpret")
+
+    xr = jax.random.normal(key, (1, 4, 64, 4, 32), jnp.float32)
+    ar = -jnp.abs(jax.random.normal(key, (1, 4, 4, 64))) * 0.1
+    Br = jax.random.normal(key, (1, 4, 64, 32), jnp.float32)
+    Cr = jax.random.normal(key, (1, 4, 64, 32), jnp.float32)
+    us = timeit(ssd_intra_chunk, xr, ar, Br, Cr)
+    _line("kernel.ssd_intra.c4q64", round(us), "interpret")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-fl", action="store_true")
+    ap.add_argument("--fresh", action="store_true",
+                    help="recompute even when a cached artifact exists")
+    args = ap.parse_args()
+
+    from benchmarks import fl_benchmarks as flb
+
+    def run_or_cache(name, fn):
+        if not args.fresh:
+            rows = flb.cached(name)
+            if rows is not None:
+                return rows, True
+        return fn(), False
+
+    t0 = time.time()
+    kernel_microbench()
+
+    if not args.skip_fl:
+        rounds = 4 if args.quick else 8
+        rows, hit = run_or_cache(
+            "table2_resources", lambda: flb.bench_table2_resources(rounds=rounds))
+        _line("table2.resources", round((time.time() - t0) * 1e6),
+              f"tiers={len(rows)}{';cached' if hit else ''}")
+
+        rows, hit = run_or_cache("fig3_per_device", flb.bench_fig3_per_device)
+        rel = {r["hw_type"]: r["rel_vs_T5"] for r in rows}
+        _line("fig3.per_device", None,
+              f"T1_rel={rel.get('HW_T1')}x{';cached' if hit else ''}")
+
+        t = time.time()
+        rows, hit = run_or_cache(
+            "fig4_convergence",
+            lambda: flb.bench_fig4_convergence(seeds=(0,) if args.quick else (0, 1)))
+        sp = [r["speedup"] for r in rows if r["speedup"]]
+        _line("fig4.convergence", round((time.time() - t) * 1e6),
+              (f"speedup={np.mean(sp):.1f}x" if sp else "no-target")
+              + (";cached" if hit else ""))
+
+        t = time.time()
+        rows, hit = run_or_cache(
+            "fig5_fairness",
+            lambda: flb.bench_fig5_fairness(
+                alphas=(0.2, 0.6) if args.quick else (0.2, 0.4, 0.6),
+                max_updates=150 if args.quick else 300))
+        _line("fig5.fairness", round((time.time() - t) * 1e6),
+              ";".join(f"a{r['alpha']}:high={r['high_end_pp']}%"
+                       for r in rows) + (";cached" if hit else ""))
+
+        t = time.time()
+        rows, hit = run_or_cache(
+            "table3_privacy",
+            lambda: flb.bench_table3_privacy(
+                sigmas=(0.5, 2.0) if args.quick else (0.5, 1.0, 2.0),
+                alphas=(0.2,) if args.quick else (0.2, 0.6),
+                max_updates=120 if args.quick else 240,
+                rounds=12 if args.quick else 25))
+        hi = [r for r in rows if r["device"] == "HW_T5"
+              and "async" in r["method"]]
+        lo = [r for r in rows if r["device"] == "HW_T1"
+              and "async" in r["method"]]
+        if hi and lo:
+            disp = np.mean([h["epsilon"] / max(l["epsilon"], 1e-9)
+                            for h, l in zip(hi, lo)])
+            _line("table3.privacy", round((time.time() - t) * 1e6),
+                  f"eps_disparity={disp:.1f}x" + (";cached" if hit else ""))
+
+        t = time.time()
+        rows, hit = run_or_cache(
+            "noniid_ablation",
+            lambda: flb.bench_noniid_ablation(
+                max_updates=120 if args.quick else 240))
+        _line("beyond.noniid", round((time.time() - t) * 1e6),
+              ";".join(f"{r['partition']}:gap={r['accuracy_gap']}"
+                       for r in rows) + (";cached" if hit else ""))
+
+        t = time.time()
+        rows, hit = run_or_cache(
+            "beyond_paper_tradeoffs",
+            lambda: flb.bench_beyond_paper(
+                max_updates=100 if args.quick else 240))
+        _line("beyond.tradeoffs", round((time.time() - t) * 1e6),
+              ";".join(f"{r['strategy']}:eps={r['max_eps']}"
+                       for r in rows) + (";cached" if hit else ""))
+
+    # roofline digest from whatever dry-run artifacts exist
+    try:
+        from benchmarks.roofline import analyze_all, write_table
+        rows = analyze_all()
+        ok = [r for r in rows if r.get("status") == "ok"]
+        if ok:
+            write_table(rows)
+            doms = {}
+            for r in ok:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+            _line("roofline.single_pod", None,
+                  f"pairs={len(ok)};dominant={doms}")
+    except Exception as e:  # noqa: BLE001
+        _line("roofline.single_pod", None, f"unavailable:{e}")
+
+    _line("total", round((time.time() - t0) * 1e6), "bench pass complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Render the paper-validation summary from results/bench/*.json
+(EXPERIMENTS.md §Paper-validation table).
+
+    PYTHONPATH=src:. python benchmarks/summarize.py
+"""
+import json
+import os
+
+import numpy as np
+
+BENCH = os.path.join(os.path.dirname(__file__), "../results/bench")
+
+
+def _load(name):
+    fn = os.path.join(BENCH, f"{name}.json")
+    return json.load(open(fn)) if os.path.exists(fn) else None
+
+
+def main():
+    out = []
+
+    fig4 = _load("fig4_convergence")
+    if fig4:
+        sp = [r["speedup"] for r in fig4
+              if r["speedup"] and r["strategy"] == "fedasync"]
+        sp_ns = [r["speedup"] for r in fig4
+                 if r["speedup"] and r["strategy"] == "fedasync_nostale"]
+        fl = [r["acc_fluctuation"] for r in fig4
+              if r["strategy"] == "fedasync"]
+        fl_ns = [r["acc_fluctuation"] for r in fig4
+                 if r["strategy"] == "fedasync_nostale"]
+        out.append(f"fig4: FedAsync speedup to target = "
+                   f"{np.mean(sp):.1f}x (paper: 9-10x)"
+                   + (f"; no-staleness variant {np.mean(sp_ns):.1f}x with "
+                      f"fluctuation {np.mean(fl_ns):.4f} vs "
+                      f"{np.mean(fl):.4f} staleness-aware"
+                      if sp_ns and fl and fl_ns else ""))
+
+    fig5 = _load("fig5_fairness")
+    if fig5:
+        for r in fig5:
+            out.append(
+                f"fig5 alpha={r['alpha']}: high-end PP={r['high_end_pp']}% "
+                f"(T1={r.get('pp_HW_T1')}%), Jain={r['jain_participation']}, "
+                f"acc gap={r['accuracy_gap']}"
+            )
+
+    t3 = _load("table3_privacy")
+    if t3:
+        for sigma in sorted({r["sigma"] for r in t3}):
+            asy = [r for r in t3 if r["sigma"] == sigma
+                   and "async" in r["method"]]
+            if not asy:
+                continue
+            hi = [r["epsilon"] for r in asy if r["device"] in
+                  ("HW_T4", "HW_T5")]
+            lo = [r["epsilon"] for r in asy if r["device"] in
+                  ("HW_T1", "HW_T2")]
+            acc_hi = [r["acc_loss_pct"] for r in asy if r["device"] in
+                      ("HW_T4", "HW_T5")]
+            acc_lo = [r["acc_loss_pct"] for r in asy if r["device"] in
+                      ("HW_T1", "HW_T2")]
+            avg = [r["epsilon"] for r in t3 if r["sigma"] == sigma
+                   and r["method"] == "fedavg"]
+            out.append(
+                f"table3 sigma={sigma}: eps high-end={np.mean(hi):.2f} "
+                f"low-end={np.mean(lo):.2f} "
+                f"(disparity {np.mean(hi)/max(np.mean(lo),1e-9):.1f}x); "
+                f"acc-loss low-end={np.mean(acc_lo):.1f}% "
+                f"vs high-end={np.mean(acc_hi):.1f}%; "
+                f"fedavg uniform eps={np.mean(avg):.2f}"
+            )
+
+    t2 = _load("table2_resources")
+    if t2:
+        d = {r["hw_type"]: r for r in t2}
+        out.append(
+            f"table2: cpu_user T1={d['HW_T1']['cpu_user_s']}s vs "
+            f"T5={d['HW_T5']['cpu_user_s']}s; RAM% T1="
+            f"{d['HW_T1']['ram_pct']} vs T5={d['HW_T5']['ram_pct']}; "
+            f"dropouts T1={d['HW_T1']['dropouts']} T2={d['HW_T2']['dropouts']}"
+        )
+
+    bp = _load("beyond_paper_tradeoffs")
+    if bp:
+        for r in bp:
+            out.append(
+                f"beyond: {r['strategy']}: t_target={r['time_to_target_s']} "
+                f"jain={r['jain_participation']} "
+                f"eps_disparity={r['privacy_disparity']}x "
+                f"max_eps={r['max_eps']}"
+            )
+
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

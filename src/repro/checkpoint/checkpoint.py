@@ -1,0 +1,74 @@
+"""Flat-npz checkpointing with step metadata and sharding-aware gather.
+
+Layout: <dir>/step_<N>.npz holding flattened leaves keyed by joined tree
+paths, plus a _meta json entry (step, strategy, per-client epsilon, etc.).
+On restore, arrays are reassembled into the template pytree and cast to
+the template's dtypes.  For sharded arrays the save path gathers to host
+(process 0) first — fine at simulation scale; a real deployment would
+swap in async per-shard writes behind the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(directory: str, step: int, tree, meta: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    flat["_meta"] = np.frombuffer(
+        json.dumps({"step": step, **(meta or {})}).encode(), dtype=np.uint8
+    )
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for fn in os.listdir(directory)
+        if (m := re.match(r"step_(\d+)\.npz$", fn))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template, step: Optional[int] = None):
+    """Returns (tree, meta).  ``template`` provides treedef + dtypes."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(os.path.join(directory, f"step_{step:08d}.npz"))
+    meta = json.loads(bytes(data["_meta"]).decode())
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out
+    )
+    return tree, meta

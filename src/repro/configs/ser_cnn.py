@@ -1,0 +1,5 @@
+"""The paper's own model: lightweight 1D CNN for Speech Emotion
+Recognition (paper Sec. 3.1), trained federated with DP-SGD."""
+from repro.models.ser_cnn import SERConfig
+
+CONFIG = SERConfig()

@@ -1,0 +1,143 @@
+"""Server-side aggregation strategies.
+
+Paper-faithful:
+  * :class:`FedAvg`    — Eq. (9): dataset-size-weighted average, barrier.
+  * :class:`FedAsync`  — Eq. (10)-(11): immediate merge with staleness-aware
+                         decay alpha_k = alpha / (1 + tau_k), optionally
+                         staleness-UNaware (alpha_k = alpha) to reproduce the
+                         paper's "without staleness control" Fig. 4 variant.
+
+Beyond-paper (paper Sec. 5 future directions, recorded separately in
+EXPERIMENTS.md):
+  * :class:`FedBuff`   — buffered async aggregation (Nguyen et al. [5]).
+  * :class:`AdaptiveAsync` — joint aggregation-privacy adaptation: the merge
+                         weight additionally shrinks with the client's
+                         cumulative privacy spend, throttling the high-end
+                         devices that dominate the update stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.pytree import tree_lin, tree_scale, tree_add, tree_zeros_like
+
+
+@dataclass
+class FedAvg:
+    """Synchronous, dataset-size weighted (Eq. 9)."""
+
+    name: str = "fedavg"
+    is_async: bool = False
+
+    def aggregate(self, global_params, updates):
+        """``updates`` = list of (params_k, n_k).  Returns new globals."""
+        total = float(sum(n for _, n in updates))
+        acc = None
+        for params_k, n_k in updates:
+            contrib = tree_scale(params_k, n_k / total)
+            acc = contrib if acc is None else tree_add(acc, contrib)
+        return acc
+
+
+@dataclass
+class FedAsync:
+    """Asynchronous with staleness-aware decay (Eq. 10-11)."""
+
+    alpha: float = 0.4
+    staleness_aware: bool = True
+    name: str = "fedasync"
+    is_async: bool = True
+
+    def mixing_weight(self, staleness: int) -> float:
+        if self.staleness_aware:
+            return self.alpha / (1.0 + float(staleness))
+        return self.alpha
+
+    def merge(self, global_params, client_params, staleness: int):
+        a_k = self.mixing_weight(staleness)
+        return tree_lin(global_params, client_params, 1.0 - a_k, a_k), a_k
+
+
+@dataclass
+class FedBuff:
+    """Buffered asynchronous aggregation (beyond-paper; Nguyen et al. [5]).
+
+    Buffers ``buffer_size`` staleness-weighted deltas, then applies their
+    weighted mean in one server step — a middle point between FedAvg's
+    barrier and FedAsync's immediate merge.
+    """
+
+    alpha: float = 0.4
+    buffer_size: int = 3
+    staleness_aware: bool = True
+    name: str = "fedbuff"
+    is_async: bool = True
+
+    _buffer: list = field(default_factory=list, repr=False)
+
+    def mixing_weight(self, staleness: int) -> float:
+        if self.staleness_aware:
+            return self.alpha / (1.0 + float(staleness))
+        return self.alpha
+
+    def offer(self, global_params, client_params, staleness: int):
+        """Returns (new_globals | None, applied: bool, weight)."""
+        w = self.mixing_weight(staleness)
+        self._buffer.append((client_params, w))
+        if len(self._buffer) < self.buffer_size:
+            return None, False, w
+        wsum = sum(w_ for _, w_ in self._buffer)
+        mix = None
+        for p, w_ in self._buffer:
+            c = tree_scale(p, w_ / wsum)
+            mix = c if mix is None else tree_add(mix, c)
+        # effective server step: move by the mean weight toward the mix
+        a = wsum / len(self._buffer)
+        new_globals = tree_lin(global_params, mix, 1.0 - a, a)
+        self._buffer = []
+        return new_globals, True, w
+
+
+@dataclass
+class AdaptiveAsync(FedAsync):
+    """Beyond-paper: joint aggregation-privacy adaptation (paper Sec. 5,
+    'Joint Aggregation-Privacy Adaptation').
+
+    The merge weight is additionally scaled by how much privacy budget the
+    client has left: w = alpha/(1+tau) * max(eps_floor, 1 - eps_k/eps_target).
+    High-end devices that have already spent most of their target budget
+    get throttled, flattening both the participation-influence skew and the
+    privacy-loss skew at a modest convergence cost (see EXPERIMENTS §Beyond).
+    """
+
+    eps_target: float = 8.0
+    eps_floor: float = 0.1
+    name: str = "adaptive_async"
+
+    def mixing_weight(self, staleness: int, eps_spent: float = 0.0) -> float:
+        base = super().mixing_weight(staleness)
+        budget_frac = max(self.eps_floor, 1.0 - eps_spent / self.eps_target)
+        return base * budget_frac
+
+    def merge(self, global_params, client_params, staleness: int, eps_spent: float = 0.0):
+        a_k = self.mixing_weight(staleness, eps_spent)
+        return tree_lin(global_params, client_params, 1.0 - a_k, a_k), a_k
+
+
+def make_strategy(name: str, **kw):
+    name = name.lower()
+    if name == "fedavg":
+        return FedAvg()
+    if name == "fedasync":
+        return FedAsync(**kw)
+    if name == "fedasync_nostale":
+        kw.pop("staleness_aware", None)
+        return FedAsync(staleness_aware=False, **kw)
+    if name == "fedbuff":
+        return FedBuff(**kw)
+    if name == "adaptive_async":
+        return AdaptiveAsync(**kw)
+    raise ValueError(f"unknown aggregation strategy: {name}")

@@ -1,0 +1,154 @@
+"""FL client: local DP-SGD training (paper Algorithm 1, client side).
+
+A client owns: a local dataset partition, a hardware tier (VirtualClock),
+an optimizer state, and a MomentsAccountant.  ``local_train`` runs E local
+epochs of per-example DP-SGD from the received global weights and returns
+the new local weights plus bookkeeping (virtual duration, privacy step
+count, train metrics).
+
+The jitted update step is shared across clients (same treedef/shapes), so
+simulation cost is 1 trace + K*steps executions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accountant import MomentsAccountant
+from repro.core.dp import DPConfig, dp_mean_gradient
+from repro.core.heterogeneity import DeviceProfile, VirtualClock
+from repro.optim.optimizers import Adam
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "dp_cfg", "opt", "use_kernel"))
+def _dp_sgd_step(params, opt_state, batch, key, *, loss_fn, dp_cfg, opt, use_kernel=False):
+    """One DP-SGD mini-batch step (Eq. 4-6 + Adam)."""
+    grad, aux = dp_mean_gradient(loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel)
+    new_params, new_opt_state = opt.update(grad, opt_state, params)
+    return new_params, new_opt_state, aux
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "opt"))
+def _sgd_step(params, opt_state, batch, *, loss_fn, opt):
+    """Non-private baseline step (sigma=0, no clipping)."""
+    loss, grad = jax.value_and_grad(
+        lambda p: jnp.mean(jax.vmap(lambda ex: loss_fn(p, ex))(batch))
+    )(params)
+    new_params, new_opt_state = opt.update(grad, opt_state, params)
+    return new_params, new_opt_state, loss
+
+
+@dataclass
+class Client:
+    cid: int
+    tier: str
+    profile: DeviceProfile
+    data: dict                      # {"x": (N,...), "y": (N,)} train split
+    test_data: dict                 # local test split
+    loss_fn: Callable               # loss_fn(params, example) -> scalar
+    dp_cfg: DPConfig
+    opt: Adam
+    batch_size: int = 128
+    local_epochs: int = 1
+    seed: int = 0
+    use_dp: bool = True
+    use_kernel: bool = False
+    # personalized FL (beyond-paper; paper Sec. 5 'Personalized FL with
+    # Privacy Guarantees'): these TOP-LEVEL param subtrees stay on-device —
+    # they are restored over the received globals before local training and
+    # are never sent back (the server's copy stays frozen), so low-end
+    # clients keep a usable local head even under strong noise/staleness
+    personal_keys: tuple = ()
+
+    clock: VirtualClock = field(init=False)
+    accountant: MomentsAccountant = field(init=False)
+    rng: np.random.Generator = field(init=False)
+    opt_state: object = field(init=False, default=None)
+    model_version: int = 0          # global version this client last pulled
+    update_count: int = 0
+    staleness_history: list = field(default_factory=list)
+    _personal: dict = field(init=False, default=None)
+
+    def __post_init__(self):
+        self.clock = VirtualClock(self.profile, seed=self.seed * 977 + self.cid)
+        self.accountant = MomentsAccountant()
+        self.rng = np.random.default_rng(self.seed * 131 + self.cid)
+
+    @property
+    def n_train(self) -> int:
+        return int(self.data["y"].shape[0])
+
+    @property
+    def q(self) -> float:
+        """Sampling ratio for the accountant (paper: q = B/|D_k| ~ 0.136)."""
+        return min(1.0, self.batch_size / self.n_train)
+
+    def local_train(self, global_params, key: jax.Array):
+        """Run E epochs of DP-SGD from ``global_params``.
+
+        Returns (new_params, info) with virtual ``duration`` drawn from the
+        hardware tier's clock and the number of accounted DP steps.
+        """
+        params = global_params
+        if self.personal_keys:
+            if self._personal is None:  # first round: adopt global init
+                self._personal = {k: global_params[k]
+                                  for k in self.personal_keys}
+            params = dict(global_params)
+            params.update(self._personal)
+        if self.opt_state is None:
+            self.opt_state = self.opt.init(params)
+        opt_state = self.opt_state
+
+        n = self.n_train
+        steps = 0
+        losses = []
+        for _ in range(self.local_epochs):
+            perm = self.rng.permutation(n)
+            for s in range(0, n - self.batch_size + 1, self.batch_size):
+                idx = perm[s : s + self.batch_size]
+                batch = {k: v[idx] for k, v in self.data.items()}
+                key, sub = jax.random.split(key)
+                if self.use_dp:
+                    params, opt_state, aux = _dp_sgd_step(
+                        params, opt_state, batch, sub,
+                        loss_fn=self.loss_fn, dp_cfg=self.dp_cfg, opt=self.opt,
+                        use_kernel=self.use_kernel,
+                    )
+                else:
+                    params, opt_state, loss = _sgd_step(
+                        params, opt_state, batch, loss_fn=self.loss_fn, opt=self.opt
+                    )
+                    losses.append(float(loss))
+                steps += 1
+
+        self.opt_state = opt_state
+        if self.use_dp and steps > 0:
+            self.accountant.step(self.q, self.dp_cfg.noise_multiplier, steps)
+        duration = self.clock.round_duration()
+        self.update_count += 1
+        info = {
+            "duration": duration,
+            "dp_steps": steps,
+            "epsilon": self.accountant.epsilon(1e-5) if self.use_dp else 0.0,
+        }
+        if self.personal_keys:
+            # keep the trained personal subtrees on-device; the uploaded
+            # model carries the UNTOUCHED global values for those keys
+            self._personal = {k: params[k] for k in self.personal_keys}
+            upload = dict(params)
+            for k in self.personal_keys:
+                upload[k] = global_params[k]
+            return upload, info
+        return params, info
+
+    def evaluate(self, params, accuracy_fn) -> float:
+        if self.personal_keys and self._personal is not None:
+            params = dict(params)
+            params.update(self._personal)
+        return float(accuracy_fn(params, self.test_data))

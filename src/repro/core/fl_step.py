@@ -1,0 +1,212 @@
+"""Distributed FL train step: the paper's technique (local DP-SGD + noisy
+weighted aggregation) as a single pjit-able SPMD program over the
+production mesh (DESIGN.md sec 6).
+
+One ``fl_train_step`` = one federated round:
+
+  1. **broadcast**: f32 ZeRO-sharded master params -> G bf16 per-client
+     replicas stacked on a leading client dim (sharded over the data/pod
+     axes -> all-gather of the model-sharded master);
+  2. **local phase**: each client group runs ``n_local`` local SGD steps;
+     each step scans ``n_micro`` gradient-accumulation microbatches and
+     clips each microbatch gradient to C (per-microbatch LDP granularity,
+     paper Eq. 4) before accumulating, then adds N(0, (sigma C / n_micro)^2)
+     once (Eq. 5) and applies the local update (Eq. 6);
+  3. **(optional) client-level DP**: the round delta is clipped + noised
+     instead (DP-FedAvg granularity, Geyer et al. [17]);
+  4. **aggregate**: staleness/fedavg weights w_g (an input vector, so the
+     same compiled step serves FedAvg, FedAsync and FedBuff semantics)
+     produce Delta = sum_g w_g delta_g / sum_g w_g — a weighted
+     reduce over the client axis lowering to reduce-scatter/all-reduce
+     into the master sharding;
+  5. **server update**: FedAdam (or SGD) on the f32 master.
+
+The per-client accountant step (paper Alg. 1 line 14-17) happens on the
+host: every client spent n_local * n_micro subsampled-Gaussian steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp import DPConfig, clip_tree
+from repro.optim.optimizers import Adam
+
+
+@dataclass(frozen=True)
+class FLStepConfig:
+    num_clients: int                  # G = product of data axes
+    n_local: int = 1                  # local SGD steps per round
+    n_micro: int = 2                  # grad-accum microbatches per local step
+    local_lr: float = 0.02
+    server_lr: float = 1e-3
+    dp: DPConfig = DPConfig(clip_norm=1.0, noise_multiplier=1.0,
+                            granularity="per_microbatch")
+    server_opt: str = "adam"          # adam (FedAdam) | sgd
+    compute_dtype: str = "bfloat16"
+
+
+def make_server_optimizer(fl: FLStepConfig):
+    if fl.server_opt == "adam":
+        return Adam(lr=fl.server_lr)
+    from repro.optim.optimizers import SGD
+    return SGD(lr=fl.server_lr)
+
+
+def make_fl_train_step(loss_fn: Callable, fl: FLStepConfig,
+                       client_shardings=None, master_shardings=None):
+    """loss_fn(params, batch) -> scalar mean loss, where every array in
+    ``batch`` has a leading per-client batch dim.
+
+    ``client_shardings``: optional pytree of NamedShardings for the
+    G-STACKED param tree (leading client dim over the data axes, tensor
+    dims over model).  Without it XLA keeps the broadcast-from-ZeRO-master
+    stacked params replicated over the client axis — i.e. every device
+    would redo all G clients' work.  The constraint is what turns the
+    broadcast into the intended all-gather + client partition.
+
+    Returns fl_train_step(master, opt_state, batch, weights, key)
+      master:    f32 param pytree (ZeRO-sharded under pjit)
+      batch:     global batch; leading dim = G * per_client_batch
+      weights:   (G,) aggregation weights (uniform p_k = FedAvg Eq. 9;
+                 staleness alpha/(1+tau) = FedAsync Eq. 10)
+      key:       PRNG key for the DP noise
+    """
+    G = fl.num_clients
+    server_opt = make_server_optimizer(fl)
+    cdtype = jnp.dtype(fl.compute_dtype)
+
+    def constrain_clients(tree):
+        if client_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, client_shardings)
+
+    def local_phase(client_params, client_batch, key):
+        """One client's n_local DP-SGD steps.  client_params: bf16 tree."""
+
+        def one_local_step(params, inp):
+            step_key, micro_batch = inp
+            # scan over microbatches: clip each microbatch grad (Eq. 4)
+            def micro(acc, mb):
+                g = jax.grad(lambda p: loss_fn(p, mb))(params)
+                if fl.dp.granularity == "per_microbatch":
+                    g, _ = clip_tree(g, fl.dp.clip_norm)
+                return jax.tree_util.tree_map(jnp.add, acc, g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            acc, _ = jax.lax.scan(micro, zeros, micro_batch)
+            mean_g = jax.tree_util.tree_map(lambda a: a / fl.n_micro, acc)
+            if (fl.dp.granularity == "per_microbatch"
+                    and fl.dp.noise_multiplier > 0):
+                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm / fl.n_micro
+                leaves, treedef = jax.tree_util.tree_flatten(mean_g)
+                keys = jax.random.split(step_key, len(leaves))
+                mean_g = jax.tree_util.tree_unflatten(
+                    treedef,
+                    [g + stddev * jax.random.normal(k, g.shape, jnp.float32)
+                     for k, g in zip(keys, leaves)],
+                )
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - fl.local_lr * g).astype(p.dtype),
+                params, mean_g,
+            )
+            return new, None
+
+        step_keys = jax.random.split(key, fl.n_local)
+        params, _ = jax.lax.scan(one_local_step, client_params,
+                                 (step_keys, client_batch))
+        return params
+
+    def fl_train_step(master, opt_state, batch, weights, key):
+        # 1. broadcast master -> stacked per-client replicas.  Convert to
+        # bf16 BEFORE the gather (pin the converted copy to the master's
+        # ZeRO sharding) so the data-axis all-gather moves half the bytes
+        # (EXPERIMENTS.md §Perf iteration 2a).
+        def to_compute(m, sh=None):
+            mc = m.astype(cdtype)
+            if sh is not None:
+                mc = jax.lax.with_sharding_constraint(mc, sh)
+            return mc
+
+        if master_shardings is not None:
+            master_c = jax.tree_util.tree_map(
+                to_compute, master, master_shardings)
+        else:
+            master_c = jax.tree_util.tree_map(to_compute, master)
+
+        def bcast(m):
+            return jnp.broadcast_to(m[None], (G,) + m.shape)
+
+        stacked = constrain_clients(jax.tree_util.tree_map(bcast, master_c))
+
+        # reshape global batch to (G, n_local, n_micro, per_micro, ...)
+        def split_batch(x):
+            per_client = x.shape[0] // G
+            per_micro = per_client // (fl.n_local * fl.n_micro)
+            return x.reshape((G, fl.n_local, fl.n_micro, per_micro)
+                             + x.shape[1:])
+
+        cbatch = jax.tree_util.tree_map(split_batch, batch)
+        keys = jax.random.split(key, G + 1)
+        client_keys, delta_key = keys[:G], keys[G]
+
+        # 2. per-client local phase (vmapped over the stacked client dim)
+        new_stacked = constrain_clients(
+            jax.vmap(local_phase)(stacked, cbatch, client_keys))
+
+        # 3. deltas (+ optional client-level DP)
+        deltas = jax.tree_util.tree_map(
+            lambda ns, s: (ns.astype(jnp.float32) - s.astype(jnp.float32)),
+            new_stacked, stacked,
+        )
+        if fl.dp.granularity == "client_level":
+            def clip_client(d):
+                # per-client global norms across ALL leaves
+                return d  # handled below jointly
+            sq = sum(
+                jnp.sum(jnp.square(l), axis=tuple(range(1, l.ndim)))
+                for l in jax.tree_util.tree_leaves(deltas)
+            )
+            norms = jnp.sqrt(sq)                               # (G,)
+            scales = 1.0 / jnp.maximum(1.0, norms / fl.dp.clip_norm)
+            deltas = jax.tree_util.tree_map(
+                lambda d: d * scales.reshape((G,) + (1,) * (d.ndim - 1)), deltas
+            )
+            if fl.dp.noise_multiplier > 0:
+                leaves, treedef = jax.tree_util.tree_flatten(deltas)
+                nkeys = jax.random.split(delta_key, len(leaves))
+                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm
+                deltas = jax.tree_util.tree_unflatten(
+                    treedef,
+                    [d + stddev * jax.random.normal(k, d.shape, jnp.float32)
+                     for k, d in zip(nkeys, leaves)],
+                )
+
+        # 4. weighted aggregation over the client axis (paper Eq. 9 / 10-11)
+        wsum = jnp.sum(weights)
+        wn = (weights / wsum).astype(jnp.float32)
+        agg = jax.tree_util.tree_map(
+            lambda d: jnp.tensordot(wn, d, axes=(0, 0)), deltas
+        )
+
+        # 5. server update: FedAdam treats -Delta as the gradient
+        neg = jax.tree_util.tree_map(jnp.negative, agg)
+        new_master, new_opt_state = server_opt.update(neg, opt_state, master)
+
+        metrics = {
+            "delta_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(agg)
+            )),
+            "weight_sum": wsum,
+        }
+        return new_master, new_opt_state, metrics
+
+    return fl_train_step

@@ -1,0 +1,211 @@
+"""FL server loops (paper Algorithm 1, server side) over a virtual clock.
+
+* :func:`run_fedavg`  — synchronous barrier rounds; round time is the MAX
+  over clients (the straggler effect emerges from the tier clocks).
+* :func:`run_async`   — event-driven loop: a priority queue of client
+  completion events; each completion is merged immediately (FedAsync) or
+  buffered (FedBuff).  Staleness tau_k = server_version - client_version.
+
+Both return a :class:`RunLog` with everything the paper's figures/tables
+need: accuracy-vs-virtual-time, per-client participation, staleness,
+epsilon trajectories, and resource samples.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import AdaptiveAsync, FedAsync, FedAvg, FedBuff
+from repro.core.client import Client
+from repro.core.fairness import fairness_report
+
+
+@dataclass
+class RunLog:
+    strategy: str
+    # time series (one entry per server event / round)
+    times: list = field(default_factory=list)
+    global_acc: list = field(default_factory=list)
+    server_version: list = field(default_factory=list)
+    # per client
+    update_counts: dict = field(default_factory=dict)
+    influence: dict = field(default_factory=dict)   # sum of applied merge weights
+    staleness: dict = field(default_factory=dict)
+    eps_trajectory: dict = field(default_factory=dict)
+    local_acc: dict = field(default_factory=dict)
+    resources: dict = field(default_factory=dict)
+    dropouts: dict = field(default_factory=dict)
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for t, a in zip(self.times, self.global_acc):
+            if a >= target:
+                return t
+        return None
+
+    def fairness(self) -> dict:
+        final_acc = {k: (v[-1] if v else 0.0) for k, v in self.local_acc.items()}
+        final_eps = {k: (v[-1] if v else 0.0) for k, v in self.eps_trajectory.items()}
+        rep = fairness_report(self.update_counts, final_acc, final_eps)
+        total_w = sum(self.influence.values())
+        if total_w > 0:
+            rep["influence_pct"] = {
+                k: 100.0 * v / total_w for k, v in self.influence.items()}
+        return rep
+
+
+def _eval_all(clients, params, accuracy_fn, log: RunLog):
+    for c in clients:
+        log.local_acc.setdefault(c.tier, []).append(c.evaluate(params, accuracy_fn))
+
+
+def run_fedavg(
+    clients: list,
+    global_params,
+    accuracy_fn: Callable,
+    test_data: dict,
+    rounds: int = 60,
+    seed: int = 0,
+    eval_every: int = 1,
+    target_acc: Optional[float] = None,
+) -> tuple:
+    """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog)."""
+    strat = FedAvg()
+    log = RunLog(strategy="fedavg")
+    key = jax.random.PRNGKey(seed)
+    t_virtual = 0.0
+    for c in clients:
+        log.update_counts[c.tier] = 0
+        log.staleness[c.tier] = []
+        log.eps_trajectory[c.tier] = []
+
+    for rnd in range(1, rounds + 1):
+        updates, durations = [], []
+        for c in clients:
+            key, sub = jax.random.split(key)
+            params_k, info = c.local_train(global_params, sub)
+            updates.append((params_k, c.n_train))
+            durations.append(info["duration"])
+            log.update_counts[c.tier] += 1
+            log.staleness[c.tier].append(0)  # barrier => no staleness
+            log.eps_trajectory[c.tier].append(info["epsilon"])
+        # straggler effect: the barrier waits for the slowest client
+        t_virtual += max(durations)
+        global_params = strat.aggregate(global_params, updates)
+
+        if rnd % eval_every == 0 or rnd == rounds:
+            acc = float(accuracy_fn(global_params, test_data))
+            log.times.append(t_virtual)
+            log.global_acc.append(acc)
+            log.server_version.append(rnd)
+            _eval_all(clients, global_params, accuracy_fn, log)
+            if target_acc is not None and acc >= target_acc:
+                break
+
+    for c in clients:
+        log.resources[c.tier] = c.clock.resource_sample()
+        log.dropouts[c.tier] = c.clock.dropouts
+    return global_params, log
+
+
+def run_async(
+    clients: list,
+    global_params,
+    accuracy_fn: Callable,
+    test_data: dict,
+    strategy,                      # FedAsync / FedBuff / AdaptiveAsync
+    max_updates: int = 300,
+    max_time: Optional[float] = None,
+    seed: int = 0,
+    eval_every: int = 5,
+    target_acc: Optional[float] = None,
+) -> tuple:
+    """Event-driven asynchronous FL (Eq. 10-11).
+
+    Every client trains continuously: as soon as its update is merged it
+    pulls the fresh globals and starts the next local round.  Completion
+    times come from each client's VirtualClock, so fast tiers complete
+    many rounds while slow tiers finish one (the paper's participation
+    skew emerges, it is not scripted).
+    """
+    log = RunLog(strategy=strategy.name)
+    key = jax.random.PRNGKey(seed)
+    for c in clients:
+        log.update_counts[c.tier] = 0
+        log.influence[c.tier] = 0.0
+        log.staleness[c.tier] = []
+        log.eps_trajectory[c.tier] = []
+
+    # Seed the event queue: every client starts training version 0 at t=0.
+    heap = []
+    pending = {}
+    for c in clients:
+        key, sub = jax.random.split(key)
+        params_k, info = c.local_train(global_params, sub)
+        c.model_version = 0
+        pending[c.cid] = (params_k, info)
+        heapq.heappush(heap, (info["duration"], c.cid))
+
+    server_version = 0
+    t_virtual = 0.0
+    done = False
+    while heap and not done:
+        t_virtual, cid = heapq.heappop(heap)
+        c = clients[cid]
+        params_k, info = pending.pop(cid)
+        tau = server_version - c.model_version
+        log.staleness[c.tier].append(tau)
+        log.update_counts[c.tier] += 1
+        log.eps_trajectory[c.tier].append(info["epsilon"])
+
+        if isinstance(strategy, FedBuff):
+            new_g, applied, _w = strategy.offer(global_params, params_k, tau)
+            if applied:
+                global_params = new_g
+                server_version += 1
+        elif isinstance(strategy, AdaptiveAsync):
+            global_params, _w = strategy.merge(
+                global_params, params_k, tau, eps_spent=info["epsilon"]
+            )
+            server_version += 1
+        else:  # FedAsync (staleness-aware or not)
+            global_params, _w = strategy.merge(global_params, params_k, tau)
+            server_version += 1
+        log.influence[c.tier] += float(_w)
+
+        total_updates = sum(log.update_counts.values())
+        if total_updates % eval_every == 0:
+            acc = float(accuracy_fn(global_params, test_data))
+            log.times.append(t_virtual)
+            log.global_acc.append(acc)
+            log.server_version.append(server_version)
+            _eval_all(clients, global_params, accuracy_fn, log)
+            if target_acc is not None and acc >= target_acc:
+                done = True
+
+        if total_updates >= max_updates or (max_time and t_virtual >= max_time):
+            done = True
+
+        # joint aggregation-privacy adaptation (beyond-paper, paper Sec. 5):
+        # a client that has exhausted its privacy budget STOPS training —
+        # down-weighting alone does not cap eps, it only slows convergence
+        # while exposure keeps accruing (see EXPERIMENTS.md §Beyond)
+        budget_exhausted = (
+            isinstance(strategy, AdaptiveAsync)
+            and info["epsilon"] >= strategy.eps_target
+        )
+        if not done and not budget_exhausted:
+            # client immediately pulls fresh globals and trains again
+            key, sub = jax.random.split(key)
+            new_params_k, new_info = c.local_train(global_params, sub)
+            c.model_version = server_version
+            pending[cid] = (new_params_k, new_info)
+            heapq.heappush(heap, (t_virtual + new_info["duration"], cid))
+
+    for c in clients:
+        log.resources[c.tier] = c.clock.resource_sample()
+        log.dropouts[c.tier] = c.clock.dropouts
+    return global_params, log

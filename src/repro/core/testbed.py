@@ -1,0 +1,125 @@
+"""Wires the full paper testbed: synthetic CREMA-D + 5 heterogeneous
+clients (HW_T1..T5) + SER CNN + DP-SGD + server loops.
+
+This is the entry point the benchmarks and examples use; every paper
+figure/table is a function of (strategy, alpha, sigma, rounds, seed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import make_strategy
+from repro.core.client import Client
+from repro.core.dp import DPConfig
+from repro.core.heterogeneity import PROFILES, TIERS
+from repro.core.server import run_async, run_fedavg
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic_ser import SERDataConfig, generate, train_test_split
+from repro.models import ser_cnn
+from repro.optim.optimizers import Adam
+
+
+@dataclass(frozen=True)
+class TestbedConfig:
+    num_clients: int = 5
+    batch_size: int = 128          # paper: B = 128
+    local_epochs: int = 1          # paper: E = 1
+    lr: float = 1e-3               # paper: Adam 1e-3
+    clip_norm: float = 1.0         # paper: C = 1
+    sigma: float = 1.0             # paper sweeps {0.5, 1, 1.5, 2}
+    use_dp: bool = True
+    use_kernel: bool = False       # route clipping through the Pallas kernel
+    personalized: bool = False     # per-client local output head (beyond-paper)
+    partition: str = "iid"         # iid (paper) | dirichlet (beyond-paper)
+    dirichlet_alpha: float = 0.5
+    seed: int = 0
+    data: SERDataConfig = SERDataConfig()
+    model: ser_cnn.SERConfig = ser_cnn.SERConfig()
+
+
+def build_testbed(cfg: TestbedConfig):
+    """Returns (clients, global_params, accuracy_fn, pooled_test)."""
+    raw = generate(cfg.data)
+    if cfg.partition == "dirichlet":
+        parts = dirichlet_partition(raw, cfg.num_clients,
+                                    alpha=cfg.dirichlet_alpha, seed=cfg.seed)
+    else:
+        parts = iid_partition(raw, cfg.num_clients, seed=cfg.seed)
+
+    loss = partial(ser_cnn.loss_fn, cfg=cfg.model)
+    acc_fn = ser_cnn.make_accuracy_fn(cfg.model)
+    opt = Adam(lr=cfg.lr)
+    dp_cfg = DPConfig(
+        clip_norm=cfg.clip_norm,
+        noise_multiplier=cfg.sigma if cfg.use_dp else 0.0,
+        granularity="per_example",
+    )
+
+    clients, test_pool = [], []
+    for cid, (tier, part) in enumerate(zip(TIERS, parts)):
+        tr, te = train_test_split(part, test_frac=0.2, seed=cfg.seed + cid)
+        tr = {k: v for k, v in tr.items() if k != "speaker"}
+        te = {k: v for k, v in te.items() if k != "speaker"}
+        clients.append(
+            Client(
+                cid=cid,
+                tier=tier,
+                profile=PROFILES[tier],
+                data=tr,
+                test_data=te,
+                loss_fn=loss,
+                dp_cfg=dp_cfg,
+                opt=opt,
+                batch_size=cfg.batch_size,
+                local_epochs=cfg.local_epochs,
+                seed=cfg.seed,
+                use_dp=cfg.use_dp,
+                use_kernel=cfg.use_kernel,
+                personal_keys=("out",) if cfg.personalized else (),
+            )
+        )
+        test_pool.append(te)
+
+    pooled_test = {
+        k: np.concatenate([t[k] for t in test_pool]) for k in test_pool[0]
+    }
+    params = ser_cnn.init(jax.random.PRNGKey(cfg.seed), cfg.model)
+    return clients, params, acc_fn, pooled_test
+
+
+def run_experiment(
+    strategy_name: str,
+    cfg: TestbedConfig = TestbedConfig(),
+    rounds: int = 60,
+    max_updates: int = 300,
+    alpha: float = 0.4,
+    staleness_aware: bool = True,
+    target_acc: Optional[float] = None,
+    eval_every: int = 1,
+    **strategy_kw,
+):
+    """One full FL run; returns (params, RunLog)."""
+    clients, params, acc_fn, pooled_test = build_testbed(cfg)
+    if strategy_name == "fedavg":
+        return run_fedavg(
+            clients, params, acc_fn, pooled_test,
+            rounds=rounds, seed=cfg.seed, target_acc=target_acc,
+            eval_every=eval_every,
+        )
+    if strategy_name in ("fedasync", "fedasync_nostale", "fedbuff", "adaptive_async"):
+        kw = dict(alpha=alpha)
+        if strategy_name == "fedasync":
+            kw["staleness_aware"] = staleness_aware
+        kw.update(strategy_kw)
+        strat = make_strategy(strategy_name, **kw)
+        return run_async(
+            clients, params, acc_fn, pooled_test, strat,
+            max_updates=max_updates, seed=cfg.seed, target_acc=target_acc,
+            eval_every=max(1, eval_every),
+        )
+    raise ValueError(strategy_name)

@@ -1,0 +1,11 @@
+"""Shared kernel plumbing: interpret-mode selection.
+
+Kernels TARGET TPU (pl.pallas_call + BlockSpec VMEM tiling); on this
+CPU-only container they are validated in interpret=True mode, which
+executes the kernel body in Python for correctness (assignment: 'VALIDATE
+them in interpret=True mode').
+"""
+import jax
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,88 @@
+"""Fused per-sample gradient clip + accumulate — the DP-SGD hot spot
+(what Opacus spends its time on), as two tiled Pallas TPU kernels.
+
+TPU adaptation (DESIGN.md sec 3): instead of Opacus' hook-based per-layer
+GPU pass, the flattened per-example grad matrix (B, D) is swept twice with
+MXU/VPU-aligned VMEM tiles:
+
+  pass 1 (sqnorm):  grid (nB, nD); each step reduces a (TB, TD) tile to a
+                    (TB,) partial sum accumulated into the (B,) norms.
+  pass 2 (scale+mean): grid (nD, nB); each step loads a (TB, TD) tile,
+                    multiplies by the per-sample scale min(1, C/||g_i||)
+                    broadcast from a (TB,) slice, and accumulates the
+                    batch-mean into the (TD,) output.
+
+Tiles default to (128, 512) f32 = 256 KiB live VMEM per step — far under
+the ~16 MiB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TB = 128
+DEFAULT_TD = 512
+
+
+def _sqnorm_kernel(flat_ref, out_ref):
+    """grid (nB, nD): accumulate per-sample squared norms."""
+    j = pl.program_id(1)
+    tile = flat_ref[...].astype(jnp.float32)          # (TB, TD)
+    partial = jnp.sum(tile * tile, axis=1)            # (TB,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def _scale_mean_kernel(flat_ref, scale_ref, out_ref, *, inv_b: float):
+    """grid (nD, nB): out[d] += sum_b scale[b] * flat[b, d] * (1/B)."""
+    i = pl.program_id(1)
+    tile = flat_ref[...].astype(jnp.float32)          # (TB, TD)
+    scales = scale_ref[...]                           # (TB,)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(tile * scales[:, None], axis=0) * inv_b
+
+
+def sqnorms(flat, *, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
+            interpret: bool = True):
+    B, D = flat.shape
+    tb, td = min(tb, B), min(td, D)
+    grid = (pl.cdiv(B, tb), pl.cdiv(D, td))
+    return pl.pallas_call(
+        _sqnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, td), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(flat)
+
+
+def scale_mean(flat, scales, *, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
+               interpret: bool = True):
+    B, D = flat.shape
+    tb, td = min(tb, B), min(td, D)
+    grid = (pl.cdiv(D, td), pl.cdiv(B, tb))
+    kern = functools.partial(_scale_mean_kernel, inv_b=1.0 / B)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, td), lambda j, i: (i, j)),
+            pl.BlockSpec((tb,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((td,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(flat, scales)

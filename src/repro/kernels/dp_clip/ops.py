@@ -1,0 +1,42 @@
+"""jit'd wrapper around the fused DP clip kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_mode
+from repro.kernels.dp_clip.dp_clip import scale_mean, sqnorms
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("clip_norm",))
+def dp_clip_mean_flat(flat, clip_norm: float):
+    """flat: (B, D) per-example grads -> (mean_clipped (D,), mean_norm,
+    clip_fraction).  Two-pass fused kernel (see dp_clip.py).
+
+    Inputs are zero-padded to tile multiples: padded rows have norm 0 and
+    scale 1 so they contribute nothing; the batch mean uses the REAL B.
+    """
+    B, D = flat.shape
+    interp = interpret_mode()
+    tb = min(128, B) if B % min(128, B) == 0 else 128
+    td = min(512, D) if D % min(512, D) == 0 else 512
+    fp = _pad_to(_pad_to(flat, tb, 0), td, 1)
+    sq = sqnorms(fp, tb=tb, td=td, interpret=interp)
+    norms = jnp.sqrt(sq)                                    # (B_pad,)
+    scales = 1.0 / jnp.maximum(1.0, norms / clip_norm)
+    # the kernel's inv_b must be 1/B_real: rescale the padded-B mean
+    mean = scale_mean(fp, scales, tb=tb, td=td, interpret=interp)
+    mean = mean[:D] * (fp.shape[0] / B)
+    norms = norms[:B]
+    return mean, jnp.mean(norms), jnp.mean((norms > clip_norm).astype(jnp.float32))

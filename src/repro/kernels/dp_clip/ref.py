@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused DP clip kernel."""
+import jax.numpy as jnp
+
+
+def dp_clip_mean_flat_ref(flat, clip_norm: float):
+    """flat: (B, D) per-example grads.  Returns (mean_clipped (D,),
+    mean_pre_norm, clip_fraction) — paper Eq. 4 then the 1/|b| average."""
+    norms = jnp.sqrt(jnp.sum(jnp.square(flat.astype(jnp.float32)), axis=1))
+    scales = 1.0 / jnp.maximum(1.0, norms / clip_norm)
+    mean = jnp.mean(flat * scales[:, None], axis=0)
+    return mean, jnp.mean(norms), jnp.mean((norms > clip_norm).astype(jnp.float32))

@@ -1,0 +1,100 @@
+"""Sliding-window flash-attention DECODE kernel (one query token against a
+long KV cache) — the long_500k hot loop.
+
+TPU adaptation: the KV cache is swept in (TS, Dh) VMEM tiles with the
+classic online-softmax recurrence (running max m, denominator l, rescaled
+accumulator in the output block).  GQA is handled in the BlockSpec index
+map (kv head = q head // rep), so repeated KV heads are never materialized
+— on a real TPU this kernel is HBM-bandwidth-bound and the tile sweep is
+what the roofline's memory term prices.
+
+Grid: (B, H, nS).  Per-step live VMEM at defaults (TS=512, Dh<=256):
+    k/v tiles 2*512*256*4B = 1 MiB + scratch — comfortably under budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TS = 512
+
+
+def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                         *, ts: int, scale: float, window: int,
+                         softcap: float):
+    s_idx = pl.program_id(2)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (Dh,)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (TS, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)                # (TS, Dh)
+    pos = pos_ref[0]
+
+    logits = jnp.sum(k * q[None, :], axis=1) * scale      # (TS,)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    kv_pos = s_idx * ts + jax.lax.iota(jnp.int32, ts)
+    eff_w = window if window > 0 else (1 << 30)
+    mask = (kv_pos <= pos) & (kv_pos > pos - eff_w)
+    logits = jnp.where(mask, logits, -1e30)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    p = jnp.exp(logits - m_new)                           # (TS,)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p)
+    acc = o_ref[0, 0].astype(jnp.float32) * corr + jnp.sum(
+        p[:, None] * v, axis=0)
+    m_ref[0], l_ref[0] = m_new, l_new
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, pos, *, window: int = 0, softcap: float = 0.0,
+                 ts: int = DEFAULT_TS, interpret: bool = True):
+    """q: (B, H, Dh); k/v: (B, S, Hkv, Dh); pos: (B,) -> (B, H, Dh)."""
+    B, S, Hkv, Dh = k.shape
+    H = q.shape[1]
+    rep = H // Hkv
+    ts = min(ts, S)
+    grid = (B, H, pl.cdiv(S, ts))
+    scale = Dh ** -0.5
+
+    kern = functools.partial(
+        _flash_decode_kernel, ts=ts, scale=scale, window=window,
+        softcap=softcap,
+    )
+    # NOTE: pallas_call maps outputs in KERNEL-SIGNATURE order — the
+    # kernel declares (..., o_ref, m_ref, l_ref), so the second output is
+    # the running max m and the third is the denominator l
+    acc, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),                 # pos
+            pl.BlockSpec((1, 1, Dh), lambda b, h, s: (b, h, 0)),      # q
+            pl.BlockSpec((1, ts, 1, Dh), lambda b, h, s: (b, s, h // rep, 0)),
+            pl.BlockSpec((1, ts, 1, Dh), lambda b, h, s: (b, s, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Dh), lambda b, h, s: (b, h, 0)),      # acc
+            pl.BlockSpec((1,), lambda b, h, s: (b * H + h,)),         # l
+            pl.BlockSpec((1,), lambda b, h, s: (b * H + h,)),         # m
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B * H,), jnp.float32),
+            jax.ShapeDtypeStruct((B * H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)
+    return (acc.astype(jnp.float32)
+            / jnp.maximum(l.reshape(B, H, 1), 1e-30)).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the sliding-window flash decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.common import interpret_mode
+from repro.kernels.flash_attn.flash_attn import flash_decode as _raw
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "ts"))
+def flash_decode(q, k, v, pos, *, window: int = 0, softcap: float = 0.0,
+                 ts: int = 512):
+    return _raw(q, k, v, pos, window=window, softcap=softcap, ts=ts,
+                interpret=interpret_mode())

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash decode kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k, v, pos, *, window: int = 0, softcap: float = 0.0):
+    """q: (B, H, Dh); k/v: (B, S, Hkv, Dh); pos: (B,).  GQA via H % Hkv == 0.
+    Returns (B, H, Dh) attention output over cache entries <= pos (and
+    within the sliding window when window > 0)."""
+    B, S, Hkv, Dh = k.shape
+    H = q.shape[1]
+    rep = H // Hkv
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    logits = jnp.einsum("bhd,bshd->bhs", q, kk).astype(jnp.float32) * (Dh ** -0.5)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    idx = jnp.arange(S)[None, None, :]
+    cur = pos[:, None, None]
+    eff_w = window if window > 0 else S + 1
+    mask = (idx <= cur) & (idx > cur - eff_w)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, vv).astype(q.dtype)

@@ -1,0 +1,12 @@
+"""jit'd wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_mode
+from repro.kernels.ssd_scan.ssd_scan import ssd_intra_chunk as _raw
+
+
+@jax.jit
+def ssd_intra_chunk(xr, ar, Br, Cr):
+    return _raw(xr, ar, Br, Cr, interpret=interpret_mode())

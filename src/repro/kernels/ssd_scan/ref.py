@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+from repro.models.mamba2 import _segsum
+
+
+def ssd_intra_chunk_ref(xr, ar, Br, Cr):
+    """xr: (b,c,q,h,p); ar: (b,h,c,q); Br/Cr: (b,c,q,n).
+    Y_diag[b,c,q,h,p] = sum_k C_q.B_k * exp(segsum(a))[q,k] * x_k  (causal)."""
+    Lm = jnp.exp(_segsum(ar))                          # (b,h,c,q,k)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)     # (b,c,q,k)
+    return jnp.einsum("bcqk,bhcqk,bckhp->bcqhp", scores, Lm, xr)

@@ -1,0 +1,57 @@
+"""Mamba2 SSD intra-chunk Pallas kernel (the quadratic-in-chunk hot loop).
+
+TPU adaptation of the Triton SSD kernel (Dao & Gu 2024): one grid step
+owns a (chunk q x chunk q) score tile for one (batch, chunk, head) —
+computed as C @ B^T on the MXU — masks it with the causal decay matrix
+L = exp(segsum(a_h)) built in-register from a cumulative sum, and applies
+it to the head's (q, p) input block, again on the MXU.
+
+VMEM per step at (q=128, n=64, p=64) f32:
+  B,C tiles 2*128*64*4 = 64 KiB; x/y 2*128*64*4 = 64 KiB; scores/L
+  2*128*128*4 = 128 KiB — trivially resident, fully double-bufferable.
+
+Grid: (b, c, h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(x_ref, a_ref, b_ref, c_ref, y_ref):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)          # (q, p)
+    a = a_ref[0, 0, 0].astype(jnp.float32)             # (q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)               # (q, n)
+    Cm = c_ref[0, 0].astype(jnp.float32)               # (q, n)
+    q = a.shape[0]
+
+    cs = jnp.cumsum(a)
+    seg = cs[:, None] - cs[None, :]                    # (q, q)
+    causal = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    Lm = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    y = jnp.dot(scores * Lm, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_intra_chunk(xr, ar, Br, Cr, *, interpret: bool = True):
+    """xr: (b,c,q,h,p); ar: (b,h,c,q); Br/Cr: (b,c,q,n) -> (b,c,q,h,p)."""
+    b, c, q, h, p = xr.shape
+    n = Br.shape[-1]
+    grid = (b, c, h)
+    return pl.pallas_call(
+        _ssd_intra_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bi, ci, hi: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        interpret=interpret,
+    )(xr, ar, Br, Cr)

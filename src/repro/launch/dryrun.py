@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with ShapeDtypeStruct inputs (no allocation), and extract the
+roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single            # one combination
+  PYTHONPATH=src python -m repro.launch.dryrun --all  # the full matrix
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json:
+  memory_analysis (bytes/device), cost_analysis (flops/bytes),
+  per-collective byte totals parsed from the optimized HLO.
+
+NOTE the two lines at the very top: they MUST run before any jax import
+(jax locks the device count at first init), and must NOT leak into
+conftest/pyproject — smoke tests and benches see the real single device.
+"""
+import argparse
+import gzip
+import json
+import re
+import sys
+import time
+from functools import partial
+
+# the HLO walker lives with the roofline benchmarks (repo root)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../../.."))
+from benchmarks.hlo_analysis import analyze as hlo_analyze  # noqa: E402
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, LONG_CONTEXT_ARCHS, get_config
+from repro.core.dp import DPConfig
+from repro.core.fl_step import FLStepConfig, make_fl_train_step, make_server_optimizer
+from repro.models import layers as Lyr
+from repro.models.base import INPUT_SHAPES, get_family, input_specs
+from repro.launch.mesh import (
+    data_axes, make_production_mesh, num_client_groups,
+)
+from repro.launch.shardings import (
+    batch_spec, cache_shardings, tree_shardings,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _op_output_bytes(line: str) -> int:
+    """Sum the byte size of the op's output shape(s) (before the '=')."""
+    lhs = line.split("=", 1)[0]
+    total = 0
+    for m in _SHAPE_RE.finditer(lhs):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals (output-shape bytes, summed over
+    static op occurrences; ops inside while loops are counted once per
+    occurrence — a conservative per-step lower bound)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for kind in _COLLECTIVES:
+            # match op name: "%all-gather.3 = ..." or "all-gather(" form
+            if re.search(rf"= {kind}", s) or re.search(rf"= \S*{kind}", s):
+                if f"{kind}-start" in s or f"{kind}-done" in s:
+                    # async pair: count the start only
+                    if f"{kind}-done" in s:
+                        break
+                out[kind] += _op_output_bytes(s)
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def _sds_tree(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+def build_train(arch_id, cfg, shape, mesh, n_micro=4,
+                dp_granularity="per_microbatch", client_placement="tp"):
+    fam = get_family(cfg.family)
+    G = num_client_groups(mesh)
+    if client_placement == "dp":
+        # pure-DP: one client per chip; no tensor parallelism inside the
+        # local phase (params replicated per client) — §Perf iteration 5
+        import numpy as _np
+        G = int(_np.prod(list(mesh.shape.values())))
+    fl = FLStepConfig(
+        num_clients=G, n_local=1, n_micro=n_micro,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=1.0,
+                    granularity=dp_granularity),
+    )
+    loss_fn = lambda p, b: fam.loss(p, b, cfg)
+    server_opt = make_server_optimizer(fl)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = _sds_tree(lambda: fam.init_params(key, cfg))
+    stacked_sds = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((G,) + l.shape, l.dtype), params_sds)
+    crole = "client_all_axes" if client_placement == "dp" else "client"
+    client_sh = tree_shardings(stacked_sds, cfg, mesh, role=crole)
+    master_sh_c = tree_shardings(params_sds, cfg, mesh, role="master")
+    step = make_fl_train_step(loss_fn, fl, client_shardings=client_sh,
+                              master_shardings=master_sh_c)
+    # master params are f32
+    params_sds = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), params_sds)
+    opt_sds = _sds_tree(lambda: server_opt.init(params_sds))
+    batch_sds = input_specs(cfg, shape)
+    weights_sds = jax.ShapeDtypeStruct((G,), jnp.float32)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    master_sh = tree_shardings(params_sds, cfg, mesh, role="master")
+    opt_sh = _sds_tree(lambda: server_opt.init(params_sds))
+    opt_sh = jax.tree_util.tree_map(
+        lambda l: (NamedSharding(mesh, P()) if l.ndim == 0
+                   else tree_shardings(l, cfg, mesh, role="master")),
+        opt_sds,
+        is_leaf=lambda l: hasattr(l, "shape"),
+    )
+    if client_placement == "dp":
+        from repro.launch.mesh import data_axes as _da
+        all_ax = tuple(_da(mesh)) + ("model",)
+        bspec = {k: NamedSharding(mesh, P(all_ax, *([None] * (v.ndim - 1))))
+                 for k, v in batch_sds.items()}
+    else:
+        bspec = {k: NamedSharding(mesh, batch_spec(mesh, v.ndim - 1))
+                 for k, v in batch_sds.items()}
+    repl = NamedSharding(mesh, P())
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(master_sh, opt_sh, bspec, repl, repl),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_sds, opt_sds, batch_sds, weights_sds, key_sds)
+
+
+def build_prefill(arch_id, cfg, shape, mesh):
+    fam = get_family(cfg.family)
+    B, S = shape.global_batch, shape.seq_len
+
+    def step(params, batch):
+        cache = fam.init_cache(cfg, B, S)
+        return fam.prefill(params, batch, cfg, cache)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = _sds_tree(lambda: fam.init_params(key, cfg))
+    batch_sds = input_specs(cfg, shape)
+    params_sh = tree_shardings(params_sds, cfg, mesh, role="serve")
+    bspec = {k: NamedSharding(mesh, batch_spec(mesh, v.ndim - 1))
+             for k, v in batch_sds.items()}
+    jitted = jax.jit(step, in_shardings=(params_sh, bspec))
+    return jitted, (params_sds, batch_sds)
+
+
+def build_decode(arch_id, cfg, shape, mesh):
+    fam = get_family(cfg.family)
+    B, S = shape.global_batch, shape.seq_len
+
+    def step(params, cache, token, pos):
+        return fam.decode_step(params, cache, token, pos, cfg)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = _sds_tree(lambda: fam.init_params(key, cfg))
+    cache_sds = _sds_tree(lambda: fam.init_cache(cfg, B, S))
+    specs = input_specs(cfg, shape)
+    token_sds, pos_sds = specs["token"], specs["pos"]
+
+    params_sh = tree_shardings(params_sds, cfg, mesh, role="serve")
+    cache_sh = cache_shardings(cache_sds, cfg, mesh, batch_size=B)
+    daxes = data_axes(mesh)
+    d_ax = daxes if len(daxes) > 1 else daxes[0]
+    data_size = int(np.prod([mesh.shape[a] for a in daxes]))
+    tok_sh = NamedSharding(mesh, P(d_ax, None) if B % data_size == 0 else P())
+    pos_sh = NamedSharding(mesh, P(d_ax) if B % data_size == 0 else P())
+    jitted = jax.jit(
+        step, in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, cache_sds, token_sds, pos_sds)
+
+
+def applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True
+
+
+def run_one(arch_id: str, shape_name: str, mesh_kind: str,
+            n_micro: int = 4, tag: str = "", attn_shard: str = "even",
+            expert_pad: int = 0, remat_policy: str = "",
+            train_batch_constraints: bool = True,
+            client_placement: str = "tp") -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = get_config(arch_id, long_variant=(shape_name == "long_500k"))
+    # hillclimb knobs (EXPERIMENTS.md §Perf)
+    from repro.launch.shardings import set_sharding_options
+    from repro.models.transformer import set_remat_policy
+    set_sharding_options(attn_shard=attn_shard)
+    set_remat_policy(remat_policy or None)
+    if expert_pad and cfg.n_experts:
+        cfg = cfg.replace(expert_pad=expert_pad)
+    d_ax = (data_axes(mesh) if len(data_axes(mesh)) > 1
+            else data_axes(mesh)[0])
+    if shape.kind == "train" and not train_batch_constraints:
+        # inside the per-client vmap a batch constraint pins the tiny
+        # per-client microbatch dim to the data axes -> forced replication
+        d_ax = None
+    # NOTE (§Perf iteration 2b, REFUTED): constraining q/k/v on the
+    # head_dim axis to "match" Dh-sharded params makes the scores einsum
+    # contract over a sharded dim -> an all-reduce of the (B,H,S,S)
+    # score tensor per layer (457s collective on deepseek).  The padded
+    # HEADS constraint is strictly better; keep it unconditionally.
+    Lyr.set_mesh_context(
+        mesh, d_ax, "model",
+        attn_axis=("none" if (shape.kind == "train"
+                              and client_placement == "dp") else "heads"))
+    t0 = time.time()
+    try:
+        with jax.sharding.set_mesh(mesh):
+            if shape.kind == "train":
+                jitted, sds = build_train(arch_id, cfg, shape, mesh,
+                                          n_micro=n_micro,
+                                          client_placement=client_placement)
+            elif shape.kind == "prefill":
+                jitted, sds = build_prefill(arch_id, cfg, shape, mesh)
+            else:
+                jitted, sds = build_decode(arch_id, cfg, shape, mesh)
+            lowered = jitted.lower(*sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            # trip-count-aware walker (collectives + dot flops); the naive
+            # line parser stays as a cross-check column
+            try:
+                walk = hlo_analyze(hlo)
+            except Exception as e:  # noqa: BLE001
+                walk = {"error": str(e)[:500]}
+            coll = collective_bytes(hlo)
+            hlo_dir = os.path.join(RESULTS_DIR, "../hlo")
+            os.makedirs(hlo_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    hlo_dir, f"{arch_id}__{shape_name}__{mesh_kind}"
+                    f"{'__' + tag if tag else ''}.txt.gz"), "wt") as f:
+                f.write(hlo)
+        result = {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+            "status": "ok", "tag": tag,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            "cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "bytes accessed0{}",
+                      "bytes accessed1{}", "bytes accessedout{}")
+                     if k in cost} if isinstance(cost, dict) else str(cost),
+            "collectives": coll,
+            "walk": walk,
+            "hlo_ops": len(hlo.splitlines()),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure and move on
+        result = {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+            "status": "error", "tag": tag,
+            "error": f"{type(e).__name__}: {str(e)[:2000]}",
+            "elapsed_s": round(time.time() - t0, 1),
+        }
+    finally:
+        Lyr.clear_mesh_context()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multipod"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos with an existing ok result")
+    ap.add_argument("--n-micro", type=int, default=4)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--attn-shard", choices=("even", "heads_padded"),
+                    default="even")
+    ap.add_argument("--expert-pad", type=int, default=0)
+    ap.add_argument("--remat-policy", choices=("", "dots"), default="")
+    ap.add_argument("--no-batch-constraints", action="store_true")
+    ap.add_argument("--client-placement", choices=("tp", "dp"), default="tp")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    combos = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shp in INPUT_SHAPES:
+                if applicable(arch, shp):
+                    combos.append((arch, shp, "single"))
+                    combos.append((arch, shp, "multipod"))
+    else:
+        combos = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shp, mk in combos:
+        suffix = f"__{args.tag}" if args.tag else ""
+        fn = os.path.join(RESULTS_DIR, f"{arch}__{shp}__{mk}{suffix}.json")
+        if args.resume and os.path.exists(fn):
+            with open(fn) as f:
+                prev = json.load(f)
+            if prev.get("status") == "ok" and "walk" in prev:
+                print(f"[dryrun] {arch} x {shp} x {mk}: skip (done)", flush=True)
+                continue
+        res = run_one(arch, shp, mk, n_micro=args.n_micro, tag=args.tag,
+                      attn_shard=args.attn_shard, expert_pad=args.expert_pad,
+                      remat_policy=args.remat_policy,
+                      train_batch_constraints=not args.no_batch_constraints,
+                      client_placement=args.client_placement)
+        with open(fn, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = (f"compile={res.get('compile_s')}s" if status == "ok"
+                 else res["error"][:120])
+        print(f"[dryrun] {arch} x {shp} x {mk}: {status} {extra}", flush=True)
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

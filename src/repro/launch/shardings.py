@@ -1,0 +1,190 @@
+"""Parameter / activation sharding rules, by dimension-size matching.
+
+Rather than brittle path-name matching, each leaf's PartitionSpec is
+derived from its SHAPE against the architecture config:
+
+  * the last dim (searching right-to-left) whose size matches a
+    "model-parallel candidate" (experts, vocab, d_ff, d_expert, d_inner,
+    heads, kv-heads, head_dim) AND divides evenly by the model-axis size
+    is sharded over ``model``;
+  * for the f32 master params / server-optimizer state (role="master"),
+    the first remaining dim matching d_model that divides by the data-axis
+    product is sharded over the data axes (ZeRO-style — every assigned
+    arch has d_model divisible by 32);
+  * for G-stacked per-client tensors (role="client"), the LEADING client
+    dim is sharded over the data axes (each client group holds only its
+    own replica) and d_model dims stay unsharded.
+
+Evenly-divisible dims are strictly preferred; uneven (padded) sharding is
+never chosen implicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes as _data_axes, num_client_groups
+
+
+# global sharding options (hillclimb knobs; see EXPERIMENTS.md §Perf)
+#   attn_shard: "even"         — only evenly-divisible dims are sharded
+#               "heads_padded" — head-count dims are sharded FIRST, with
+#                                GSPMD padding when uneven (e.g. 56 -> 64);
+#                                avoids the Dh-contraction score psums
+_OPTS = {"attn_shard": "even"}
+
+
+def set_sharding_options(**kw):
+    _OPTS.update(kw)
+
+
+def _model_candidates(cfg) -> list:
+    cand = []
+    if getattr(cfg, "n_experts", 0):
+        cand.append(cfg.n_experts + getattr(cfg, "expert_pad", 0))
+        cand.append(cfg.n_experts)
+    if _OPTS["attn_shard"] == "heads_padded":
+        cand += [cfg.n_heads, cfg.n_kv_heads]
+    cand.append(cfg.vocab)
+    if cfg.d_ff:
+        cand += [cfg.d_ff, 2 * cfg.d_ff]
+    if getattr(cfg, "d_expert", 0):
+        cand.append(cfg.d_expert)
+    # ssm / xlstm inner dims
+    if getattr(cfg, "ssm_state", 0) or cfg.family in ("ssm", "hybrid"):
+        di = 2 * cfg.d_model
+        cand += [di, 2 * di]  # d_inner, mlstm up-proj
+        if cfg.family == "hybrid":
+            from repro.models.mamba2 import conv_channels, d_inner as dih
+            cand.append(conv_channels(cfg))
+            cand.append(2 * dih(cfg) + 2 * cfg.ssm_state + (dih(cfg) // cfg.ssm_head_dim))
+    if cfg.family == "ssm":
+        from repro.models.xlstm import slstm_ff
+        cand.append(slstm_ff(cfg))
+    cand += [cfg.n_heads, cfg.n_kv_heads, cfg.head_dim]
+    # dedupe preserving priority order
+    seen, out = set(), []
+    for c in cand:
+        if c and c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def leaf_spec(shape, cfg, mesh, role: str = "master", skip_leading: int = 0):
+    """PartitionSpec for one leaf of the given shape."""
+    model_size = mesh.shape["model"]
+    daxes = _data_axes(mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in daxes]))
+    cand = _model_candidates(cfg)
+
+    spec = [None] * len(shape)
+    if role == "client_all_axes" and len(shape) > 0:
+        # pure-DP placement (§Perf iteration 5): the client dim spans
+        # data AND model axes; tensor dims stay replicated -> zero TP
+        # collectives inside the local phase (right for small archs)
+        spec[0] = tuple(daxes) + ("model",)
+        return P(*spec)
+    if role == "client" and len(shape) > 0:
+        spec[0] = daxes if len(daxes) > 1 else daxes[0]
+        skip_leading = max(skip_leading, 1)
+
+    model_dim = None
+    if _OPTS["attn_shard"] == "heads_padded":
+        # candidate-priority search; head-count dims shard with GSPMD
+        # padding when uneven (56 heads -> pad 64): avoids Dh-contraction
+        # score psums at <=14% padded-FLOP cost (EXPERIMENTS.md §Perf)
+        uneven_ok = {cfg.n_heads, cfg.n_kv_heads}
+        for c in cand:
+            for i in range(len(shape) - 1, skip_leading - 1, -1):
+                if spec[i] is not None or shape[i] != c:
+                    continue
+                if shape[i] % model_size == 0 or (c in uneven_ok and shape[i] > 1):
+                    model_dim = i
+                    break
+            if model_dim is not None:
+                break
+    else:
+        # baseline: right-to-left, first evenly-divisible candidate match
+        for i in range(len(shape) - 1, skip_leading - 1, -1):
+            if spec[i] is None and shape[i] % model_size == 0:
+                for c in cand:
+                    if shape[i] == c:
+                        model_dim = i
+                        break
+                if model_dim is not None:
+                    break
+    if model_dim is not None:
+        spec[model_dim] = "model"
+
+    # role="serve": model-parallel only (single bf16 replica, no ZeRO)
+    # ZeRO data dim for master-role tensors
+    if role == "master":
+        for i in range(skip_leading, len(shape)):
+            if spec[i] is None and shape[i] == cfg.d_model and shape[i] % data_size == 0:
+                spec[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+    return P(*spec)
+
+
+def tree_shardings(tree, cfg, mesh, role: str = "master", skip_leading: int = 0):
+    """NamedSharding pytree matching ``tree`` (of arrays or SDS)."""
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(
+            mesh, leaf_spec(l.shape, cfg, mesh, role, skip_leading)
+        ),
+        tree,
+    )
+
+
+def batch_spec(mesh, extra_dims: int = 1):
+    """Global-batch tensors: batch dim over all data axes."""
+    daxes = _data_axes(mesh)
+    return P(daxes if len(daxes) > 1 else daxes[0], *([None] * extra_dims))
+
+
+def cache_shardings(cache_tree, cfg, mesh, batch_size: int):
+    """KV/SSM caches — the batch dim (identified by size) goes over the
+    data axes when evenly divisible; one head/state/channel dim goes over
+    ``model`` when even.  batch=1 (long_500k) stays replicated over data."""
+    model_size = mesh.shape["model"]
+    daxes = _data_axes(mesh)
+    d_ax = daxes if len(daxes) > 1 else daxes[0]
+    data_size = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    cand = [cfg.n_kv_heads, cfg.n_heads, cfg.head_dim]
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.mamba2 import conv_channels, d_inner, n_heads_ssm
+        cand = [n_heads_ssm(cfg), conv_channels(cfg), d_inner(cfg),
+                2 * cfg.d_model] + cand
+    if cfg.family == "ssm":
+        from repro.models.xlstm import d_inner as xdi, mlstm_heads
+        cand = [mlstm_heads(cfg), xdi(cfg) // mlstm_heads(cfg)] + cand
+
+    def spec_for(l):
+        shape = l.shape
+        spec = [None] * len(shape)
+        # batch dim: prefer dim 1 (convention: [stack, B, ...]), else first
+        # match; only shard when evenly divisible by the data-axis product
+        batch_dim = None
+        if batch_size % data_size == 0:
+            if len(shape) > 1 and shape[1] == batch_size:
+                batch_dim = 1
+            else:
+                for i, s in enumerate(shape):
+                    if s == batch_size:
+                        batch_dim = i
+                        break
+        if batch_dim is not None:
+            spec[batch_dim] = d_ax
+        # model dim: search from the right
+        for i in range(len(shape) - 1, (batch_dim if batch_dim is not None else 0), -1):
+            if spec[i] is None and shape[i] % model_size == 0 and shape[i] in cand:
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(spec_for, cache_tree)

@@ -1,0 +1,287 @@
+"""zamba2-style hybrid family: Mamba2 backbone with a SHARED attention+MLP
+block applied every ``cfg.attn_every`` layers (one parameter set, reused —
+the zamba2 weight-sharing trick, arXiv:2411.15242).
+
+Layer layout for n_layers=38, attn_every=6:
+  6 segments of [6 x mamba2, shared_attn], then 2 trailing mamba2 layers.
+Segments run as a nested scan (outer over segments, inner over the
+segment's mamba layers) so HLO stays small; the shared block appears once
+per segment application but with the SAME weights.
+
+Decode carries per-layer (conv_state, ssm_state) plus a KV cache for the
+shared attention block applications (one cache slot per application).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.base import Family, register_family
+
+
+def segment_plan(cfg):
+    """(n_segments, seg_len, n_trailing)."""
+    if cfg.attn_every <= 0:
+        return 0, 0, cfg.n_layers
+    n_seg = cfg.n_layers // cfg.attn_every
+    trailing = cfg.n_layers - n_seg * cfg.attn_every
+    return n_seg, cfg.attn_every, trailing
+
+
+def init_params(key, cfg):
+    dtype = cfg.pdtype
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    n_seg, seg_len, trailing = segment_plan(cfg)
+
+    def stack(init_fn, k, n):
+        ks = jax.random.split(k, max(n, 1))
+        return jax.vmap(init_fn)(ks)
+
+    params = {
+        "embedding": L.init_embedding(k1, cfg.vocab, cfg.d_model, dtype),
+        "mamba_seg": {
+            "mix": jax.vmap(lambda k: jax.vmap(lambda kk: M.init_mamba2(kk, cfg))(
+                jax.random.split(k, seg_len)))(jax.random.split(k2, n_seg))
+            if n_seg else None,
+            "ln": jnp.zeros((n_seg, seg_len, cfg.d_model), dtype) if n_seg else None,
+        },
+        # ONE shared attention+MLP block (zamba2 weight sharing)
+        "shared_attn": {
+            "attn": L.init_attention(k3, cfg),
+            "mlp": L.init_mlp(k4, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_variant),
+            "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+            "ln_mlp": jnp.zeros((cfg.d_model,), dtype),
+        },
+        "mamba_tail": {
+            "mix": stack(lambda k: M.init_mamba2(k, cfg), k5, trailing)
+            if trailing else None,
+            "ln": jnp.zeros((trailing, cfg.d_model), dtype) if trailing else None,
+        },
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(k6, cfg.vocab, cfg.d_model, dtype)
+    return params
+
+
+def _mamba_layer(x, mix, ln, cfg, state=None, use_kernel=False):
+    h = L.rms_norm(x, ln, cfg.norm_eps)
+    if state is None:
+        out, new_state = M.mamba2_forward(h, mix, cfg, use_kernel=use_kernel)
+    else:
+        out, new_state = M.mamba2_decode(h, mix, cfg, state)
+    return x + out, new_state
+
+
+def _shared_block(x, p, cfg, positions):
+    sp = p["shared_attn"]
+    h = L.rms_norm(x, sp["ln_attn"], cfg.norm_eps)
+    x = x + L.attention(h, sp["attn"], cfg, positions, causal=True)
+    h = L.rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+    return x + L.mlp(h, sp["mlp"], cfg.mlp_variant)
+
+
+def forward_hidden(params, batch, cfg):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.shard(L.embed(tokens, params["embedding"]), "batch", None, None)
+    n_seg, seg_len, trailing = segment_plan(cfg)
+
+    if n_seg:
+        def seg_body(x, seg):
+            def inner(x, lyr):
+                x, _ = _mamba_layer(x, lyr["mix"], lyr["ln"], cfg)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, seg)
+            x = _shared_block(x, params, cfg, positions)
+            return x, None
+
+        x, _ = jax.lax.scan(
+            jax.checkpoint(seg_body), x, params["mamba_seg"]
+        )
+    if trailing:
+        def inner(x, lyr):
+            x, _ = _mamba_layer(x, lyr["mix"], lyr["ln"], cfg)
+            return x, None
+        x, _ = jax.lax.scan(jax.checkpoint(inner), x, params["mamba_tail"])
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+
+
+def logits_fn(params, batch, cfg):
+    h = forward_hidden(params, batch, cfg)
+    return L.unembed(h, params.get("lm_head", params["embedding"]))
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    h = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    W = params.get("lm_head", params["embedding"])
+    n_chunks = max(1, S // loss_chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, W)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    return jnp.mean(jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc)))
+
+
+# ---------------------------------------------------------------------------
+# decode: per-layer SSM states + KV cache per shared-attn application
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    n_seg, seg_len, trailing = segment_plan(cfg)
+    conv, ssm = M.init_decode_state(cfg, batch_size)
+
+    def rep(x, n):
+        return jnp.broadcast_to(x[None], (n,) + x.shape) * 0 if n else None
+
+    cache = {
+        "seg_conv": rep(conv, n_seg * seg_len).reshape(
+            (n_seg, seg_len) + conv.shape) if n_seg else None,
+        "seg_ssm": rep(ssm, n_seg * seg_len).reshape(
+            (n_seg, seg_len) + ssm.shape) if n_seg else None,
+        "tail_conv": rep(conv, trailing) if trailing else None,
+        "tail_ssm": rep(ssm, trailing) if trailing else None,
+        # KV cache: one slot per shared-attention application
+        "attn_k": jnp.zeros(
+            (n_seg, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim),
+            dtype or cfg.pdtype,
+        ) if n_seg else None,
+        "attn_v": jnp.zeros(
+            (n_seg, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim),
+            dtype or cfg.pdtype,
+        ) if n_seg else None,
+    }
+    return cache
+
+
+def prefill(params, batch, cfg, cache):
+    """Prefill via the parallel path, then capture states for decode.
+
+    For SSM layers the final ssm/conv states come from the chunked scan;
+    for the shared attention block we store K/V of the full prefix.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.shard(L.embed(tokens, params["embedding"]), "batch", None, None)
+    n_seg, seg_len, trailing = segment_plan(cfg)
+
+    if n_seg:
+        def seg_body(x, seg):
+            def inner(x, lyr):
+                h = L.rms_norm(x, lyr["ln"], cfg.norm_eps)
+                out, st = M.mamba2_forward(h, lyr["mix"], cfg)
+                return x + out, st
+            x, states = jax.lax.scan(inner, x, seg)
+            sp = params["shared_attn"]
+            h = L.rms_norm(x, sp["ln_attn"], cfg.norm_eps)
+            _, k, v = L._qkv(h, sp["attn"], cfg, positions)
+            x = x + L.attention(
+                h, sp["attn"], cfg, positions, causal=True,
+                kv_override=(k, v, positions),
+            )
+            h = L.rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+            x = x + L.mlp(h, sp["mlp"], cfg.mlp_variant)
+            return x, (states, k, v)
+
+        x, (seg_states, ks, vs) = jax.lax.scan(
+            jax.checkpoint(seg_body), x, params["mamba_seg"]
+        )
+        cache = dict(cache)
+        cache["seg_conv"], cache["seg_ssm"] = seg_states
+        cache["attn_k"] = jax.lax.dynamic_update_slice(
+            cache["attn_k"], ks, (0, 0, 0, 0, 0))
+        cache["attn_v"] = jax.lax.dynamic_update_slice(
+            cache["attn_v"], vs, (0, 0, 0, 0, 0))
+    if trailing:
+        def inner(x, lyr):
+            h = L.rms_norm(x, lyr["ln"], cfg.norm_eps)
+            out, st = M.mamba2_forward(h, lyr["mix"], cfg)
+            return x + out, st
+        x, tail_states = jax.lax.scan(jax.checkpoint(inner), x, params["mamba_tail"])
+        cache = dict(cache)
+        cache["tail_conv"], cache["tail_ssm"] = tail_states
+
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], params.get("lm_head", params["embedding"]))
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    B = token.shape[0]
+    x = L.embed(token, params["embedding"])
+    positions = pos[:, None]
+    batch_idx = jnp.arange(B)
+    n_seg, seg_len, trailing = segment_plan(cfg)
+
+    cache = dict(cache)
+    if n_seg:
+        def seg_body(x, seg):
+            lyrs, conv_sts, ssm_sts, ck, cv = seg
+
+            def inner(x, inp):
+                lyr, cst, sst = inp
+                h = L.rms_norm(x, lyr["ln"], cfg.norm_eps)
+                out, (ncst, nsst) = M.mamba2_decode(h, lyr["mix"], cfg, (cst, sst))
+                return x + out, (ncst, nsst)
+
+            x, (nconv, nssm) = jax.lax.scan(inner, x, (lyrs, conv_sts, ssm_sts))
+            sp = params["shared_attn"]
+            h = L.rms_norm(x, sp["ln_attn"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, sp["attn"]["wv"])
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            ck = ck.at[batch_idx, pos].set(k[:, 0])
+            cv = cv.at[batch_idx, pos].set(v[:, 0])
+            x = x + L.decode_attention(q, sp["attn"], ck, cv, pos, cfg)
+            h = L.rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+            x = x + L.mlp(h, sp["mlp"], cfg.mlp_variant)
+            return x, (nconv, nssm, ck, cv)
+
+        x, (nconv, nssm, ks, vs) = jax.lax.scan(
+            seg_body, x,
+            (params["mamba_seg"], cache["seg_conv"], cache["seg_ssm"],
+             cache["attn_k"], cache["attn_v"]),
+        )
+        cache.update(seg_conv=nconv, seg_ssm=nssm, attn_k=ks, attn_v=vs)
+    if trailing:
+        def inner(x, inp):
+            lyr, cst, sst = inp
+            h = L.rms_norm(x, lyr["ln"], cfg.norm_eps)
+            out, (ncst, nsst) = M.mamba2_decode(h, lyr["mix"], cfg, (cst, sst))
+            return x + out, (ncst, nsst)
+        x, (nc, ns) = jax.lax.scan(
+            inner, x, (params["mamba_tail"], cache["tail_conv"], cache["tail_ssm"])
+        )
+        cache.update(tail_conv=nc, tail_ssm=ns)
+
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h, params.get("lm_head", params["embedding"]))
+    return logits[:, 0], cache
+
+
+register_family(
+    Family(
+        name="hybrid",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

@@ -1,0 +1,313 @@
+"""Shared model building blocks: norms, RoPE, GQA attention (sliding
+window + logit softcap), gated MLPs, embeddings, and chunked
+(memory-efficient) attention used for long sequences.
+
+Conventions
+-----------
+* Parameter layouts keep head / ff dims explicit so sharding rules can
+  target them:  wq (D, H, Dh), wk/wv (D, Hkv, Dh), wo (H, Dh, D),
+  mlp w_gate/w_up (D, F), w_down (F, D), embedding (V, D).
+* Activations are bf16 (or the config's param dtype); normalization and
+  softmax accumulate in f32.
+* ``shard(x, ...)`` applies a with_sharding_constraint only when a mesh
+  context has been installed by the launcher (see set_mesh_rules) — smoke
+  tests on a single CPU device run the identical code without constraints.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (installed by repro.launch.shardings)
+# ---------------------------------------------------------------------------
+
+_MESH_CTX = {"mesh": None, "data_axes": None, "model_axis": None,
+             "attn_axis": "heads"}
+
+
+def set_mesh_context(mesh, data_axes, model_axis, attn_axis="heads"):
+    _MESH_CTX.update(mesh=mesh, data_axes=data_axes, model_axis=model_axis,
+                     attn_axis=attn_axis)
+
+
+def clear_mesh_context():
+    _MESH_CTX.update(mesh=None, data_axes=None, model_axis=None,
+                     attn_axis="heads")
+
+
+def shard(x, *logical):
+    """Constrain activation sharding. ``logical`` entries: 'batch' (data
+    axes), 'model' (tensor axis), None (replicated).
+
+    NOTE: when ``data_axes`` is None in the mesh context (the FL train
+    step), 'batch' resolves to None.  Inside the per-client vmap the
+    visible batch dim is the tiny per-client microbatch — constraining it
+    to the data axes is unsatisfiable and forces XLA to REPLICATE the
+    whole activation across data, dragging the client dim with it
+    (EXPERIMENTS.md §Perf iteration 1).  The client dim's sharding comes
+    from input/param propagation instead.
+    """
+    mesh = _MESH_CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for ax in logical:
+        if ax == "batch":
+            spec.append(_MESH_CTX["data_axes"])   # may be None
+        elif ax == "model":
+            spec.append(_MESH_CTX["model_axis"])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec))
+    )
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    scale = (1.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32)[..., None, :] * freqs
+    # angles: (..., S, 1, Dh/2) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype=None):
+    dtype = dtype or cfg.pdtype
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (D, H, Dh), dtype, fan_in=D),
+        "wk": dense_init(k2, (D, Hkv, Dh), dtype, fan_in=D),
+        "wv": dense_init(k3, (D, Hkv, Dh), dtype, fan_in=D),
+        "wo": dense_init(k4, (H, Dh, D), dtype, fan_in=H * Dh),
+    }
+
+
+def _softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def _qkv(x, p, cfg, positions, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(
+    x,
+    p,
+    cfg,
+    positions=None,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    rope: bool = True,
+    kv_override=None,          # (k, v, kv_positions) for cross-attention
+):
+    """Exact attention, q-chunked for memory (scan over query chunks).
+
+    x: (B, S, D) -> (B, S, D).  ``window`` > 0 masks keys older than
+    ``window`` positions (sliding-window attention).
+    """
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if kv_override is None:
+        q, k, v = _qkv(x, p, cfg, positions, rope=rope)
+        kv_pos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        k, v, kv_pos = kv_override
+    # constrain q/k/v on the axis that MATCHES the param sharding rule
+    # (heads when evenly divisible, else head_dim) — a mismatched
+    # constraint forces a reshard collective per layer per direction
+    # (EXPERIMENTS.md §Perf iteration 2b)
+    if _MESH_CTX["attn_axis"] == "dh":
+        q = shard(q, "batch", None, None, "model")
+        k = shard(k, "batch", None, None, "model")
+        v = shard(v, "batch", None, None, "model")
+    elif _MESH_CTX["attn_axis"] == "heads":
+        q = shard(q, "batch", None, "model", None)
+        k = shard(k, "batch", None, "model", None)
+        v = shard(v, "batch", None, "model", None)
+
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // Hkv
+    scale = Dh ** -0.5
+
+    def attend_chunk(q_c, qpos_c):
+        # q_c: (B, Cq, H, Dh)
+        kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+        vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        logits = jnp.einsum("bqhk,bshk->bhqs", q_c, kk).astype(jnp.float32) * scale
+        logits = _softcap(logits, cfg.attn_logit_softcap)
+        dq = qpos_c[:, :, None]           # (B, Cq, 1)
+        dk = kv_pos[:, None, :]           # (B, 1, Skv)
+        # branchless window: 0 (or any non-positive) means "no window";
+        # window may be a traced per-layer value (gemma2 local/global scan).
+        eff_w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+        mask = dk > dq - eff_w
+        if causal:
+            mask = mask & (dk <= dq)
+        logits = jnp.where(mask[:, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+
+    # pick the largest divisor of S that fits the target chunk (S=1500
+    # whisper frames, S=4672 vlm patch+text, ... are not 1024-divisible)
+    eff_chunk = q_chunk
+    while eff_chunk > 1 and S % eff_chunk:
+        eff_chunk -= 1
+    if S <= q_chunk or eff_chunk < 64:
+        o = attend_chunk(q, positions)
+    else:
+        n_chunks = S // eff_chunk
+        qr = q.reshape(B, n_chunks, eff_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+        pr = positions.reshape(B, n_chunks, eff_chunk).transpose(1, 0, 2)
+        o = jax.lax.map(lambda qc: attend_chunk(qc[0], qc[1]), (qr, pr))
+        o = o.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+    if _MESH_CTX["attn_axis"] == "dh":
+        o = shard(o, "batch", None, None, "model")
+    elif _MESH_CTX["attn_axis"] == "heads":
+        o = shard(o, "batch", None, "model", None)
+    return jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+
+
+def decode_attention(q, p, cache_k, cache_v, pos, cfg, *, window: int = 0):
+    """One-token decode: q (B, 1, H, Dh) against cache (B, L, Hkv, Dh).
+
+    ``pos`` (B,) is the current position; cache positions are 0..L-1 and
+    entries >= pos (or outside the window) are masked.
+    """
+    B, L = cache_k.shape[0], cache_k.shape[1]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // Hkv
+    kk = jnp.repeat(cache_k, rep, axis=2) if rep > 1 else cache_k
+    vv = jnp.repeat(cache_v, rep, axis=2) if rep > 1 else cache_v
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * (Dh ** -0.5)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    kv_idx = jnp.arange(L)[None, None, None, :]               # (1,1,1,L)
+    cur = pos[:, None, None, None]
+    eff_w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    mask = (kv_idx <= cur) & (kv_idx > cur - eff_w)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+    return jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype, variant="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if variant in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(x, p, variant="swiglu"):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if variant == "swiglu":
+        gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = gate * up
+    elif variant == "geglu":
+        gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    return dense_init(key, (vocab, d_model), dtype, fan_in=d_model)
+
+
+def embed(tokens, emb):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed(x, emb_or_head, softcap: float = 0.0):
+    logits = jnp.einsum("bsd,vd->bsv", x, emb_or_head).astype(jnp.float32)
+    return _softcap(logits, softcap)
+
+
+def cross_entropy_loss(logits, labels, vocab: int):
+    """Mean next-token CE.  logits (B,S,V) f32, labels (B,S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) block, chunkwise-parallel in pure
+JAX (the intra-chunk matmul is also available as a Pallas kernel, see
+repro/kernels/ssd_scan/).
+
+Follows the minimal SSD formulation (Dao & Gu, 2024):
+
+    h_t = exp(a_t) * h_{t-1} + dt_t * B_t x_t^T        (per head)
+    y_t = C_t h_t + D * x_t
+
+with a_t = -exp(A_log) * dt_t (scalar per head), B/C shared across heads
+(n_groups = 1), chunked into blocks of ``cfg.ssm_chunk``:
+  * intra-chunk: quadratic attention-like term with decay mask L,
+  * inter-chunk: a short lax.scan over per-chunk states (B, H, P, N).
+
+Decode is the recurrent form on a persistent (B, H, P, N) state plus a
+(width-1) causal-conv state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads_ssm(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def conv_channels(cfg) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_state  # x ++ B ++ C (one group)
+
+
+def init_mamba2(key, cfg):
+    dtype = cfg.pdtype
+    D = cfg.d_model
+    di, H, N = d_inner(cfg), n_heads_ssm(cfg), cfg.ssm_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(k1, (D, d_in_proj), dtype, fan_in=D),
+        "conv_w": L.dense_init(k2, (cfg.ssm_conv, conv_channels(cfg)), dtype,
+                               fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": L.dense_init(k3, (di, D), dtype, fan_in=di),
+    }
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} a_k (causal)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, a, Bm, Cm, chunk: int, init_state=None, use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   head inputs (already * dt)
+    a:  (b, s, h)      log decay per step (<= 0)
+    Bm: (b, s, n)      input projection (shared across heads)
+    Cm: (b, s, n)      output projection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    c = s // chunk
+    q = chunk
+    xr = x.reshape(b, c, q, h, p)
+    ar = a.reshape(b, c, q, h).transpose(0, 3, 1, 2)       # (b,h,c,q)
+    Br = Bm.reshape(b, c, q, n)
+    Cr = Cm.reshape(b, c, q, n)
+
+    a_cs = jnp.cumsum(ar, axis=-1)                         # (b,h,c,q)
+
+    if use_kernel:
+        from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+        Y_diag = ssd_intra_chunk(xr, ar, Br, Cr)
+    else:
+        Lm = jnp.exp(_segsum(ar))                          # (b,h,c,q,k)
+        scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)     # (b,c,q,k)
+        Y_diag = jnp.einsum("bcqk,bhcqk,bckhp->bcqhp", scores, Lm, xr)
+
+    # states at chunk ends: sum_k exp(a_end - a_k) B_k x_k
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)          # (b,h,c,q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", Br, decay_states, xr)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])                   # (b,h,c)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                      # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    states_c = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)  # (c,b,h,p,n)
+    decays_c = chunk_decay.transpose(2, 0, 1)              # (c,b,h)
+    final, prev_states = jax.lax.scan(scan_fn, init_state, (states_c, decays_c))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(a_cs)                            # (b,h,c,q)
+    Y_off = jnp.einsum(
+        "bcqn,bchpn,bhcq->bcqhp", Cr, prev_states.astype(x.dtype), state_decay
+    )
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def _causal_conv(xBC, w, bias):
+    """Depthwise causal conv over time. xBC: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    return out + bias
+
+
+def mamba2_forward(x, p, cfg, state=None, use_kernel: bool = False):
+    """Full mamba2 mixer on (B, S, D). Returns (out, (conv_state, ssm_state))."""
+    Bsz, S, D = x.shape
+    di, H, N, P = d_inner(cfg), n_heads_ssm(cfg), cfg.ssm_state, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+
+    xBC_raw = jnp.concatenate([xs, Bm, Cm], -1)
+    if state is not None:
+        conv_in = jnp.concatenate([state[0], xBC_raw], axis=1)
+        xBC = _causal_conv(conv_in, p["conv_w"], p["conv_b"])[:, state[0].shape[1]:]
+    else:
+        xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    a = -jnp.exp(p["A_log"]) * dt                                   # (B,S,H)
+    xh = xs.reshape(Bsz, S, H, P)
+    x_dt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+
+    init_ssm = state[1] if state is not None else None
+    y, ssm_final = ssd_chunked(
+        x_dt, a, Bm, Cm, min(cfg.ssm_chunk, S), init_state=init_ssm,
+        use_kernel=use_kernel,
+    )
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    # SSD mixes f32 decay factors in; pin back to the residual dtype
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    K = cfg.ssm_conv
+    if state is not None:
+        tail = jnp.concatenate([state[0], xBC_raw], axis=1)[:, -(K - 1):]
+    else:
+        tail = xBC_raw[:, S - (K - 1):]
+    return out, (tail, ssm_final)
+
+
+def mamba2_decode(x, p, cfg, state):
+    """One-step recurrent decode. x: (B, 1, D); state=(conv_state, ssm_state)."""
+    conv_state, ssm_state = state
+    Bsz = x.shape[0]
+    di, H, N, P = d_inner(cfg), n_heads_ssm(cfg), cfg.ssm_state, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xBC_new = jnp.concatenate([xs, Bm, Cm], -1)            # (B,1,C)
+
+    conv_in = jnp.concatenate([conv_state, xBC_new], axis=1)   # (B,K,C)
+    K = cfg.ssm_conv
+    xBC = (conv_in * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+    new_conv_state = conv_in[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,1,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)[:, 0]                   # (B,H)
+    xs_h = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    x_dt = xs_h * dt[:, 0, :, None]                                # discretized
+
+    # h <- a h + (dt x) B^T ; y = h C + D x
+    new_ssm = ssm_state * a[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", x_dt, Bm[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm[:, 0].astype(jnp.float32))
+    y = y + xs_h * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (new_conv_state, new_ssm)
+
+
+def init_decode_state(cfg, batch_size):
+    di, H, N, P = d_inner(cfg), n_heads_ssm(cfg), cfg.ssm_state, cfg.ssm_head_dim
+    conv = jnp.zeros((batch_size, cfg.ssm_conv - 1, conv_channels(cfg)), cfg.pdtype)
+    ssm = jnp.zeros((batch_size, H, P, N), jnp.float32)
+    return (conv, ssm)

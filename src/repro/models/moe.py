@@ -1,0 +1,252 @@
+"""Mixture-of-Experts decoder family (qwen2-moe / olmoe).
+
+GShard/Switch-style capacity-based top-k routing, TPU-native:
+
+  * tokens are reshaped into GROUPS of ~``group_size`` so the dispatch /
+    combine einsums stay ~O(S * capacity * D) per group (<10 % of expert
+    FLOPs) instead of the naive O(S^2) formulation;
+  * experts live on the ``model`` mesh axis (expert parallelism) — the
+    dispatch einsum lowers to an all-to-all over that axis;
+  * qwen2-moe additionally has ``n_shared_experts`` always-on experts
+    (fused into one dense MLP of width n_shared * d_expert) and top-4 of
+    60 routed experts; olmoe is pure top-8 of 64;
+  * load-balance auxiliary loss (Switch style): E * sum_e f_e * p_e.
+
+Capacity overflow drops tokens (standard); the capacity factor is a
+config knob (default 1.25).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.base import Family, register_family
+
+
+def init_moe_mlp(key, cfg):
+    dtype = cfg.pdtype
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert or cfg.d_ff
+    Ep = E + cfg.expert_pad      # padded expert count for even sharding
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(k1, (D, E), jnp.float32),
+        "w_gate": L.dense_init(k2, (Ep, D, F), dtype, fan_in=D),
+        "w_up": L.dense_init(k3, (Ep, D, F), dtype, fan_in=D),
+        "w_down": L.dense_init(k4, (Ep, F, D), dtype, fan_in=F),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(
+            k5, D, cfg.n_shared_experts * F, dtype, variant="swiglu"
+        )
+    return p
+
+
+def moe_mlp(x, p, cfg, *, group_size: int = 2048):
+    """x: (B, S, D) -> (B, S, D); returns (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * S, D)
+    n_tok = B * S
+    g = max(1, n_tok // group_size)
+    s = n_tok // g                                   # tokens per group
+    xg = xt.reshape(g, s, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)          # (g, s, E)
+    top_p, top_e = jax.lax.top_k(probs, K)           # (g, s, K)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance aux loss (Switch): E * mean_e( frac_tokens_e * mean_prob_e )
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    cap = int(max(4, (s * K / E) * cfg.capacity_factor))
+
+    # position of each (token, k) among the tokens routed to the same expert
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)          # (g, s, K, E)
+    flat = onehot.reshape(g, s * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                  # (g, s*K, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(g, s, K)            # (g, s, K)
+    keep = pos < cap
+    gate = top_p * keep.astype(top_p.dtype)
+
+    # one-hot factors; an out-of-range index (dropped token) yields a zero row
+    # (padded experts, if any, simply never receive tokens)
+    oh_e = jax.nn.one_hot(top_e, E + cfg.expert_pad, dtype=x.dtype)    # (g,s,K,Ep)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)  # (g,s,K,cap)
+    # contract over K without materializing the (g,s,K,E,cap) product
+    disp = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)                   # (g,s,E,cap)
+    comb = jnp.einsum("gske,gskc->gsec", oh_e * gate.astype(x.dtype)[..., None], oh_c)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)                 # (g, E, cap, D)
+    xe = L.shard(xe, None, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["w_up"]
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])           # (g, E, cap, D)
+    ye = L.shard(ye, None, "model", None, None)
+    out = jnp.einsum("gsec,gecd->gsd", comb, ye)
+
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + L.mlp(x, p["shared"], "swiglu")
+    return out, aux
+
+
+def init_params(key, cfg):
+    dtype = cfg.pdtype
+    n = cfg.n_layers
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+
+    def stack(init_fn, k):
+        ks = jax.random.split(k, n)
+        return jax.vmap(init_fn)(ks)
+
+    params = {
+        "embedding": L.init_embedding(k2, cfg.vocab, cfg.d_model, dtype),
+        "blocks": {
+            "attn": stack(lambda k: L.init_attention(k, cfg), k0),
+            "moe": stack(lambda k: init_moe_mlp(k, cfg), k1),
+            "ln_attn": jnp.zeros((n, cfg.d_model), dtype),
+            "ln_mlp": jnp.zeros((n, cfg.d_model), dtype),
+        },
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(k3, cfg.vocab, cfg.d_model, dtype)
+    return params
+
+
+def _moe_block(x, blk, cfg, positions):
+    h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+    x = x + L.attention(h, blk["attn"], cfg, positions, causal=True)
+    h = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+    out, aux = moe_mlp(h, blk["moe"], cfg)
+    return x + out, aux
+
+
+def trunk(params, x, cfg, positions):
+    def body(carry, blk):
+        x, aux_sum = carry
+        x, aux = _moe_block(x, blk, cfg, positions)
+        return (x, aux_sum + aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps), aux / cfg.n_layers
+
+
+def forward_hidden(params, batch, cfg):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.shard(L.embed(tokens, params["embedding"]), "batch", None, None)
+    return trunk(params, x, cfg, positions)
+
+
+def logits_fn(params, batch, cfg):
+    h, _aux = forward_hidden(params, batch, cfg)
+    return L.unembed(h, params.get("lm_head", params["embedding"]))
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    h, aux = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    W = params.get("lm_head", params["embedding"])
+    n_chunks = max(1, S // loss_chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, W)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    ce = jnp.mean(jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc)))
+    return ce + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode path (same attention cache as dense; MoE ffn on 1-token groups)
+# ---------------------------------------------------------------------------
+
+init_cache = T.init_cache
+
+
+def prefill(params, batch, cfg, cache):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.shard(L.embed(tokens, params["embedding"]), "batch", None, None)
+
+    def body(carry, blk):
+        x, aux_sum = carry
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        _, k, v = L._qkv(h, blk["attn"], cfg, positions)
+        attn_out = L.attention(
+            h, blk["attn"], cfg, positions, causal=True, kv_override=(k, v, positions)
+        )
+        x = x + attn_out
+        h2 = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        out, aux = moe_mlp(h2, blk["moe"], cfg)
+        return (x + out, aux_sum + aux), (k, v)
+
+    (x, _aux), (ks, vs) = jax.lax.scan(
+        jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0)),
+    }
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], params.get("lm_head", params["embedding"]))
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    B = token.shape[0]
+    x = L.embed(token, params["embedding"])
+    positions = pos[:, None]
+    batch_idx = jnp.arange(B)
+
+    def body(x, scanned):
+        blk, ck, cv = scanned
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck = ck.at[batch_idx, pos].set(k[:, 0])
+        cv = cv.at[batch_idx, pos].set(v[:, 0])
+        x = x + L.decode_attention(q, blk["attn"], ck, cv, pos, cfg)
+        h2 = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        out, _aux = moe_mlp(h2, blk["moe"], cfg, group_size=B)
+        return x + out, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    cache = {"k": ks, "v": vs}
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h, params.get("lm_head", params["embedding"]))
+    return logits[:, 0], cache
+
+
+register_family(
+    Family(
+        name="moe",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

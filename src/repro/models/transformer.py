@@ -1,0 +1,262 @@
+"""Dense decoder-only transformer family (llama / gemma2 / phi3 / smollm /
+deepseek-coder).
+
+Implementation notes
+--------------------
+* **Scan over layers** with stacked params (leading L dim) keeps the HLO
+  size independent of depth — essential for the 62-layer deepseek dry-run.
+* **gemma2 options**: alternating local(window)/global attention driven by
+  a per-layer window array scanned alongside the params; attention-logit
+  softcap; final-logit softcap; post-norms (sandwich); embedding scaled by
+  sqrt(d_model); tied embeddings.
+* **Chunked CE loss**: the (B, S, V) logits tensor is never materialized;
+  we scan over sequence chunks (vocab up to 256 000).
+* ``prefill`` returns (last-position logits, filled KV cache); ``decode``
+  consumes one token and updates the cache in place (functional).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import Family, register_family
+
+# remat-policy knob (hillclimb: save dot outputs to trade memory for the
+# recompute FLOPs the baseline full-remat pays; EXPERIMENTS.md §Perf)
+_REMAT = {"policy": None}
+
+
+def set_remat_policy(name):
+    _REMAT["policy"] = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if name == "dots" else None)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = cfg.pdtype
+    n = cfg.n_layers
+    keys = jax.random.split(key, 8)
+
+    def stack(init_fn, k):
+        ks = jax.random.split(k, n)
+        return jax.vmap(init_fn)(ks)
+
+    blocks = {
+        "attn": stack(lambda k: L.init_attention(k, cfg), keys[0]),
+        "mlp": stack(
+            lambda k: L.init_mlp(k, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_variant),
+            keys[1],
+        ),
+        "ln_attn": jnp.zeros((n, cfg.d_model), dtype),
+        "ln_mlp": jnp.zeros((n, cfg.d_model), dtype),
+    }
+    if cfg.local_global_pattern:  # gemma2 sandwich norms
+        blocks["ln_attn_post"] = jnp.zeros((n, cfg.d_model), dtype)
+        blocks["ln_mlp_post"] = jnp.zeros((n, cfg.d_model), dtype)
+    params = {
+        "embedding": L.init_embedding(keys[2], cfg.vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(keys[3], cfg.vocab, cfg.d_model, dtype)
+    return params
+
+
+def layer_windows(cfg):
+    """Per-layer sliding window sizes. 0 = full attention.
+
+    gemma2: even layers local (sliding_window), odd layers global — unless
+    the config forces all-local (``sliding_window`` with no pattern), which
+    is the long_500k variant.
+    """
+    if cfg.local_global_pattern:
+        return jnp.array(
+            [cfg.sliding_window if (i % 2 == 0) else 0 for i in range(cfg.n_layers)],
+            jnp.int32,
+        )
+    return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# trunk
+# ---------------------------------------------------------------------------
+
+
+def _block(x, blk, window, cfg, positions):
+    h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+    attn_out = L.attention(
+        h, blk["attn"], cfg, positions, window=window, causal=True
+    )
+    if "ln_attn_post" in blk:
+        attn_out = L.rms_norm(attn_out, blk["ln_attn_post"], cfg.norm_eps)
+    x = x + attn_out
+    h = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+    mlp_out = L.mlp(h, blk["mlp"], cfg.mlp_variant)
+    if "ln_mlp_post" in blk:
+        mlp_out = L.rms_norm(mlp_out, blk["ln_mlp_post"], cfg.norm_eps)
+    return x + mlp_out
+
+
+def trunk(params, x, cfg, positions):
+    """x: (B, S, D) embedded input -> final hidden states."""
+    windows = layer_windows(cfg)
+
+    def body(carry, scanned):
+        blk, window = scanned
+        return _block(carry, blk, window, cfg, positions), None
+
+    body = jax.checkpoint(body, policy=_REMAT["policy"])
+    x, _ = jax.lax.scan(body, x, (params["blocks"], windows))
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+
+
+def embed_tokens(params, tokens, cfg):
+    x = L.embed(tokens, params["embedding"])
+    if cfg.local_global_pattern:  # gemma scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return L.shard(x, "batch", None, None)
+
+
+def _lm_matrix(params):
+    return params.get("lm_head", params["embedding"])
+
+
+def forward_hidden(params, batch, cfg):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed_tokens(params, tokens, cfg)
+    return trunk(params, x, cfg, positions)
+
+
+def logits_fn(params, batch, cfg):
+    h = forward_hidden(params, batch, cfg)
+    return L.unembed(h, _lm_matrix(params), cfg.final_logit_softcap)
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    """Mean next-token CE with sequence-chunked logits."""
+    h = forward_hidden(params, batch, cfg)                  # (B, S, D)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    W = _lm_matrix(params)
+    n_chunks = max(1, S // loss_chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, W, cfg.final_logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    losses = jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc))
+    return jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# KV cache / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    dtype = dtype or cfg.pdtype
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, batch, cfg, cache):
+    """Fill the cache for tokens (B, S); return (last logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed_tokens(params, tokens, cfg)
+    windows = layer_windows(cfg)
+
+    def body(carry, scanned):
+        x = carry
+        blk, window = scanned
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        _, k, v = L._qkv(h, blk["attn"], cfg, positions)
+        attn_out = L.attention(
+            h, blk["attn"], cfg, positions, window=window, causal=True,
+            kv_override=(k, v, positions),
+        )
+        if "ln_attn_post" in blk:
+            attn_out = L.rms_norm(attn_out, blk["ln_attn_post"], cfg.norm_eps)
+        x = x + attn_out
+        h2 = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        mlp_out = L.mlp(h2, blk["mlp"], cfg.mlp_variant)
+        if "ln_mlp_post" in blk:
+            mlp_out = L.rms_norm(mlp_out, blk["ln_mlp_post"], cfg.norm_eps)
+        return x + mlp_out, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x, (params["blocks"], windows))
+    Lmax = cache["k"].shape[2]
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0)),
+    }
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], _lm_matrix(params), cfg.final_logit_softcap)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """One decode step: token (B, 1), pos (B,).  Returns (logits, cache)."""
+    B = token.shape[0]
+    x = embed_tokens(params, token, cfg)                    # (B, 1, D)
+    positions = pos[:, None]
+    windows = layer_windows(cfg)
+    batch_idx = jnp.arange(B)
+
+    def body(x, scanned):
+        blk, window, ck, cv = scanned
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck = ck.at[batch_idx, pos].set(k[:, 0])
+        cv = cv.at[batch_idx, pos].set(v[:, 0])
+        attn_out = L.decode_attention(q, blk["attn"], ck, cv, pos, cfg, window=window)
+        if "ln_attn_post" in blk:
+            attn_out = L.rms_norm(attn_out, blk["ln_attn_post"], cfg.norm_eps)
+        x = x + attn_out
+        h2 = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        mlp_out = L.mlp(h2, blk["mlp"], cfg.mlp_variant)
+        if "ln_mlp_post" in blk:
+            mlp_out = L.rms_norm(mlp_out, blk["ln_mlp_post"], cfg.norm_eps)
+        return x + mlp_out, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], windows, cache["k"], cache["v"])
+    )
+    cache = {"k": ks, "v": vs}
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h, _lm_matrix(params), cfg.final_logit_softcap)
+    return logits[:, 0], cache
+
+
+register_family(
+    Family(
+        name="dense",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

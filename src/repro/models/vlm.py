@@ -1,0 +1,116 @@
+"""phi-3-vision family: the phi3-mini language backbone consuming stubbed
+vision embeddings.
+
+Per the assignment carve-out, the ViT/CLIP encoder + projector is a STUB:
+``input_specs`` provides pre-projected patch embeddings
+(B, n_patches, d_model).  The LM backbone — attention, RoPE, SwiGLU MLP,
+the cross-modal token interleave (patch prefix + text) — is fully
+implemented and reuses the dense transformer trunk.
+
+Sequence layout: [patch_0 .. patch_{P-1}, tok_0 .. tok_{S-1}], positions
+are global (0..P+S-1); training loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.base import Family, register_family
+
+init_params = T.init_params  # backbone only; patches arrive pre-projected
+
+
+def _prefix_embed(params, batch, cfg):
+    tokens, patches = batch["tokens"], batch["patches"]
+    B, S = tokens.shape
+    P = patches.shape[1]
+    tok_emb = L.embed(tokens, params["embedding"])
+    x = jnp.concatenate([patches.astype(tok_emb.dtype), tok_emb], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(P + S), (B, P + S))
+    return L.shard(x, "batch", None, None), positions, P
+
+
+def forward_hidden(params, batch, cfg):
+    x, positions, P = _prefix_embed(params, batch, cfg)
+    h = T.trunk(params, x, cfg, positions)
+    return h, P
+
+
+def logits_fn(params, batch, cfg):
+    h, P = forward_hidden(params, batch, cfg)
+    return L.unembed(h[:, P:], T._lm_matrix(params))
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    """CE over TEXT positions only (patch positions carry no labels)."""
+    h, P = forward_hidden(params, batch, cfg)
+    h = h[:, P:]
+    labels = batch["labels"]
+    B, S, D = h.shape
+    W = T._lm_matrix(params)
+    chunk = min(loss_chunk, S)
+    n_chunks = max(1, S // chunk)
+    hc = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, W)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    return jnp.mean(jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc)))
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    # cache must also hold the patch-prefix KV
+    return T.init_cache(cfg, batch_size, max_len + cfg.n_patches, dtype)
+
+
+def prefill(params, batch, cfg, cache):
+    x, positions, P = _prefix_embed(params, batch, cfg)
+    windows = T.layer_windows(cfg)
+    S_tot = x.shape[1]
+
+    def body(carry, scanned):
+        x = carry
+        blk, window = scanned
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        _, k, v = L._qkv(h, blk["attn"], cfg, positions)
+        attn_out = L.attention(
+            h, blk["attn"], cfg, positions, window=window, causal=True,
+            kv_override=(k, v, positions),
+        )
+        x = x + attn_out
+        h2 = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        return x + L.mlp(h2, blk["mlp"], cfg.mlp_variant), (k, v)
+
+    x, (ks, vs) = jax.lax.scan(jax.checkpoint(body), x, (params["blocks"], windows))
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0)),
+    }
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = L.unembed(h[:, -1:], T._lm_matrix(params))
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """pos is the GLOBAL position (patch prefix included by the caller)."""
+    return T.decode_step(params, cache, token, pos, cfg)
+
+
+register_family(
+    Family(
+        name="vlm",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder family (audio).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs`` provides precomputed frame embeddings
+(B, enc_frames, d_model).  Everything downstream — the 32-layer
+bidirectional encoder, the 32-layer causal decoder with cross-attention,
+sinusoidal/learned positions — is implemented fully.
+
+Differences vs the original (noted in DESIGN.md): RMSNorm without biases
+instead of LayerNorm+bias (keeps the block uniform with the rest of the
+zoo; dry-run cost is identical to first order), and the decoder position
+table is sized by ``cfg.max_seq`` to honour the assignment's decode_32k
+shape rather than whisper's 448-token context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import Family, register_family
+
+
+def _sinusoidal(length: int, d: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], -1)
+
+
+def init_params(key, cfg):
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    n_enc, n_dec = cfg.n_enc_layers, cfg.n_layers
+
+    def stack(init_fn, k, n):
+        return jax.vmap(init_fn)(jax.random.split(k, n))
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn": L.init_attention(k1, cfg),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+            "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+            "ln_mlp": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn": L.init_attention(k1, cfg),
+            "xattn": L.init_attention(k2, cfg),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+            "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+            "ln_xattn": jnp.zeros((cfg.d_model,), dtype),
+            "ln_mlp": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    return {
+        "embedding": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "pos_dec": L.dense_init(ks[1], (cfg.max_seq, cfg.d_model), dtype,
+                                fan_in=cfg.d_model),
+        "enc": stack(enc_layer, ks[2], n_enc),
+        "dec": stack(dec_layer, ks[3], n_dec),
+        "ln_enc_final": jnp.zeros((cfg.d_model,), dtype),
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, F, D) stub embeddings -> encoder states."""
+    B, F, D = frames.shape
+    x = frames + _sinusoidal(F, D).astype(frames.dtype)
+    x = L.shard(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def body(x, blk):
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        x = x + L.attention(h, blk["attn"], cfg, positions, causal=False, rope=False)
+        h = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        return x + L.mlp(h, blk["mlp"], "gelu"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return L.rms_norm(x, params["ln_enc_final"], cfg.norm_eps)
+
+
+def _dec_trunk(params, x, cfg, positions, enc_out, enc_pos, collect_kv=False):
+    def body(x, blk):
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        _, k, v = L._qkv(h, blk["attn"], cfg, positions, rope=False)
+        x = x + L.attention(
+            h, blk["attn"], cfg, positions, causal=True, rope=False,
+            kv_override=(k, v, positions),
+        )
+        h = L.rms_norm(x, blk["ln_xattn"], cfg.norm_eps)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out, blk["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out, blk["xattn"]["wv"])
+        x = x + L.attention(
+            h, blk["xattn"], cfg, positions, causal=False, rope=False,
+            kv_override=(xk, xv, enc_pos),
+        )
+        h = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        ys = (k, v, xk, xv) if collect_kv else None
+        return x + L.mlp(h, blk["mlp"], "gelu"), ys
+
+    x, kvs = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps), kvs
+
+
+def forward_hidden(params, batch, cfg, collect_kv=False):
+    tokens, frames = batch["tokens"], batch["frames"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = encode(params, frames, cfg)
+    enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]), (B, enc_out.shape[1]))
+    x = L.embed(tokens, params["embedding"]) + params["pos_dec"][:S]
+    x = L.shard(x, "batch", None, None)
+    return _dec_trunk(params, x, cfg, positions, enc_out, enc_pos,
+                      collect_kv=collect_kv)
+
+
+def logits_fn(params, batch, cfg):
+    h, _ = forward_hidden(params, batch, cfg)
+    return L.unembed(h, params["embedding"])
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    h, _ = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    chunk = min(loss_chunk, S)
+    n_chunks = max(1, S // chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, params["embedding"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    return jnp.mean(jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc)))
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    dtype = dtype or cfg.pdtype
+    n = cfg.n_layers
+    H, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n, batch_size, max_len, H, Dh), dtype),
+        "v": jnp.zeros((n, batch_size, max_len, H, Dh), dtype),
+        "xk": jnp.zeros((n, batch_size, cfg.enc_frames, H, Dh), dtype),
+        "xv": jnp.zeros((n, batch_size, cfg.enc_frames, H, Dh), dtype),
+    }
+
+
+def prefill(params, batch, cfg, cache):
+    h, kvs = forward_hidden(params, batch, cfg, collect_kv=True)
+    ks, vs, xks, xvs = kvs
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0)),
+        "xk": xks,
+        "xv": xvs,
+    }
+    logits = L.unembed(h[:, -1:], params["embedding"])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """Decoder-only step; cross-attention reads the cached encoder KV."""
+    B = token.shape[0]
+    x = L.embed(token, params["embedding"]) + params["pos_dec"][pos][:, None]
+    batch_idx = jnp.arange(B)
+    F = cache["xk"].shape[2]
+    enc_pos = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def body(x, scanned):
+        blk, ck, cv, xk, xv = scanned
+        h = L.rms_norm(x, blk["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, blk["attn"]["wv"])
+        ck = ck.at[batch_idx, pos].set(k[:, 0])
+        cv = cv.at[batch_idx, pos].set(v[:, 0])
+        x = x + L.decode_attention(q, blk["attn"], ck, cv, pos, cfg)
+        h = L.rms_norm(x, blk["ln_xattn"], cfg.norm_eps)
+        xq = jnp.einsum("bsd,dhk->bshk", h, blk["xattn"]["wq"])
+        # cross attention: all encoder frames visible
+        x = x + L.decode_attention(
+            xq, blk["xattn"], xk, xv, jnp.full((B,), F - 1), cfg
+        )
+        h = L.rms_norm(x, blk["ln_mlp"], cfg.norm_eps)
+        return x + L.mlp(h, blk["mlp"], "gelu"), (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    cache = dict(cache, k=ks, v=vs)
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    return L.unembed(h, params["embedding"])[:, 0], cache
+
+
+register_family(
+    Family(
+        name="audio",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

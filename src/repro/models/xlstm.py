@@ -1,0 +1,401 @@
+"""xLSTM family (arXiv:2405.04517): mLSTM (matrix-memory, chunkwise-
+parallel) and sLSTM (scalar-memory, strictly recurrent) blocks.
+
+Layout: sLSTM every ``cfg.slstm_every`` layers (xLSTM[a:b] notation), the
+rest mLSTM — xlstm-350m uses 24 blocks with 3 sLSTM.  d_ff=0 in the
+assignment: mLSTM blocks carry their own up/down projection (factor 2);
+sLSTM blocks carry a small gated FFN (factor 4/3) per the paper.
+
+mLSTM chunkwise form (per head, exponential-decay linear attention):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ,  n_t = f_t n_{t-1} + i_t k_t
+    y_t = (q_t C_t) / max(|q_t . n_t|, 1)
+implemented with the same intra/inter-chunk split as Mamba2's SSD; the
+normalizer n is carried as an extra value column.
+
+sLSTM: stabilized exponential gating with per-head block-diagonal
+recurrent matrices, as a lax.scan over time (sequential by construction —
+this is the architecture's documented trade-off, not an implementation
+shortcut).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import Family, register_family
+from repro.models.mamba2 import _segsum
+
+
+def d_inner(cfg) -> int:
+    return 2 * cfg.d_model
+
+
+def mlstm_heads(cfg) -> int:
+    return cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg):
+    dtype = cfg.pdtype
+    D, di, H = cfg.d_model, d_inner(cfg), mlstm_heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w_up": L.dense_init(ks[0], (D, 2 * di), dtype, fan_in=D),
+        "wq": L.dense_init(ks[1], (di, di), dtype),
+        "wk": L.dense_init(ks[2], (di, di), dtype),
+        "wv": L.dense_init(ks[3], (di, di), dtype),
+        "w_i": L.dense_init(ks[4], (di, H), jnp.float32),
+        "w_f": L.dense_init(ks[5], (di, H), jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # init: remember
+        "ln_inner": jnp.zeros((di,), dtype),
+        "w_down": L.dense_init(ks[6], (di, D), dtype, fan_in=di),
+    }
+
+
+def mlstm_chunked(q, k, v, logf, logi, chunk: int, init_state=None):
+    """q,k,v: (b,s,h,d); logf,logi: (b,s,h).  Returns (y, final_C).
+
+    The normalizer is appended as an extra column of v, so state C is
+    (b, h, dk, dv+1).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_ext = jnp.concatenate([v, ones], -1)                 # (b,s,h,dv+1)
+    # fold the input gate into the value contribution
+    v_ext = v_ext * jnp.exp(logi)[..., None].astype(v.dtype)
+
+    c = s // chunk
+    qr = q.reshape(b, c, chunk, h, dk)
+    kr = k.reshape(b, c, chunk, h, dk)
+    vr = v_ext.reshape(b, c, chunk, h, dv + 1)
+    ar = logf.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    a_cs = jnp.cumsum(ar, -1)
+
+    Lm = jnp.exp(_segsum(ar))                              # (b,h,c,q,kq)
+    scores = jnp.einsum("bcqhd,bckhd->bhcqk", qr, kr)
+    Y_diag = jnp.einsum("bhcqk,bhcqk,bckhe->bcqhe", scores, Lm, vr)
+
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)
+    states = jnp.einsum("bckhd,bhck,bckhe->bchde", kr, decay_states, vr)
+    chunk_decay = jnp.exp(a_cs[..., -1])
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dv + 1), jnp.float32)
+
+    def scan_fn(cprev, inp):
+        st, dec = inp
+        return cprev * dec[..., None, None] + st, cprev
+
+    final, prev = jax.lax.scan(
+        scan_fn, init_state,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(2, 0, 1)),
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)                   # (b,c,h,dk,dv+1)
+    state_decay = jnp.exp(a_cs)
+    Y_off = jnp.einsum(
+        "bcqhd,bchde,bhcq->bcqhe", qr, prev.astype(q.dtype), state_decay
+    )
+    y_ext = (Y_diag + Y_off).reshape(b, s, h, dv + 1)
+    y, norm = y_ext[..., :dv], y_ext[..., dv:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    return y, final
+
+
+def mlstm_block(x, p, cfg, state=None):
+    """x: (B,S,D).  state: C (B,H,dk,dv+1) for decode, or None."""
+    B, S, D = x.shape
+    di, H = d_inner(cfg), mlstm_heads(cfg)
+    dh = di // H
+    h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h_in, p["w_up"])
+    z, m = jnp.split(up, 2, -1)
+
+    q = jnp.einsum("bse,ef->bsf", m, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", m, p["wk"]).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", m, p["wv"]).reshape(B, S, H, dh)
+    logi = jnp.einsum("bse,eh->bsh", m.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", m.astype(jnp.float32), p["w_f"]) + p["b_f"]
+    )
+    # stabilize the input gate (exp can overflow): subtract a running cap
+    logi = jnp.minimum(logi, 10.0)
+
+    if state is None or S > 1:
+        y, final = mlstm_chunked(q, k, v, logf, logi,
+                                 min(cfg.ssm_chunk or 64, S), init_state=state)
+    else:
+        # one-step recurrent decode
+        C = state                                           # (B,H,dk,dv+1)
+        ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+        v_ext = (jnp.concatenate([v, ones], -1)
+                 * jnp.exp(logi)[..., None].astype(v.dtype))[:, 0]
+        f = jnp.exp(logf)[:, 0]                             # (B,H)
+        C = C * f[..., None, None] + jnp.einsum(
+            "bhd,bhe->bhde", k[:, 0].astype(jnp.float32),
+            v_ext.astype(jnp.float32))
+        y_ext = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), C)
+        yv, norm = y_ext[..., :-1], y_ext[..., -1:]
+        y = (yv / jnp.maximum(jnp.abs(norm), 1.0))[:, None].astype(x.dtype)
+        final = C
+
+    # chunked path mixes f32 decay factors in; pin back to residual dtype
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = L.rms_norm(y, p["ln_inner"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", y, p["w_down"]), final
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_ff(cfg) -> int:
+    return max(64, (4 * cfg.d_model // 3 + 63) // 64 * 64)
+
+
+def init_slstm(key, cfg):
+    dtype = cfg.pdtype
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 12)
+    p = {"ln": jnp.zeros((D,), dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"W{g}"] = L.dense_init(ks[i], (D, D), jnp.float32)
+        p[f"R{g}"] = L.dense_init(ks[4 + i], (H, dh, dh), jnp.float32, fan_in=dh)
+        p[f"b{g}"] = (jnp.full((D,), 3.0, jnp.float32) if g == "f"
+                      else jnp.zeros((D,), jnp.float32))
+    ff = slstm_ff(cfg)
+    p["ffn"] = L.init_mlp(ks[8], D, ff, dtype, "swiglu")
+    p["ln_ffn"] = jnp.zeros((D,), dtype)
+    return p
+
+
+def slstm_scan(x, p, cfg, init=None):
+    """x: (B,S,D) -> (B,S,D); stabilized exponential-gating recurrence."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xf = x.astype(jnp.float32)
+    pre = {g: jnp.einsum("bsd,de->bse", xf, p[f"W{g}"]) + p[f"b{g}"]
+           for g in ("z", "i", "f", "o")}
+
+    if init is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        init = {"c": zeros, "n": zeros, "h": zeros, "m": zeros - 1e30 * 0}
+
+    def step(carry, inp):
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        pz, pi, pf, po = inp
+        rec = {g: jnp.einsum("bhd,hde->bhe", h, p[f"R{g}"]) for g in "zifo"}
+        z = jnp.tanh(pz.reshape(B, H, dh) + rec["z"])
+        i_log = pi.reshape(B, H, dh) + rec["i"]
+        f_log = jax.nn.log_sigmoid(pf.reshape(B, H, dh) + rec["f"])
+        o = jax.nn.sigmoid(po.reshape(B, H, dh) + rec["o"])
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_p = jnp.exp(i_log - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+    xs = tuple(pre[g].transpose(1, 0, 2) for g in "zifo")
+    final, hs = jax.lax.scan(step, init, xs)              # hs: (S, B, H, dh)
+    return hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype), final
+
+
+def slstm_block(x, p, cfg, state=None):
+    h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, final = slstm_scan(h_in, p, cfg, init=state)
+    x = x + y
+    h2 = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    return x + L.mlp(h2, p["ffn"], "swiglu"), final
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg):
+    """(n_periods, mlstm_per_period, n_trailing_mlstm).  One sLSTM closes
+    each period."""
+    if cfg.slstm_every <= 0:
+        return 0, 0, cfg.n_layers
+    n_per = cfg.n_layers // cfg.slstm_every
+    trailing = cfg.n_layers - n_per * cfg.slstm_every
+    return n_per, cfg.slstm_every - 1, trailing
+
+
+def init_params(key, cfg):
+    dtype = cfg.pdtype
+    n_per, m_per, trailing = layer_plan(cfg)
+    ks = jax.random.split(key, 6)
+
+    def stack2(init_fn, k, n0, n1):
+        return jax.vmap(
+            lambda kk: jax.vmap(lambda k3: init_fn(k3))(jax.random.split(kk, n1))
+        )(jax.random.split(k, n0))
+
+    params = {
+        "embedding": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "mlstm_seg": stack2(lambda k: init_mlstm(k, cfg), ks[1], n_per, m_per)
+        if n_per and m_per else None,
+        "slstm": jax.vmap(lambda k: init_slstm(k, cfg))(jax.random.split(ks[2], n_per))
+        if n_per else None,
+        "mlstm_tail": jax.vmap(lambda k: init_mlstm(k, cfg))(
+            jax.random.split(ks[3], trailing)) if trailing else None,
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": L.init_embedding(ks[4], cfg.vocab, cfg.d_model, dtype),
+    }
+    return params
+
+
+def forward_hidden(params, batch, cfg, cache=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.shard(L.embed(tokens, params["embedding"]), "batch", None, None)
+    n_per, m_per, trailing = layer_plan(cfg)
+    new_cache = {} if cache is not None else None
+
+    if n_per:
+        def period(x, seg):
+            mls, sls = seg
+
+            def inner(x, lyr):
+                x, st = mlstm_block(x, lyr, cfg)
+                return x, st
+
+            if m_per:
+                x, mstates = jax.lax.scan(inner, x, mls)
+            else:
+                mstates = None
+            x, sstate = slstm_block(x, sls, cfg)
+            return x, (mstates, sstate)
+
+        x, states = jax.lax.scan(
+            jax.checkpoint(period), x, (params["mlstm_seg"], params["slstm"])
+        )
+        if new_cache is not None:
+            new_cache["m_seg"], new_cache["s_seg"] = states
+    if trailing:
+        def inner(x, lyr):
+            x, st = mlstm_block(x, lyr, cfg)
+            return x, st
+        x, tstates = jax.lax.scan(jax.checkpoint(inner), x, params["mlstm_tail"])
+        if new_cache is not None:
+            new_cache["m_tail"] = tstates
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps), new_cache
+
+
+def logits_fn(params, batch, cfg):
+    h, _ = forward_hidden(params, batch, cfg)
+    return L.unembed(h, params["lm_head"])
+
+
+def loss(params, batch, cfg, *, loss_chunk: int = 512):
+    h, _ = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    n_chunks = max(1, S // loss_chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hx, lx = args
+        logits = L.unembed(hx, params["lm_head"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    return jnp.mean(jax.lax.map(jax.checkpoint(chunk_loss), (hc, lc)))
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    n_per, m_per, trailing = layer_plan(cfg)
+    di, H = d_inner(cfg), mlstm_heads(cfg)
+    dh = di // H
+    D = cfg.d_model
+    dhs = D // cfg.n_heads
+    mstate = jnp.zeros((batch_size, H, dh, dh + 1), jnp.float32)
+    zeros = jnp.zeros((batch_size, cfg.n_heads, dhs), jnp.float32)
+    sstate = {"c": zeros, "n": zeros, "h": zeros, "m": zeros}
+
+    def rep(x, *dims):
+        out = x
+        for d in reversed(dims):
+            out = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (d,) + l.shape), out)
+        return out
+
+    return {
+        "m_seg": rep(mstate, n_per, m_per) if n_per and m_per else None,
+        "s_seg": rep(sstate, n_per) if n_per else None,
+        "m_tail": rep(mstate, trailing) if trailing else None,
+    }
+
+
+def prefill(params, batch, cfg, cache):
+    h, new_cache = forward_hidden(params, batch, cfg, cache=cache)
+    logits = L.unembed(h[:, -1:], params["lm_head"])
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    B = token.shape[0]
+    x = L.embed(token, params["embedding"])
+    n_per, m_per, trailing = layer_plan(cfg)
+    cache = dict(cache)
+
+    if n_per:
+        def period(x, seg):
+            mls, sls, mst, sst = seg
+
+            def inner(x, inp):
+                lyr, st = inp
+                x, nst = mlstm_block(x, lyr, cfg, state=st)
+                return x, nst
+
+            if m_per:
+                x, nm = jax.lax.scan(inner, x, (mls, mst))
+            else:
+                nm = mst
+            x, ns = slstm_block(x, sls, cfg, state=sst)
+            return x, (nm, ns)
+
+        x, (nm, ns) = jax.lax.scan(
+            period, x,
+            (params["mlstm_seg"], params["slstm"], cache["m_seg"], cache["s_seg"]),
+        )
+        cache.update(m_seg=nm, s_seg=ns)
+    if trailing:
+        def inner(x, inp):
+            lyr, st = inp
+            x, nst = mlstm_block(x, lyr, cfg, state=st)
+            return x, nst
+        x, nt = jax.lax.scan(inner, x, (params["mlstm_tail"], cache["m_tail"]))
+        cache.update(m_tail=nt)
+
+    h = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    return L.unembed(h, params["lm_head"])[:, 0], cache
+
+
+register_family(
+    Family(
+        name="ssm",
+        init_params=init_params,
+        forward=logits_fn,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+)

@@ -1,0 +1,93 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+Minimal, stateless-API optimizers used by both the FL simulation (client
+Adam, paper Sec. 3.1: lr=1e-3) and the large-architecture SPMD training
+path.  State is a pytree shaped like the params, so it shards identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamState:
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=z, nu=jax.tree_util.tree_map(jnp.copy, z))
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+class SGDState(NamedTuple):
+    mom: dict
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: float = 0.01
+    momentum: float = 0.0
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            mom=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        )
+
+    def update(self, grads, state: SGDState, params):
+        if self.momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: self.momentum * m + g.astype(jnp.float32), state.mom, grads
+            )
+            eff = mom
+        else:
+            mom, eff = state.mom, grads
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            eff,
+        )
+        return new_params, SGDState(mom=mom)
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adam":
+        return Adam(**kw)
+    if name == "sgd":
+        return SGD(**kw)
+    raise ValueError(name)

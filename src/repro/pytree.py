@@ -1,0 +1,71 @@
+"""Small pytree utilities shared across the framework.
+
+Pure functions over parameter pytrees: global norms, scaling, linear
+combinations, flattening for the DP clip kernel, and deterministic
+per-leaf RNG splitting for noise injection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """L2 norm over every leaf of a pytree (float32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda l: l * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_lin(a, b, wa, wb):
+    """wa*a + wb*b leafwise (used by FedAsync merge, Eq. 11)."""
+    return jax.tree_util.tree_map(lambda x, y: wa * x + wb * y, a, b)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_gaussian_like(key, tree, stddev):
+    """Add iid N(0, stddev^2) noise of each leaf's shape; deterministic split."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype) * stddev
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def tree_size(tree) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_flatten_to_vector(tree) -> jax.Array:
+    """Concatenate all leaves into one flat f32 vector (kernel interface)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def tree_unflatten_from_vector(vec, tree):
+    """Inverse of tree_flatten_to_vector given a template tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        out.append(vec[off : off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)

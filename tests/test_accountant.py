@@ -1,0 +1,118 @@
+"""Moments Accountant: unit + property tests (hypothesis).
+
+Anchors: Abadi et al. report eps ~= 1.26 for q=0.01, sigma=4, T=1e4,
+delta=1e-5 with the moments accountant — we must land within a few percent.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accountant import (
+    MomentsAccountant,
+    compute_epsilon,
+    delta_from_moments,
+    epsilon_from_moments,
+    log_moment_subsampled_gaussian,
+)
+
+
+def test_abadi_anchor():
+    eps = compute_epsilon(q=0.01, sigma=4.0, steps=10_000, delta=1e-5)
+    assert 1.15 < eps < 1.35, eps
+
+
+def test_strong_composition_beats_naive():
+    """MA must beat naive eps*T composition by a wide margin."""
+    eps1 = compute_epsilon(q=0.01, sigma=4.0, steps=1, delta=1e-5)
+    epsT = compute_epsilon(q=0.01, sigma=4.0, steps=10_000, delta=1e-5)
+    assert epsT < 0.05 * eps1 * 10_000
+
+
+def test_zero_noise_is_infinite():
+    assert math.isinf(compute_epsilon(0.1, 0.0, 10, 1e-5))
+
+
+def test_q_zero_is_free():
+    assert compute_epsilon(0.0, 1.0, 1000, 1e-5) == pytest.approx(0.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    q=st.floats(0.001, 0.5),
+    sigma=st.floats(0.3, 4.0),
+    lam=st.integers(1, 32),
+)
+def test_log_moment_nonnegative_finite(q, sigma, lam):
+    mu = log_moment_subsampled_gaussian(q, sigma, lam)
+    assert mu >= -1e-9
+    assert math.isfinite(mu)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    q=st.floats(0.01, 0.3),
+    sigma=st.floats(0.5, 3.0),
+    t1=st.integers(1, 200),
+    t2=st.integers(1, 200),
+)
+def test_epsilon_monotone_in_steps(q, sigma, t1, t2):
+    """More steps => more privacy loss (composability, paper Sec 2.3)."""
+    lo, hi = sorted((t1, t2))
+    e_lo = compute_epsilon(q, sigma, lo, 1e-5)
+    e_hi = compute_epsilon(q, sigma, hi, 1e-5)
+    assert e_hi >= e_lo - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    q=st.floats(0.01, 0.3),
+    s1=st.floats(0.4, 3.0),
+    s2=st.floats(0.4, 3.0),
+    steps=st.integers(1, 300),
+)
+def test_epsilon_monotone_in_sigma(q, s1, s2, steps):
+    """More noise => less privacy loss (paper Sec 4.2.3 observation)."""
+    lo, hi = sorted((s1, s2))
+    e_weak = compute_epsilon(q, lo, steps, 1e-5)
+    e_strong = compute_epsilon(q, hi, steps, 1e-5)
+    assert e_strong <= e_weak + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    q=st.floats(0.01, 0.3),
+    sigma=st.floats(0.5, 3.0),
+    steps=st.integers(1, 100),
+)
+def test_additivity_of_moments(q, sigma, steps):
+    """mu(lambda) of k steps == k * mu(lambda) of one step (paper Eq. 8)."""
+    a = MomentsAccountant()
+    a.step(q, sigma, steps)
+    b = MomentsAccountant()
+    for _ in range(min(steps, 10)):
+        b.step(q, sigma, 1)
+    if steps <= 10:
+        np.testing.assert_allclose(a._mu, b._mu, rtol=1e-12)
+
+
+def test_eps_delta_roundtrip():
+    acc = MomentsAccountant()
+    acc.step(0.1, 1.0, 50)
+    eps = acc.epsilon(1e-5)
+    # delta at that eps should be <= 1e-5 (tightness of min over lambda)
+    assert acc.delta(eps) <= 1e-5 * (1 + 1e-6)
+
+
+def test_heterogeneous_clients_disparity():
+    """A client updating 6x more often accrues much larger eps — the
+    paper's central privacy-disparity mechanism (Table 3).  Note eps is
+    sublinear in steps (composition is sqrt-ish), so 6x updates yields
+    ~2.6x eps at sigma=0.5 — the paper's 5x gap corresponds to its larger
+    observed participation ratios."""
+    slow, fast = MomentsAccountant(), MomentsAccountant()
+    slow.step(0.136, 0.5, 8)          # HW_T1-ish: few rounds
+    fast.step(0.136, 0.5, 48)         # HW_T5-ish: 6x the rounds
+    e_slow, e_fast = slow.epsilon(1e-5), fast.epsilon(1e-5)
+    assert e_fast > 2.0 * e_slow

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+variant of each assigned architecture family (<=2 layers, d_model<=512,
+<=4 experts) runs one forward + one FL-DP train step on CPU; output shapes
+and finiteness are asserted.  The FULL configs are exercised only by the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.dp import DPConfig
+from repro.core.fl_step import FLStepConfig, make_fl_train_step, make_server_optimizer
+from repro.models.base import get_family
+
+SEQ = 64
+BATCH = 4
+
+
+def _batch_for(cfg, key):
+    toks = jax.random.randint(key, (BATCH, SEQ), 0, cfg.vocab)
+    # next-token labels (tokens==labels would let tied-embedding models
+    # trivially predict the current token through the residual stream)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (BATCH, cfg.enc_frames, cfg.d_model), cfg.pdtype)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (BATCH, cfg.n_patches, cfg.d_model), cfg.pdtype)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    arch_id = request.param
+    cfg = get_config(arch_id).reduced().replace(
+        param_dtype="float32", ssm_chunk=min(32, SEQ))
+    fam = get_family(cfg.family)
+    key = jax.random.PRNGKey(0)
+    params = fam.init_params(key, cfg)
+    batch = _batch_for(cfg, key)
+    return arch_id, cfg, fam, params, batch
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch_id, cfg, fam, params, batch = arch_setup
+    logits = fam.forward(params, batch, cfg)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab), arch_id
+    assert bool(jnp.isfinite(logits).all()), f"{arch_id}: non-finite logits"
+
+
+def test_loss_scalar_reasonable(arch_setup):
+    arch_id, cfg, fam, params, batch = arch_setup
+    loss = fam.loss(params, batch, cfg)
+    assert loss.shape == ()
+    # random init => loss near ln(V) (aux losses may add a little)
+    assert 0.5 * jnp.log(cfg.vocab) < loss < 3.0 * jnp.log(cfg.vocab), (
+        f"{arch_id}: loss {loss} vs ln(V)={jnp.log(cfg.vocab):.2f}")
+
+
+def test_fl_dp_train_step(arch_setup):
+    """One federated round with per-microbatch DP on the reduced arch."""
+    arch_id, cfg, fam, params, batch = arch_setup
+    G = 2
+    fl = FLStepConfig(
+        num_clients=G, n_local=1, n_micro=2, local_lr=0.05,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.5,
+                    granularity="per_microbatch"),
+        compute_dtype="float32",
+    )
+    step = make_fl_train_step(lambda p, b: fam.loss(p, b, cfg), fl)
+    sopt = make_server_optimizer(fl)
+    master = jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), params)
+    opt_state = sopt.init(master)
+    weights = jnp.ones((G,)) / G
+    new_master, _, metrics = step(master, opt_state, batch, weights,
+                                  jax.random.PRNGKey(1))
+    # params moved, finitely
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), master, new_master)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0, f"{arch_id}: no update"
+    for l in jax.tree_util.tree_leaves(new_master):
+        assert bool(jnp.isfinite(l).all()), f"{arch_id}: non-finite params"
+    assert float(metrics["delta_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch_id", ["zamba2-1.2b", "xlstm-350m",
+                                     "whisper-large-v3", "gemma2-2b"])
+def test_bf16_forward_no_dtype_drift(arch_id):
+    """bf16 params must flow through scans without f32 carry promotion
+    (caught a real bug: SSD/mLSTM decay factors promoted the residual)."""
+    cfg = get_config(arch_id).reduced().replace(ssm_chunk=32)  # bf16 default
+    fam = get_family(cfg.family)
+    key = jax.random.PRNGKey(0)
+    params = fam.init_params(key, cfg)
+    batch = _batch_for(cfg, key)
+    loss = fam.loss(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_decode_step_shapes(arch_setup):
+    arch_id, cfg, fam, params, batch = arch_setup
+    B = BATCH
+    cache = fam.init_cache(cfg, B, SEQ + 8)
+    if cfg.family == "audio":
+        # decode needs encoder KV: run prefill first
+        _, cache = fam.prefill(params, batch, cfg, cache)
+    token = batch["tokens"][:, :1]
+    pos = jnp.zeros((B,), jnp.int32) + (SEQ if cfg.family == "audio" else 0)
+    pos = jnp.minimum(pos, SEQ + 7)
+    logits, new_cache = fam.decode_step(params, cache, token, pos, cfg)
+    assert logits.shape == (B, cfg.vocab), arch_id
+    assert bool(jnp.isfinite(logits).all()), arch_id

@@ -1,0 +1,94 @@
+"""Attention-layer semantics: sliding window, GQA, chunking equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.base import ArchConfig
+
+
+def _cfg(**kw):
+    base = dict(arch_id="t", family="dense", source="t", n_layers=1,
+                d_model=64, n_heads=4, n_kv_heads=2, d_ff=64, vocab=16,
+                param_dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = L.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 96, 64), jnp.float32)
+    return cfg, p, x
+
+
+def test_window_ge_seq_equals_full(setup):
+    cfg, p, x = setup
+    full = L.attention(x, p, cfg, causal=True)
+    windowed = L.attention(x, p, cfg, causal=True, window=4096)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(windowed),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_small_window_changes_output(setup):
+    cfg, p, x = setup
+    full = L.attention(x, p, cfg, causal=True)
+    win = L.attention(x, p, cfg, causal=True, window=8)
+    assert float(jnp.abs(full - win).max()) > 1e-3
+
+
+def test_window_locality(setup):
+    """With window w, output at position i must not depend on tokens
+    older than i-w+1."""
+    cfg, p, x = setup
+    w = 16
+    out = L.attention(x, p, cfg, causal=True, window=w)
+    x2 = x.at[:, :40].set(jax.random.normal(jax.random.PRNGKey(9),
+                                            (2, 40, 64)))
+    out2 = L.attention(x2, p, cfg, causal=True, window=w)
+    # positions >= 40 + w see none of the perturbed prefix
+    tail = slice(40 + w, None)
+    np.testing.assert_allclose(np.asarray(out[:, tail]),
+                               np.asarray(out2[:, tail]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_q_chunking_invariance(setup):
+    cfg, p, x = setup
+    a = L.attention(x, p, cfg, causal=True, q_chunk=1024)   # unchunked
+    b = L.attention(x, p, cfg, causal=True, q_chunk=32)     # 3 chunks
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA (kv=2, H=4) must equal MHA with explicitly repeated kv heads."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p = L.init_attention(key, cfg)
+    x = jax.random.normal(key, (1, 32, 64), jnp.float32)
+    out = L.attention(x, p, cfg, causal=True)
+
+    cfg_mha = _cfg(n_kv_heads=4)
+    p_mha = dict(p, wk=jnp.repeat(p["wk"], 2, axis=1),
+                 wv=jnp.repeat(p["wv"], 2, axis=1))
+    out_mha = L.attention(x, p_mha, cfg_mha, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_mha),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softcap_bounds_logits_effect():
+    """With a tiny softcap the distribution flattens toward uniform-value
+    average; with cap -> inf it matches uncapped."""
+    cfg_nc = _cfg()
+    cfg_bigcap = _cfg(attn_logit_softcap=1e6)
+    key = jax.random.PRNGKey(5)
+    p = L.init_attention(key, cfg_nc)
+    x = jax.random.normal(key, (1, 24, 64), jnp.float32)
+    a = L.attention(x, p, cfg_nc, causal=True)
+    b = L.attention(x, p, cfg_bigcap, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)

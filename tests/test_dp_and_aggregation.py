@@ -1,0 +1,153 @@
+"""DP-SGD primitives and aggregation strategies: unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import AdaptiveAsync, FedAsync, FedAvg, FedBuff, make_strategy
+from repro.core.dp import DPConfig, clip_tree, dp_mean_gradient, noise_tree
+from repro.pytree import tree_global_norm, tree_lin, tree_sub
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": jax.random.normal(k1, (4, 8)) * scale,
+        "b": {"c": jax.random.normal(k2, (16,)) * scale},
+    }
+
+
+# ---------------------------------------------------------------------------
+# clipping (Eq. 4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(scale=st.floats(0.01, 50.0), clip=st.floats(0.1, 5.0), seed=st.integers(0, 2**31))
+def test_clip_bounds_global_norm(scale, clip, seed):
+    t = _tree(jax.random.PRNGKey(seed), scale)
+    clipped, pre = clip_tree(t, clip)
+    post = tree_global_norm(clipped)
+    assert float(post) <= clip * (1 + 1e-4)
+    # no-op when already within the ball
+    if float(pre) <= clip:
+        np.testing.assert_allclose(
+            np.asarray(clipped["a"]), np.asarray(t["a"]), rtol=1e-5)
+
+
+def test_clip_preserves_direction():
+    t = _tree(jax.random.PRNGKey(0), 10.0)
+    clipped, _ = clip_tree(t, 1.0)
+    ratio = np.asarray(t["a"]) / np.asarray(clipped["a"])
+    assert np.allclose(ratio, ratio.flat[0], rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-example DP gradient (Eq. 4-6)
+# ---------------------------------------------------------------------------
+
+def _quad_loss(params, ex):
+    return jnp.sum((params["w"] * ex["x"] - ex["y"]) ** 2)
+
+
+def test_dp_mean_gradient_noise_scale():
+    """With sigma=0 the DP mean equals the clipped-mean; with sigma>0 the
+    deviation matches sigma*C/B statistically."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.ones((8,))}
+    B = 64
+    batch = {"x": jax.random.normal(key, (B, 8)), "y": jnp.zeros((B, 8))}
+    cfg0 = DPConfig(clip_norm=1.0, noise_multiplier=0.0)
+    g0, aux = dp_mean_gradient(_quad_loss, params, batch, key, cfg0)
+    assert 0.0 <= float(aux["clip_fraction"]) <= 1.0
+    # per-sample clipped norms <= C implies mean norm <= C
+    assert float(tree_global_norm(g0)) <= 1.0 + 1e-5
+
+    cfg1 = DPConfig(clip_norm=1.0, noise_multiplier=2.0)
+    devs = []
+    for s in range(8):
+        g1, _ = dp_mean_gradient(_quad_loss, params, batch,
+                                 jax.random.PRNGKey(s), cfg1)
+        devs.append(float(tree_global_norm(tree_sub(g1, g0))))
+    # E||noise|| ~ sigma*C/B * sqrt(dim): dim=8 -> 2/64*2.83 ~ 0.088
+    mean_dev = np.mean(devs)
+    assert 0.03 < mean_dev < 0.3, mean_dev
+
+
+def test_dp_kernel_path_matches_jnp_path():
+    key = jax.random.PRNGKey(1)
+    params = {"w": jnp.ones((16,))}
+    batch = {"x": jax.random.normal(key, (32, 16)), "y": jnp.zeros((32, 16))}
+    cfg = DPConfig(clip_norm=0.7, noise_multiplier=0.0)
+    g_jnp, _ = dp_mean_gradient(_quad_loss, params, batch, key, cfg,
+                                use_kernel=False)
+    g_ker, _ = dp_mean_gradient(_quad_loss, params, batch, key, cfg,
+                                use_kernel=True)
+    np.testing.assert_allclose(np.asarray(g_jnp["w"]), np.asarray(g_ker["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# aggregation (Eq. 9-11)
+# ---------------------------------------------------------------------------
+
+def test_fedavg_weighted_mean():
+    t1 = {"w": jnp.ones((4,))}
+    t2 = {"w": 3 * jnp.ones((4,))}
+    out = FedAvg().aggregate(None, [(t1, 100), (t2, 300)])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5)  # (1*1+3*3)/4
+
+
+@settings(max_examples=40, deadline=None)
+@given(alpha=st.floats(0.05, 1.0), tau=st.integers(0, 50))
+def test_fedasync_weight_decays_with_staleness(alpha, tau):
+    s = FedAsync(alpha=alpha)
+    w = s.mixing_weight(tau)
+    assert w == pytest.approx(alpha / (1 + tau))
+    assert s.mixing_weight(tau + 1) < w
+
+
+def test_fedasync_merge_convex():
+    """Merged params stay on the segment between global and client (Eq 11)."""
+    g = {"w": jnp.zeros((4,))}
+    c = {"w": jnp.ones((4,))}
+    merged, a_k = FedAsync(alpha=0.6).merge(g, c, staleness=2)
+    np.testing.assert_allclose(np.asarray(merged["w"]), 0.2)  # 0.6/3
+    assert 0 < a_k <= 0.6
+
+
+def test_fedasync_nostale_constant_weight():
+    s = make_strategy("fedasync_nostale", alpha=0.4)
+    assert s.mixing_weight(0) == s.mixing_weight(10) == 0.4
+
+
+def test_fedbuff_applies_every_k():
+    s = FedBuff(alpha=0.5, buffer_size=3)
+    g = {"w": jnp.zeros((2,))}
+    c = {"w": jnp.ones((2,))}
+    out1, applied1, _ = s.offer(g, c, 0)
+    out2, applied2, _ = s.offer(g, c, 1)
+    out3, applied3, _ = s.offer(g, c, 2)
+    assert (applied1, applied2, applied3) == (False, False, True)
+    assert out3 is not None
+    assert 0 < float(out3["w"][0]) < 1
+
+
+def test_adaptive_async_throttles_by_privacy_spend():
+    s = AdaptiveAsync(alpha=0.6, eps_target=8.0)
+    fresh = s.mixing_weight(0, eps_spent=0.0)
+    spent = s.mixing_weight(0, eps_spent=7.9)
+    assert spent < 0.2 * fresh
+
+
+# ---------------------------------------------------------------------------
+# fairness metrics
+# ---------------------------------------------------------------------------
+
+def test_fairness_metrics():
+    from repro.core.fairness import jain_index, participation_percentages, privacy_disparity
+    pp = participation_percentages({"a": 80, "b": 20})
+    assert pp["a"] == 80.0
+    assert jain_index([1, 1, 1, 1]) == pytest.approx(1.0)
+    assert jain_index([1, 0, 0, 0]) == pytest.approx(0.25)
+    assert privacy_disparity({"a": 35.0, "b": 7.0}) == pytest.approx(5.0)

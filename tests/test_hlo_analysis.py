@@ -1,0 +1,59 @@
+"""The HLO walker must reproduce known FLOP counts: matmuls with and
+without scan wrappers (trip-count multiplication is the whole point)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.hlo_analysis import analyze
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    txt = _compiled_text(lambda x, y: x @ y, a, b)
+    res = analyze(txt)
+    expected = 2 * 128 * 512 * 256
+    assert res["dot_flops"] == pytest.approx(expected, rel=0.01), res
+
+
+def test_scan_multiplies_flops():
+    """A matmul inside a scan of length N must count N times."""
+    N = 7
+    w = jnp.zeros((N, 64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def fn(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    txt = _compiled_text(fn, x, w)
+    res = analyze(txt)
+    expected = N * 2 * 8 * 64 * 64
+    assert res["dot_flops"] == pytest.approx(expected, rel=0.05), res
+
+
+def test_nested_scan_multiplies():
+    N, M = 3, 5
+    w = jnp.zeros((N, M, 32, 32), jnp.float32)
+    x = jnp.zeros((4, 32), jnp.float32)
+
+    def fn(x, w):
+        def outer(c, wo):
+            def inner(c2, wi):
+                return c2 @ wi, None
+            c, _ = jax.lax.scan(inner, c, wo)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    txt = _compiled_text(fn, x, w)
+    res = analyze(txt)
+    expected = N * M * 2 * 4 * 32 * 32
+    assert res["dot_flops"] == pytest.approx(expected, rel=0.05), res
