@@ -198,6 +198,70 @@ def bench_table3_privacy(sigmas=(0.5, 1.0, 2.0), alphas=(0.2, 0.6),
 
 
 # ---------------------------------------------------------------------------
+# Engine throughput: legacy per-client loop vs cohort-batched engine
+# ---------------------------------------------------------------------------
+
+def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
+    """Wall-clock of the SAME virtual FedAsync workload (>= 8 clients,
+    synthetic SER, eval disabled) under three execution paths:
+
+      * legacy   — per-client Python event loop, one jit call per minibatch
+      * cohort_w0 — cohort engine, window=0 (size-1 cohorts: measures the
+                    whole-local-round fusion alone)
+      * cohort_wN — cohort engine with a staleness window (multi-client
+                    cohorts through the compiled stacked step)
+
+    A warmup pass per engine config is excluded from the timing so the
+    numbers compare steady-state execution, not XLA compiles (the engine's
+    compiled programs are cached across runs — see repro.engine.cohort_step).
+    """
+    import time as _time
+
+    from repro.engine import EngineConfig
+
+    cfg = TestbedConfig(use_dp=True, sigma=1.0, batch_size=32,
+                        num_clients=num_clients,
+                        data=SERDataConfig(n_total=200 * num_clients),
+                        seed=seed)
+
+    def run(engine, ec=None, n=updates):
+        t0 = _time.perf_counter()
+        _, log = run_experiment("fedasync", cfg, max_updates=n, alpha=0.4,
+                                eval_every=10 ** 9, engine=engine,
+                                engine_cfg=ec)
+        return _time.perf_counter() - t0, log
+
+    ec_w = EngineConfig(staleness_window=window)
+    ec_0 = EngineConfig(staleness_window=0.0)
+    # warmup: compile every shape the timed runs will hit — the engine's
+    # cohort shapes AND the legacy per-step jit (every path pays its XLA
+    # compiles here, outside the timed region)
+    run("cohort", ec_w, n=max(8, 2 * ec_w.max_cohort))
+    run("cohort", ec_0, n=4)
+    run("legacy", n=4)
+
+    t_legacy, _ = run("legacy")
+    t_w0, log_w0 = run("cohort", ec_0)
+    t_wN, log_wN = run("cohort", ec_w)
+
+    rows = []
+    for name, t, log in (("legacy", t_legacy, None),
+                         ("cohort_w0", t_w0, log_w0),
+                         (f"cohort_w{window:g}", t_wN, log_wN)):
+        rows.append({
+            "engine": name,
+            "num_clients": num_clients,
+            "updates": updates,
+            "wall_s": round(t, 2),
+            "updates_per_s": round(updates / t, 2),
+            "speedup_vs_legacy": round(t_legacy / t, 2),
+            "mean_cohort": (round(float(np.mean(log.cohort_sizes)), 2)
+                            if log and log.cohort_sizes else None),
+        })
+    return _write("engine_throughput", rows)
+
+
+# ---------------------------------------------------------------------------
 # Beyond-paper: non-IID ablation (the paper is IID-only; label skew makes
 # low-end marginalization strictly worse because their rare updates are
 # also the only carriers of their label distribution)

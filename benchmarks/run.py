@@ -139,6 +139,16 @@ def main() -> None:
 
         t = time.time()
         rows, hit = run_or_cache(
+            "engine_throughput",
+            lambda: flb.bench_engine_throughput(
+                num_clients=8, updates=24 if args.quick else 48))
+        sp = {r["engine"]: r["speedup_vs_legacy"] for r in rows}
+        _line("engine.throughput", round((time.time() - t) * 1e6),
+              ";".join(f"{k}:{v}x" for k, v in sp.items())
+              + (";cached" if hit else ""))
+
+        t = time.time()
+        rows, hit = run_or_cache(
             "beyond_paper_tradeoffs",
             lambda: flb.bench_beyond_paper(
                 max_updates=100 if args.quick else 240))

@@ -4,6 +4,12 @@ Accountant).
 
     PYTHONPATH=src python examples/fl_ser_tradeoff.py             # reduced
     PYTHONPATH=src python examples/fl_ser_tradeoff.py --full      # paper scale
+    PYTHONPATH=src python examples/fl_ser_tradeoff.py --engine legacy
+
+Runs on the cohort-batched execution engine (repro.engine) by default;
+``--engine legacy`` selects the original per-client event loop and
+``--window`` sets the engine's staleness-tolerance batching window
+(virtual seconds; 0 = exact legacy semantics).
 
 Trains the paper's SER CNN federated for tens of rounds x 5 clients x ~7
 DP-SGD steps per round (several hundred to thousands of optimizer steps),
@@ -27,17 +33,27 @@ def main():
                     help="paper-scale data (5882 clips, B=128)")
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--target", type=float, default=0.75)
+    ap.add_argument("--engine", choices=("cohort", "legacy"),
+                    default="cohort")
+    ap.add_argument("--window", type=float, default=0.0,
+                    help="cohort staleness window in virtual seconds")
     args = ap.parse_args()
+
+    engine_cfg = None
+    if args.engine == "cohort" and args.window > 0:
+        from repro.engine import EngineConfig
+        engine_cfg = EngineConfig(staleness_window=args.window)
+    run_kw = dict(engine=args.engine, engine_cfg=engine_cfg)
 
     data = SERDataConfig() if args.full else SERDataConfig(n_total=2940)
     bsz = 128 if args.full else 64
     cfg = TestbedConfig(use_dp=True, sigma=args.sigma, batch_size=bsz,
                         data=data, seed=0)
-    out = {"sigma": args.sigma, "runs": {}}
+    out = {"sigma": args.sigma, "engine": args.engine, "runs": {}}
 
-    print(f"[driver] FedAvg to {args.target:.0%} ...")
+    print(f"[driver] FedAvg to {args.target:.0%} ({args.engine} engine) ...")
     _, log_avg = run_experiment("fedavg", cfg, rounds=40,
-                                target_acc=args.target)
+                                target_acc=args.target, **run_kw)
     t_avg = log_avg.time_to_accuracy(args.target)
     out["runs"]["fedavg"] = {
         "time_to_target_s": t_avg, "acc": log_avg.global_acc[-1],
@@ -50,7 +66,7 @@ def main():
         print(f"[driver] FedAsync alpha={alpha} ...")
         _, log = run_experiment("fedasync", cfg, max_updates=400,
                                 alpha=alpha, eval_every=5,
-                                target_acc=args.target)
+                                target_acc=args.target, **run_kw)
         t = log.time_to_accuracy(args.target)
         fr = log.fairness()
         out["runs"][f"fedasync_a{alpha}"] = {

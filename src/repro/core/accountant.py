@@ -87,7 +87,12 @@ def delta_from_moments(log_moments: np.ndarray, orders, eps: float) -> float:
     finite = np.isfinite(mu)
     if not finite.any():
         return 1.0
-    return float(min(1.0, np.exp((mu[finite] - orders[finite] * eps)).min()))
+    # exp is monotone: min over lambda of exp(.) = exp(min of the exponent);
+    # a non-negative exponent means delta >= 1, which caps at 1 anyway
+    expo = float((mu[finite] - orders[finite] * eps).min())
+    if expo >= 0.0:
+        return 1.0
+    return math.exp(expo)
 
 
 @dataclass

@@ -127,6 +127,29 @@ class AdaptiveAsync(FedAsync):
         return tree_lin(global_params, client_params, 1.0 - a_k, a_k), a_k
 
 
+def apply_update(strategy, global_params, params_k, tau: int,
+                 eps_spent: float = 0.0):
+    """Route one client update through ``strategy`` (the single switch the
+    legacy loop and the cohort engine both use, so their merge semantics
+    cannot drift).
+
+    Returns ``(new_globals, version_inc, weight)`` where ``version_inc`` is
+    how much the server version advances (0 while FedBuff is buffering).
+    """
+    if isinstance(strategy, FedBuff):
+        new_g, applied, w = strategy.offer(global_params, params_k, tau)
+        if applied:
+            return new_g, 1, w
+        return global_params, 0, w
+    if isinstance(strategy, AdaptiveAsync):
+        new_g, w = strategy.merge(global_params, params_k, tau,
+                                  eps_spent=eps_spent)
+        return new_g, 1, w
+    # FedAsync (staleness-aware or not)
+    new_g, w = strategy.merge(global_params, params_k, tau)
+    return new_g, 1, w
+
+
 def make_strategy(name: str, **kw):
     name = name.lower()
     if name == "fedavg":

@@ -1,0 +1,55 @@
+"""Run bookkeeping shared by the legacy per-client loop and the cohort
+engine: everything the paper's figures/tables need (accuracy-vs-virtual-
+time, per-client participation, staleness, epsilon trajectories, resource
+samples), plus engine-side cohort statistics.
+
+Lives in its own module so both ``repro.core.server`` (legacy loops) and
+``repro.engine`` (cohort-batched loops) can import it without a cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.fairness import fairness_report
+
+
+@dataclass
+class RunLog:
+    strategy: str
+    # time series (one entry per server event / round)
+    times: list = field(default_factory=list)
+    global_acc: list = field(default_factory=list)
+    server_version: list = field(default_factory=list)
+    # per client
+    update_counts: dict = field(default_factory=dict)
+    influence: dict = field(default_factory=dict)   # sum of applied merge weights
+    staleness: dict = field(default_factory=dict)
+    eps_trajectory: dict = field(default_factory=dict)
+    local_acc: dict = field(default_factory=dict)
+    resources: dict = field(default_factory=dict)
+    dropouts: dict = field(default_factory=dict)
+    # engine-only: size of each merged cohort (legacy loops leave it empty)
+    cohort_sizes: list = field(default_factory=list)
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for t, a in zip(self.times, self.global_acc):
+            if a >= target:
+                return t
+        return None
+
+    def fairness(self) -> dict:
+        final_acc = {k: (v[-1] if v else 0.0) for k, v in self.local_acc.items()}
+        final_eps = {k: (v[-1] if v else 0.0) for k, v in self.eps_trajectory.items()}
+        rep = fairness_report(self.update_counts, final_acc, final_eps)
+        total_w = sum(self.influence.values())
+        if total_w > 0:
+            rep["influence_pct"] = {
+                k: 100.0 * v / total_w for k, v in self.influence.items()}
+        return rep
+
+
+def eval_all(clients, params, accuracy_fn, log: RunLog):
+    """Append every client's local-test accuracy to the log."""
+    for c in clients:
+        log.local_acc.setdefault(c.tier, []).append(c.evaluate(params, accuracy_fn))

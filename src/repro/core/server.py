@@ -6,6 +6,15 @@
   completion events; each completion is merged immediately (FedAsync) or
   buffered (FedBuff).  Staleness tau_k = server_version - client_version.
 
+Both are now thin frontends over two interchangeable execution paths:
+
+* ``engine="cohort"`` (default) — the cohort-batched engine in
+  :mod:`repro.engine`: completions within a staleness-tolerance window run
+  as ONE jitted scan+vmap program with a fused weights-vector merge.
+* ``engine="legacy"``           — the original per-client Python event
+  loop below (one jitted step per client per minibatch), kept as the
+  reference implementation for the parity tests.
+
 Both return a :class:`RunLog` with everything the paper's figures/tables
 need: accuracy-vs-virtual-time, per-client participation, staleness,
 epsilon trajectories, and resource samples.
@@ -13,53 +22,15 @@ epsilon trajectories, and resource samples.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
-from repro.core.aggregation import AdaptiveAsync, FedAsync, FedAvg, FedBuff
-from repro.core.client import Client
-from repro.core.fairness import fairness_report
+from repro.core.aggregation import AdaptiveAsync, apply_update
+from repro.core.runlog import RunLog, eval_all
 
-
-@dataclass
-class RunLog:
-    strategy: str
-    # time series (one entry per server event / round)
-    times: list = field(default_factory=list)
-    global_acc: list = field(default_factory=list)
-    server_version: list = field(default_factory=list)
-    # per client
-    update_counts: dict = field(default_factory=dict)
-    influence: dict = field(default_factory=dict)   # sum of applied merge weights
-    staleness: dict = field(default_factory=dict)
-    eps_trajectory: dict = field(default_factory=dict)
-    local_acc: dict = field(default_factory=dict)
-    resources: dict = field(default_factory=dict)
-    dropouts: dict = field(default_factory=dict)
-
-    def time_to_accuracy(self, target: float) -> Optional[float]:
-        for t, a in zip(self.times, self.global_acc):
-            if a >= target:
-                return t
-        return None
-
-    def fairness(self) -> dict:
-        final_acc = {k: (v[-1] if v else 0.0) for k, v in self.local_acc.items()}
-        final_eps = {k: (v[-1] if v else 0.0) for k, v in self.eps_trajectory.items()}
-        rep = fairness_report(self.update_counts, final_acc, final_eps)
-        total_w = sum(self.influence.values())
-        if total_w > 0:
-            rep["influence_pct"] = {
-                k: 100.0 * v / total_w for k, v in self.influence.items()}
-        return rep
-
-
-def _eval_all(clients, params, accuracy_fn, log: RunLog):
-    for c in clients:
-        log.local_acc.setdefault(c.tier, []).append(c.evaluate(params, accuracy_fn))
+# back-compat alias: RunLog used to live here
+_eval_all = eval_all
 
 
 def run_fedavg(
@@ -71,16 +42,77 @@ def run_fedavg(
     seed: int = 0,
     eval_every: int = 1,
     target_acc: Optional[float] = None,
+    engine: str = "cohort",
+    engine_cfg=None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog)."""
+    if engine == "cohort":
+        from repro.engine import run_fedavg_engine
+        return run_fedavg_engine(
+            clients, global_params, accuracy_fn, test_data, rounds=rounds,
+            seed=seed, eval_every=eval_every, target_acc=target_acc,
+            engine_cfg=engine_cfg)
+    if engine != "legacy":
+        raise ValueError(f"unknown execution engine: {engine!r}")
+    return _run_fedavg_legacy(
+        clients, global_params, accuracy_fn, test_data, rounds=rounds,
+        seed=seed, eval_every=eval_every, target_acc=target_acc)
+
+
+def run_async(
+    clients: list,
+    global_params,
+    accuracy_fn: Callable,
+    test_data: dict,
+    strategy,                      # FedAsync / FedBuff / AdaptiveAsync
+    max_updates: int = 300,
+    max_time: Optional[float] = None,
+    seed: int = 0,
+    eval_every: int = 5,
+    target_acc: Optional[float] = None,
+    engine: str = "cohort",
+    engine_cfg=None,
+) -> tuple:
+    """Event-driven asynchronous FL (Eq. 10-11).
+
+    Every client trains continuously: as soon as its update is merged it
+    pulls the fresh globals and starts the next local round.  Completion
+    times come from each client's VirtualClock, so fast tiers complete
+    many rounds while slow tiers finish one (the paper's participation
+    skew emerges, it is not scripted).
+    """
+    if engine == "cohort":
+        from repro.engine import run_async_engine
+        return run_async_engine(
+            clients, global_params, accuracy_fn, test_data, strategy,
+            max_updates=max_updates, max_time=max_time, seed=seed,
+            eval_every=eval_every, target_acc=target_acc,
+            engine_cfg=engine_cfg)
+    if engine != "legacy":
+        raise ValueError(f"unknown execution engine: {engine!r}")
+    return _run_async_legacy(
+        clients, global_params, accuracy_fn, test_data, strategy,
+        max_updates=max_updates, max_time=max_time, seed=seed,
+        eval_every=eval_every, target_acc=target_acc)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-client reference path (parity baseline for the cohort engine)
+# ---------------------------------------------------------------------------
+
+def _run_fedavg_legacy(
+    clients, global_params, accuracy_fn, test_data,
+    rounds=60, seed=0, eval_every=1, target_acc=None,
+) -> tuple:
+    from repro.core.aggregation import FedAvg
     strat = FedAvg()
     log = RunLog(strategy="fedavg")
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
     for c in clients:
         log.update_counts[c.tier] = 0
-        log.staleness[c.tier] = []
-        log.eps_trajectory[c.tier] = []
+        log.staleness.setdefault(c.tier, [])
+        log.eps_trajectory.setdefault(c.tier, [])
 
     for rnd in range(1, rounds + 1):
         updates, durations = [], []
@@ -101,7 +133,7 @@ def run_fedavg(
             log.times.append(t_virtual)
             log.global_acc.append(acc)
             log.server_version.append(rnd)
-            _eval_all(clients, global_params, accuracy_fn, log)
+            eval_all(clients, global_params, accuracy_fn, log)
             if target_acc is not None and acc >= target_acc:
                 break
 
@@ -111,33 +143,17 @@ def run_fedavg(
     return global_params, log
 
 
-def run_async(
-    clients: list,
-    global_params,
-    accuracy_fn: Callable,
-    test_data: dict,
-    strategy,                      # FedAsync / FedBuff / AdaptiveAsync
-    max_updates: int = 300,
-    max_time: Optional[float] = None,
-    seed: int = 0,
-    eval_every: int = 5,
-    target_acc: Optional[float] = None,
+def _run_async_legacy(
+    clients, global_params, accuracy_fn, test_data, strategy,
+    max_updates=300, max_time=None, seed=0, eval_every=5, target_acc=None,
 ) -> tuple:
-    """Event-driven asynchronous FL (Eq. 10-11).
-
-    Every client trains continuously: as soon as its update is merged it
-    pulls the fresh globals and starts the next local round.  Completion
-    times come from each client's VirtualClock, so fast tiers complete
-    many rounds while slow tiers finish one (the paper's participation
-    skew emerges, it is not scripted).
-    """
     log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)
     for c in clients:
         log.update_counts[c.tier] = 0
-        log.influence[c.tier] = 0.0
-        log.staleness[c.tier] = []
-        log.eps_trajectory[c.tier] = []
+        log.influence.setdefault(c.tier, 0.0)
+        log.staleness.setdefault(c.tier, [])
+        log.eps_trajectory.setdefault(c.tier, [])
 
     # Seed the event queue: every client starts training version 0 at t=0.
     heap = []
@@ -161,19 +177,10 @@ def run_async(
         log.update_counts[c.tier] += 1
         log.eps_trajectory[c.tier].append(info["epsilon"])
 
-        if isinstance(strategy, FedBuff):
-            new_g, applied, _w = strategy.offer(global_params, params_k, tau)
-            if applied:
-                global_params = new_g
-                server_version += 1
-        elif isinstance(strategy, AdaptiveAsync):
-            global_params, _w = strategy.merge(
-                global_params, params_k, tau, eps_spent=info["epsilon"]
-            )
-            server_version += 1
-        else:  # FedAsync (staleness-aware or not)
-            global_params, _w = strategy.merge(global_params, params_k, tau)
-            server_version += 1
+        global_params, inc, _w = apply_update(
+            strategy, global_params, params_k, tau,
+            eps_spent=info["epsilon"])
+        server_version += inc
         log.influence[c.tier] += float(_w)
 
         total_updates = sum(log.update_counts.values())
@@ -182,7 +189,7 @@ def run_async(
             log.times.append(t_virtual)
             log.global_acc.append(acc)
             log.server_version.append(server_version)
-            _eval_all(clients, global_params, accuracy_fn, log)
+            eval_all(clients, global_params, accuracy_fn, log)
             if target_acc is not None and acc >= target_acc:
                 done = True
 

@@ -7,7 +7,7 @@ figure/table is a function of (strategy, alpha, sigma, rounds, seed).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -26,7 +26,9 @@ from repro.optim.optimizers import Adam
 
 @dataclass(frozen=True)
 class TestbedConfig:
-    num_clients: int = 5
+    __test__ = False               # keep pytest from collecting this class
+
+    num_clients: int = 5           # >5 cycles the hardware tiers T1..T5
     batch_size: int = 128          # paper: B = 128
     local_epochs: int = 1          # paper: E = 1
     lr: float = 1e-3               # paper: Adam 1e-3
@@ -42,6 +44,20 @@ class TestbedConfig:
     model: ser_cnn.SERConfig = ser_cnn.SERConfig()
 
 
+@lru_cache(maxsize=None)
+def _shared_loss_fn(model_cfg):
+    """One loss closure per model config: jitted steps key on the loss
+    object (static arg / engine step cache), so sharing it across
+    testbeds lets repeated runs reuse compiled programs instead of
+    re-tracing per build_testbed call."""
+    return partial(ser_cnn.loss_fn, cfg=model_cfg)
+
+
+@lru_cache(maxsize=None)
+def _shared_accuracy_fn(model_cfg):
+    return ser_cnn.make_accuracy_fn(model_cfg)
+
+
 def build_testbed(cfg: TestbedConfig):
     """Returns (clients, global_params, accuracy_fn, pooled_test)."""
     raw = generate(cfg.data)
@@ -51,8 +67,8 @@ def build_testbed(cfg: TestbedConfig):
     else:
         parts = iid_partition(raw, cfg.num_clients, seed=cfg.seed)
 
-    loss = partial(ser_cnn.loss_fn, cfg=cfg.model)
-    acc_fn = ser_cnn.make_accuracy_fn(cfg.model)
+    loss = _shared_loss_fn(cfg.model)
+    acc_fn = _shared_accuracy_fn(cfg.model)
     opt = Adam(lr=cfg.lr)
     dp_cfg = DPConfig(
         clip_norm=cfg.clip_norm,
@@ -61,7 +77,8 @@ def build_testbed(cfg: TestbedConfig):
     )
 
     clients, test_pool = [], []
-    for cid, (tier, part) in enumerate(zip(TIERS, parts)):
+    for cid, part in enumerate(parts):
+        tier = TIERS[cid % len(TIERS)]  # >5 clients: cycle the tiers
         tr, te = train_test_split(part, test_frac=0.2, seed=cfg.seed + cid)
         tr = {k: v for k, v in tr.items() if k != "speaker"}
         te = {k: v for k, v in te.items() if k != "speaker"}
@@ -101,15 +118,21 @@ def run_experiment(
     staleness_aware: bool = True,
     target_acc: Optional[float] = None,
     eval_every: int = 1,
+    engine: str = "cohort",
+    engine_cfg=None,
     **strategy_kw,
 ):
-    """One full FL run; returns (params, RunLog)."""
+    """One full FL run; returns (params, RunLog).
+
+    ``engine`` selects the execution path: "cohort" (the batched engine in
+    repro.engine, default) or "legacy" (the per-client reference loop).
+    """
     clients, params, acc_fn, pooled_test = build_testbed(cfg)
     if strategy_name == "fedavg":
         return run_fedavg(
             clients, params, acc_fn, pooled_test,
             rounds=rounds, seed=cfg.seed, target_acc=target_acc,
-            eval_every=eval_every,
+            eval_every=eval_every, engine=engine, engine_cfg=engine_cfg,
         )
     if strategy_name in ("fedasync", "fedasync_nostale", "fedbuff", "adaptive_async"):
         kw = dict(alpha=alpha)
@@ -120,6 +143,7 @@ def run_experiment(
         return run_async(
             clients, params, acc_fn, pooled_test, strat,
             max_updates=max_updates, seed=cfg.seed, target_acc=target_acc,
-            eval_every=max(1, eval_every),
+            eval_every=max(1, eval_every), engine=engine,
+            engine_cfg=engine_cfg,
         )
     raise ValueError(strategy_name)

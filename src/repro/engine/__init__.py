@@ -1,0 +1,61 @@
+"""Cohort-batched asynchronous FL execution engine.
+
+Architecture (one PR-level view; details in each module's docstring):
+
+    virtual-clock event heap ──► cohort.pop_cohort (staleness window)
+            │                               │
+    engine.CohortRunner.dispatch      stacked client axis
+    (host: RNG schedule, accountant,        │
+     tier clock, version pull)        cohort_step.make_cohort_step
+            │                         (ONE jitted scan+vmap local phase)
+            ▼                               │
+    LocalRoundPlan pending map        fused weights-vector merge
+                                      (fold_cohort_weights: exactly the
+                                       sequential Eq. 11 merges) or
+                                      per-member aggregation.apply_update
+                                            │
+                                      RunLog (same schema as legacy)
+
+Frontends: ``repro.core.server.run_fedavg`` / ``run_async`` take
+``engine="cohort"`` (this package) or ``engine="legacy"`` (the original
+per-client Python event loop, kept for parity testing — see
+tests/test_engine_parity.py).  With ``EngineConfig.staleness_window=0``
+the cohort path reproduces the legacy loop update-for-update; positive
+windows batch near-simultaneous completions for throughput
+(benchmarks/fl_benchmarks.py::bench_engine_throughput).
+"""
+from repro.engine.cohort import (
+    LocalRoundPlan,
+    fedavg_weights,
+    fold_cohort_weights,
+    plan_batches,
+    pop_cohort,
+)
+from repro.engine.cohort_step import (
+    cached_cohort_step,
+    make_cohort_step,
+    stack_trees,
+    unstack_tree,
+)
+from repro.engine.engine import (
+    CohortRunner,
+    EngineConfig,
+    run_async_engine,
+    run_fedavg_engine,
+)
+
+__all__ = [
+    "CohortRunner",
+    "EngineConfig",
+    "LocalRoundPlan",
+    "cached_cohort_step",
+    "fedavg_weights",
+    "fold_cohort_weights",
+    "make_cohort_step",
+    "plan_batches",
+    "pop_cohort",
+    "run_async_engine",
+    "run_fedavg_engine",
+    "stack_trees",
+    "unstack_tree",
+]

@@ -1,0 +1,218 @@
+"""The compiled cohort step: one jitted program that runs every cohort
+member's whole local round (all DP-SGD minibatch steps) plus the fused
+weighted aggregation — the simulation-side sibling of
+``repro.core.fl_step``'s ``fl_train_step`` (same structure: stacked client
+axis -> mapped local phase -> weights-vector reduction over the client
+axis).
+
+Numerical parity with the legacy per-client loop is load-bearing (the
+tier-1 parity tests assert it): the per-step math is literally the same
+``dp_mean_gradient`` / ``opt.update`` composition as ``Client.local_train``
+uses, including the per-step ``key, sub = split(key)`` chain, executed
+inside one compiled program instead of one jit call per minibatch.
+Members whose local round is shorter than the cohort's padded step count
+are masked with ``jnp.where`` (a masked step leaves params/opt state/key
+untouched).
+
+Three client-axis executors (``client_axis``), chosen from CPU
+measurements on the SER testbed (B=32, 5 local steps, 317k params; legacy
+per-step dispatch = 377 ms per local round):
+
+* ``"unroll"`` (default) — flat program: Python loop over the K members
+  AND the local steps inside one jit.  ~250 ms per client warm (the
+  whole-round fusion is where the engine's measured speedup comes from),
+  but XLA compile time scales with K * S — keep ``max_cohort`` small and
+  let the cross-run step cache amortize it.
+* ``"map"``  — ``lax.map`` over the stacked axis: compile cost is
+  K-independent (body compiled once) but XLA CPU optimizes while-loop
+  bodies poorly (~2x slower warm than the flat program).  Use for large
+  cohorts / one-off runs.
+* ``"vmap"`` — ``jax.vmap`` over the stacked axis, composing with
+  ``client_shardings`` exactly like ``fl_train_step``'s broadcast/stack
+  layout: on a mesh the cohort partitions over the data axes and members
+  genuinely run in parallel.  (On CPU it turns every convolution into a
+  batched-filter conv that XLA lowers off the fast path — do not use it
+  single-device.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp import DPConfig, dp_mean_gradient
+
+# flat-unroll the local-step loop up to this length; beyond it, fall back
+# to a rolled scan to keep compile times bounded
+_MAX_FULL_UNROLL = 16
+
+
+def _tree_where(mask, new, old):
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(mask, n, o), new, old)
+
+
+def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
+                     use_dp: bool = True, use_kernel: bool = False,
+                     client_axis: str = "map", client_shardings=None):
+    """Build the jitted cohort program.
+
+    Returns ``(cohort_step, merge_cohort)``:
+
+    ``cohort_step(stacked_params, stacked_opt, batches, keys, n_steps)``
+    where every input has a leading cohort axis K:
+
+      stacked_params: pytree, leaves (K, ...)
+      stacked_opt:    pytree of optimizer state, leaves (K, ...)
+      batches:        pytree, leaves (K, S_max, B, ...)
+      keys:           (K, 2) uint32 dispatch keys
+      n_steps:        (K,) int32 — member i executes its first n_steps[i]
+                      loop iterations; the rest are masked no-ops
+
+    ``merge_cohort(global_params, stacked_uploads, coeffs, g_coeff)``
+    computes ``g_coeff * g + sum_i coeffs[i] * upload_i`` as one weighted
+    reduction over the client axis (the ``weights``-vector aggregation of
+    ``fl_train_step``, here carrying alpha/(1+tau) staleness weights or
+    FedAvg's n_k / sum n).
+    """
+    if client_axis not in ("unroll", "map", "vmap"):
+        raise ValueError(
+            f"client_axis must be 'unroll', 'map' or 'vmap': {client_axis!r}")
+
+    def constrain(tree):
+        if client_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, client_shardings)
+
+    def one_step(params, opt_state, batch, key):
+        """Identical math to the legacy ``_dp_sgd_step`` / ``_sgd_step``."""
+        if use_dp:
+            grad, _aux = dp_mean_gradient(
+                loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel)
+        else:
+            grad = jax.grad(
+                lambda p: jnp.mean(
+                    jax.vmap(lambda ex: loss_fn(p, ex))(batch)))(params)
+        return opt.update(grad, opt_state, params)
+
+    def local_phase(params, opt_state, key, batches, n_steps):
+        """One member's whole local round, fused across minibatch steps."""
+        s_max = jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+        def apply_masked(p, o, k, step_i, batch):
+            live = step_i < n_steps
+            k_next, sub = jax.random.split(k)
+            p_new, o_new = one_step(p, o, batch, sub)
+            return (_tree_where(live, p_new, p),
+                    _tree_where(live, o_new, o),
+                    jnp.where(live, k_next, k))
+
+        if s_max <= _MAX_FULL_UNROLL:
+            # flat step loop: measured ~1.5x faster than the same body
+            # under a lax.scan/lax.map while loop on XLA CPU
+            p, o, k = params, opt_state, key
+            for s in range(s_max):
+                batch = jax.tree_util.tree_map(lambda l: l[s], batches)
+                p, o, k = apply_masked(p, o, k, s, batch)
+            return p, o
+
+        def body(carry, inp):
+            step_i, batch = inp
+            return apply_masked(*carry, step_i, batch), None
+
+        (p, o, _), _ = jax.lax.scan(
+            body, (params, opt_state, key), (jnp.arange(s_max), batches))
+        return p, o
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps):
+        stacked_params = constrain(stacked_params)
+        if client_axis == "vmap":
+            new_params, new_opt = jax.vmap(local_phase)(
+                stacked_params, stacked_opt, keys, batches, n_steps)
+        elif client_axis == "map":
+            new_params, new_opt = jax.lax.map(
+                lambda t: local_phase(*t),
+                (stacked_params, stacked_opt, keys, batches, n_steps))
+        else:  # unroll: flat program over the K members
+            K = keys.shape[0]
+            outs = [
+                local_phase(unstack_tree(stacked_params, i),
+                            unstack_tree(stacked_opt, i),
+                            keys[i],
+                            unstack_tree(batches, i),
+                            n_steps[i])
+                for i in range(K)
+            ]
+            new_params = stack_trees([p for p, _ in outs])
+            new_opt = stack_trees([o for _, o in outs])
+        return constrain(new_params), new_opt
+
+    @jax.jit
+    def merge_cohort(global_params, stacked_uploads, coeffs, g_coeff):
+        coeffs = coeffs.astype(jnp.float32)
+        return jax.tree_util.tree_map(
+            lambda g, s: (g_coeff * g.astype(jnp.float32)
+                          + jnp.tensordot(coeffs, s.astype(jnp.float32),
+                                          axes=(0, 0))).astype(g.dtype),
+            global_params, stacked_uploads)
+
+    return cohort_step, merge_cohort
+
+
+# ---------------------------------------------------------------------------
+# cross-run compile cache: repeated runs over the same testbed (benchmark
+# sweeps, parity tests) reuse the compiled programs instead of re-tracing
+# ---------------------------------------------------------------------------
+
+_STEP_CACHE: dict = {}
+
+
+def _hashable_loss(loss_fn):
+    """Normalize functools.partial losses so two testbeds built from the
+    same model config share one compiled step."""
+    if isinstance(loss_fn, functools.partial):
+        try:
+            key = (loss_fn.func, loss_fn.args,
+                   tuple(sorted(loss_fn.keywords.items())))
+            hash(key)
+            return key
+        except TypeError:
+            pass
+    return loss_fn
+
+
+def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
+                       client_axis="map", client_shardings=None):
+    """Memoized :func:`make_cohort_step` (no caching when shardings are
+    given — NamedShardings are mesh-lifetime objects)."""
+    if client_shardings is not None:
+        return make_cohort_step(loss_fn, dp_cfg, opt, use_dp=use_dp,
+                                use_kernel=use_kernel,
+                                client_axis=client_axis,
+                                client_shardings=client_shardings)
+    key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
+           client_axis)
+    try:
+        hash(key)
+    except TypeError:
+        return make_cohort_step(loss_fn, dp_cfg, opt, use_dp=use_dp,
+                                use_kernel=use_kernel, client_axis=client_axis)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = make_cohort_step(
+            loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
+            client_axis=client_axis)
+    return _STEP_CACHE[key]
+
+
+def stack_trees(trees):
+    """Stack a list of identically-shaped pytrees on a new leading axis."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def unstack_tree(tree, i: int):
+    """Member ``i``'s slice of a stacked pytree."""
+    return jax.tree_util.tree_map(lambda l: l[i], tree)

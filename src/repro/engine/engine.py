@@ -1,0 +1,367 @@
+"""Cohort-batched async execution engine (event-queue driver).
+
+Drives the compiled cohort step (``repro.engine.cohort_step``) from the
+virtual-clock priority queue that the legacy per-client loop in
+``repro.core.server`` uses:
+
+  1. **dispatch**: a client pulls the current globals, its minibatch
+     schedule / PRNG chain / tier-clock duration / accountant step are
+     planned on the host (``LocalRoundPlan``) and its completion event is
+     pushed on the heap — exactly the bookkeeping ``Client.local_train``
+     does, but WITHOUT running the training yet;
+  2. **cohort pop**: all completions within ``staleness_window`` virtual
+     seconds of the earliest pending event come off the heap as one cohort;
+  3. **compiled local phase**: the members' dispatch-time params and
+     optimizer states are stacked on a leading client axis and the whole
+     cohort's local rounds run as ONE jitted scan+vmap program;
+  4. **merge**: FedAvg/FedAsync weights (n_k / sum n, alpha/(1+tau_i))
+     are folded into a single weights-vector reduction over the client
+     axis (``fold_cohort_weights`` makes the fused merge exactly equal to
+     the legacy sequential merges); FedBuff / AdaptiveAsync / personalized
+     clients route per-member through ``aggregation.apply_update`` — the
+     same switch the legacy loop uses;
+  5. **bookkeeping**: staleness, per-tier update counts, epsilon
+     trajectories and influence land in the same ``RunLog`` the legacy
+     loops produce, so every benchmark/figure works unchanged.
+
+With ``staleness_window=0`` cohorts have size 1 and the engine reproduces
+the legacy event loop update-for-update (the tier-1 parity tests assert
+params allclose and identical update-count/epsilon bookkeeping).  A
+positive window trades a bounded amount of merge reordering for wide
+cohorts and is where the throughput win comes from (see
+``benchmarks/fl_benchmarks.py::bench_engine_throughput``).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
+from repro.core.runlog import RunLog, eval_all
+from repro.engine.cohort import (
+    LocalRoundPlan, fedavg_weights, fold_cohort_weights, plan_batches,
+    pop_cohort, steps_per_round)
+from repro.engine.cohort_step import (
+    cached_cohort_step, stack_trees, unstack_tree)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    staleness_window: float = 0.0  # virtual seconds of completions per cohort
+    max_cohort: int = 2            # cap on compiled-step client axis ("unroll"
+                                   # compile time scales with it; see cohort_step)
+    fused_merge: bool = True       # fold FedAvg/FedAsync into the weights vector
+    delta: float = 1e-5            # accountant delta (matches legacy loop)
+    client_axis: str = "unroll"    # unroll (CPU) | map | vmap (mesh, fl_step-style)
+    pow2_cohorts: bool = True      # bucket cohort sizes to bound recompiles
+
+
+class CohortRunner:
+    """Owns the compiled cohort program and the host-side plan/IO glue."""
+
+    def __init__(self, clients, cfg: EngineConfig,
+                 client_shardings=None):
+        c0 = clients[0]
+        for c in clients:
+            if (c.dp_cfg != c0.dp_cfg or c.use_dp != c0.use_dp
+                    or c.use_kernel != c0.use_kernel or c.opt != c0.opt
+                    or c.batch_size != c0.batch_size
+                    or not (c.loss_fn is c0.loss_fn
+                            or c.loss_fn == c0.loss_fn)):
+                raise ValueError(
+                    "cohort engine requires homogeneous client training "
+                    "configs (heterogeneity lives in the virtual clocks)")
+        self.clients = clients
+        self.cfg = cfg
+        # run-level padded step count: every client's local round length is
+        # fixed by (n_train, B, E), so padding all cohorts to the global max
+        # keeps the compiled step's shapes constant across the whole run
+        self.s_max = max(
+            steps_per_round(c.n_train, c.batch_size, c.local_epochs)
+            for c in clients)
+        self.cohort_step, self.merge_cohort = cached_cohort_step(
+            c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
+            use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
+            client_shardings=client_shardings)
+
+    # -- dispatch ----------------------------------------------------------
+    def dispatch(self, c, global_params, key, server_version: int
+                 ) -> LocalRoundPlan:
+        """Plan one local round: same host bookkeeping (RNG permutations,
+        accountant step, clock draw, version pull) as Client.local_train,
+        deferring the actual training to the compiled cohort step."""
+        params0 = global_params
+        personal_snapshot = None
+        if c.personal_keys:
+            if c._personal is None:  # first round: adopt global init
+                c._personal = {k: global_params[k] for k in c.personal_keys}
+            params0 = dict(global_params)
+            params0.update(c._personal)
+            personal_snapshot = {k: global_params[k] for k in c.personal_keys}
+        if c.opt_state is None:
+            c.opt_state = c.opt.init(params0)
+        idx = plan_batches(c.rng, c.n_train, c.batch_size, c.local_epochs)
+        steps = int(idx.shape[0])
+        if c.use_dp and steps > 0:
+            c.accountant.step(c.q, c.dp_cfg.noise_multiplier, steps)
+        duration = c.clock.round_duration()
+        c.update_count += 1
+        c.model_version = server_version
+        plan = LocalRoundPlan(
+            cid=c.cid, params0=params0, opt_state=c.opt_state,
+            batch_idx=idx, key=key, n_steps=steps, duration=duration,
+            epsilon=c.accountant.epsilon(self.cfg.delta) if c.use_dp else 0.0,
+            model_version=server_version)
+        plan.personal_snapshot = personal_snapshot
+        return plan
+
+    # -- compiled local phase ---------------------------------------------
+    def run_cohort(self, plans):
+        """Run every member's local round in one compiled call; returns the
+        stacked new params and writes optimizer states back to clients."""
+        s_max = self.s_max
+        if s_max == 0:  # degenerate: no client has a full batch
+            return stack_trees([p.params0 for p in plans])
+        stacked_params = stack_trees([p.params0 for p in plans])
+        stacked_opt = stack_trees([p.opt_state for p in plans])
+        member_batches = []
+        for p in plans:
+            c = self.clients[p.cid]
+            idx = p.batch_idx
+            if idx.shape[0] < s_max:  # pad masked tail steps
+                pad_row = idx[:1] if idx.shape[0] else np.zeros(
+                    (1, c.batch_size), np.int32)
+                idx = np.concatenate(
+                    [idx, np.broadcast_to(pad_row,
+                                          (s_max - idx.shape[0],) + pad_row.shape[1:])])
+            member_batches.append({k: v[idx] for k, v in c.data.items()})
+        batches = {
+            k: jnp.asarray(np.stack([mb[k] for mb in member_batches]))
+            for k in member_batches[0]
+        }
+        keys = jnp.stack([p.key for p in plans])
+        n_steps = jnp.asarray([p.n_steps for p in plans], jnp.int32)
+        new_stacked, new_opt = self.cohort_step(
+            stacked_params, stacked_opt, batches, keys, n_steps)
+        for i, p in enumerate(plans):
+            self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
+        return new_stacked
+
+    # -- upload ------------------------------------------------------------
+    def upload(self, plan: LocalRoundPlan, new_params):
+        """Turn a member's trained params into its uploaded model (personal
+        subtrees stay on-device; the upload carries the received globals
+        for those keys, exactly like Client.local_train)."""
+        c = self.clients[plan.cid]
+        if not c.personal_keys:
+            return new_params
+        c._personal = {k: new_params[k] for k in c.personal_keys}
+        up = dict(new_params)
+        up.update(plan.personal_snapshot)
+        return up
+
+
+def _fused_ok(strategy, clients, plans, cfg: EngineConfig) -> bool:
+    """The weights-vector merge is exact only for plain FedAsync (Eq. 11
+    folding) and FedAvg; FedBuff keeps cross-cohort buffer state and
+    AdaptiveAsync mixes in the privacy budget, so they go per-member
+    through aggregation.apply_update (as do personalized clients)."""
+    if not cfg.fused_merge:
+        return False
+    if type(strategy) not in (FedAvg, FedAsync):
+        return False
+    return not any(clients[p.cid].personal_keys for p in plans)
+
+
+def run_fedavg_engine(
+    clients: list,
+    global_params,
+    accuracy_fn: Callable,
+    test_data: dict,
+    rounds: int = 60,
+    seed: int = 0,
+    eval_every: int = 1,
+    target_acc: Optional[float] = None,
+    engine_cfg: Optional[EngineConfig] = None,
+) -> tuple:
+    """Synchronous FedAvg (Eq. 9): each round is one full-population
+    barrier, executed as ceil(N / max_cohort) compiled cohort chunks whose
+    dataset-size-weighted partial sums accumulate into the new globals."""
+    cfg = engine_cfg or EngineConfig()
+    runner = CohortRunner(clients, cfg)
+    log = RunLog(strategy="fedavg")
+    key = jax.random.PRNGKey(seed)
+    t_virtual = 0.0
+    for c in clients:
+        log.update_counts[c.tier] = 0
+        log.staleness.setdefault(c.tier, [])
+        log.eps_trajectory.setdefault(c.tier, [])
+
+    for rnd in range(1, rounds + 1):
+        plans = []
+        for c in clients:
+            key, sub = jax.random.split(key)
+            plans.append(runner.dispatch(c, global_params, sub, rnd - 1))
+        chunks = [plans[i:i + cfg.max_cohort]
+                  for i in range(0, len(plans), cfg.max_cohort)]
+        stacked_chunks = [runner.run_cohort(ch) for ch in chunks]
+        log.cohort_sizes.extend(len(ch) for ch in chunks)
+        t_virtual += max(p.duration for p in plans)
+
+        if _fused_ok(FedAvg(), clients, plans, cfg):
+            # Eq. 9 as chunked weights-vector reductions: the new globals
+            # accumulate sum_k (n_k / sum n) p_k across the chunks
+            _, coeffs = fedavg_weights([clients[p.cid].n_train for p in plans])
+            acc = jax.tree_util.tree_map(jnp.zeros_like, global_params)
+            off = 0
+            for ch, st in zip(chunks, stacked_chunks):
+                acc = runner.merge_cohort(
+                    acc, st, jnp.asarray(coeffs[off:off + len(ch)]), 1.0)
+                off += len(ch)
+            global_params = acc
+        else:
+            updates = []
+            for ch, st in zip(chunks, stacked_chunks):
+                updates.extend(
+                    (runner.upload(p, unstack_tree(st, i)),
+                     clients[p.cid].n_train)
+                    for i, p in enumerate(ch))
+            global_params = FedAvg().aggregate(global_params, updates)
+
+        for p in plans:
+            c = clients[p.cid]
+            log.update_counts[c.tier] += 1
+            log.staleness[c.tier].append(0)  # barrier => no staleness
+            log.eps_trajectory[c.tier].append(p.epsilon)
+
+        if rnd % eval_every == 0 or rnd == rounds:
+            acc = float(accuracy_fn(global_params, test_data))
+            log.times.append(t_virtual)
+            log.global_acc.append(acc)
+            log.server_version.append(rnd)
+            eval_all(clients, global_params, accuracy_fn, log)
+            if target_acc is not None and acc >= target_acc:
+                break
+
+    for c in clients:
+        log.resources[c.tier] = c.clock.resource_sample()
+        log.dropouts[c.tier] = c.clock.dropouts
+    return global_params, log
+
+
+def run_async_engine(
+    clients: list,
+    global_params,
+    accuracy_fn: Callable,
+    test_data: dict,
+    strategy,                      # FedAsync / FedBuff / AdaptiveAsync
+    max_updates: int = 300,
+    max_time: Optional[float] = None,
+    seed: int = 0,
+    eval_every: int = 5,
+    target_acc: Optional[float] = None,
+    engine_cfg: Optional[EngineConfig] = None,
+) -> tuple:
+    """Event-driven async FL (Eq. 10-11) over cohorts popped from the
+    virtual-clock heap.  ``staleness_window=0`` reproduces the legacy loop
+    update-for-update; a positive window batches near-simultaneous
+    completions into one compiled step."""
+    cfg = engine_cfg or EngineConfig()
+    runner = CohortRunner(clients, cfg)
+    log = RunLog(strategy=strategy.name)
+    key = jax.random.PRNGKey(seed)
+    for c in clients:
+        log.update_counts[c.tier] = 0
+        log.influence.setdefault(c.tier, 0.0)
+        log.staleness.setdefault(c.tier, [])
+        log.eps_trajectory.setdefault(c.tier, [])
+
+    # Seed the event queue: every client starts training version 0 at t=0.
+    heap, pending = [], {}
+    server_version = 0
+    for c in clients:
+        key, sub = jax.random.split(key)
+        plan = runner.dispatch(c, global_params, sub, server_version)
+        pending[c.cid] = plan
+        heapq.heappush(heap, (plan.duration, c.cid))
+
+    t_virtual = 0.0
+    done = False
+    while heap and not done:
+        events = pop_cohort(heap, cfg.staleness_window, cfg.max_cohort,
+                            bucket_pow2=cfg.pow2_cohorts)
+        plans = []
+        for t, cid in events:
+            p = pending.pop(cid)
+            p.t_complete = t
+            plans.append(p)
+        t_virtual = plans[-1].t_complete
+        new_stacked = runner.run_cohort(plans)
+        log.cohort_sizes.append(len(plans))
+
+        if _fused_ok(strategy, clients, plans, cfg):
+            # staleness weights alpha/(1+tau_i), folded so the single
+            # weights-vector reduction equals the sequential merges; member
+            # i's tau accounts for the i earlier merges in this cohort
+            taus = [(server_version + i) - p.model_version
+                    for i, p in enumerate(plans)]
+            weights = [strategy.mixing_weight(tau) for tau in taus]
+            g_coeff, coeffs = fold_cohort_weights(weights)
+            global_params = runner.merge_cohort(
+                global_params, new_stacked, jnp.asarray(coeffs), g_coeff)
+            server_version += len(plans)
+        else:
+            taus, weights = [], []
+            for i, p in enumerate(plans):
+                up = runner.upload(p, unstack_tree(new_stacked, i))
+                tau = server_version - p.model_version
+                global_params, inc, w = apply_update(
+                    strategy, global_params, up, tau, eps_spent=p.epsilon)
+                server_version += inc
+                taus.append(tau)
+                weights.append(w)
+
+        for p, tau, w in zip(plans, taus, weights):
+            c = clients[p.cid]
+            log.staleness[c.tier].append(tau)
+            log.update_counts[c.tier] += 1
+            log.eps_trajectory[c.tier].append(p.epsilon)
+            log.influence[c.tier] += float(w)
+
+        total_updates = sum(log.update_counts.values())
+        crossed = any((total_updates - j) % eval_every == 0
+                      for j in range(len(plans)))
+        if crossed:
+            acc = float(accuracy_fn(global_params, test_data))
+            log.times.append(t_virtual)
+            log.global_acc.append(acc)
+            log.server_version.append(server_version)
+            eval_all(clients, global_params, accuracy_fn, log)
+            if target_acc is not None and acc >= target_acc:
+                done = True
+        if total_updates >= max_updates or (max_time and t_virtual >= max_time):
+            done = True
+
+        if not done:
+            for p in plans:
+                c = clients[p.cid]
+                # joint aggregation-privacy adaptation: a client that has
+                # exhausted its budget STOPS training (see legacy loop)
+                if (isinstance(strategy, AdaptiveAsync)
+                        and p.epsilon >= strategy.eps_target):
+                    continue
+                key, sub = jax.random.split(key)
+                plan = runner.dispatch(c, global_params, sub, server_version)
+                pending[c.cid] = plan
+                heapq.heappush(heap, (p.t_complete + plan.duration, c.cid))
+
+    for c in clients:
+        log.resources[c.tier] = c.clock.resource_sample()
+        log.dropouts[c.tier] = c.clock.dropouts
+    return global_params, log

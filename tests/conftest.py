@@ -1,0 +1,39 @@
+"""Shared fixtures and markers for the tier-1 suite.
+
+Session-scoped tiny-model / tiny-data fixtures keep the default run fast:
+build the synthetic SER testbed once and share it across test modules.
+Long end-to-end FL runs carry ``@pytest.mark.slow`` and are deselected by
+default (pytest.ini adds ``-m "not slow"``); run them with ``-m slow``.
+"""
+import pytest
+
+from repro.core.testbed import TestbedConfig
+from repro.data.synthetic_ser import SERDataConfig
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long end-to-end FL system runs; deselected by default "
+        "(pytest.ini addopts), select with -m slow")
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Reduced-scale testbed config for the end-to-end FL system tests
+    (matches the historical test_fl_system module fixture)."""
+    return TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=64,
+        data=SERDataConfig(n_total=1600), seed=1,
+    )
+
+
+@pytest.fixture(scope="session")
+def micro_cfg():
+    """Smallest useful testbed: 480 clips / 5 clients / 2 DP-SGD steps per
+    round — for parity and engine tests that must run in the default
+    (non-slow) suite."""
+    return TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=32,
+        data=SERDataConfig(n_total=480), seed=3,
+    )

@@ -1,4 +1,5 @@
-"""Moments Accountant: unit + property tests (hypothesis).
+"""Moments Accountant: unit + property tests (hypothesis when installed,
+fixed parametrized cases otherwise — see tests/_hypothesis_compat.py).
 
 Anchors: Abadi et al. report eps ~= 1.26 for q=0.01, sigma=4, T=1e4,
 delta=1e-5 with the moments accountant — we must land within a few percent.
@@ -7,7 +8,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.accountant import (
     MomentsAccountant,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import AdaptiveAsync, FedAsync, FedAvg, FedBuff, make_strategy
 from repro.core.dp import DPConfig, clip_tree, dp_mean_gradient, noise_tree

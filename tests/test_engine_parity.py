@@ -1,0 +1,169 @@
+"""Cohort engine vs legacy per-client loop: the engine must reproduce the
+legacy event loop update-for-update (params allclose, IDENTICAL per-tier
+update counts / epsilon trajectories / staleness), plus unit tests for the
+cohort weights vector and cohort formation."""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import FedAsync
+from repro.core.testbed import run_experiment
+from repro.engine import EngineConfig, fedavg_weights, fold_cohort_weights
+from repro.engine.cohort import plan_batches, pop_cohort
+from repro.pytree import tree_lin
+
+
+def _assert_params_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_logs_match(log_leg, log_eng):
+    assert log_leg.update_counts == log_eng.update_counts
+    assert log_leg.eps_trajectory == log_eng.eps_trajectory
+    assert log_leg.staleness == log_eng.staleness
+    assert log_leg.times == log_eng.times
+    np.testing.assert_allclose(log_leg.global_acc, log_eng.global_acc,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_fedavg_engine_matches_legacy(micro_cfg):
+    p_leg, log_leg = run_experiment("fedavg", micro_cfg, rounds=2,
+                                    engine="legacy")
+    p_eng, log_eng = run_experiment("fedavg", micro_cfg, rounds=2,
+                                    engine="cohort")
+    _assert_params_close(p_leg, p_eng)
+    _assert_logs_match(log_leg, log_eng)
+    # engine ran the barrier in compiled cohort chunks
+    assert sum(log_eng.cohort_sizes) == 2 * micro_cfg.num_clients
+    assert not log_leg.cohort_sizes  # legacy loop never forms cohorts
+
+
+def test_fedasync_engine_matches_legacy(micro_cfg):
+    kw = dict(max_updates=12, eval_every=4, alpha=0.4)
+    p_leg, log_leg = run_experiment("fedasync", micro_cfg, engine="legacy",
+                                    **kw)
+    p_eng, log_eng = run_experiment("fedasync", micro_cfg, engine="cohort",
+                                    **kw)
+    _assert_params_close(p_leg, p_eng)
+    _assert_logs_match(log_leg, log_eng)
+    assert log_leg.influence == pytest.approx(log_eng.influence)
+    # the default window is 0 => the engine replays the exact event order
+    assert log_eng.cohort_sizes == [1] * sum(log_eng.update_counts.values())
+
+
+def test_fedasync_windowed_cohorts_still_train(micro_cfg):
+    """A positive staleness window batches completions; bookkeeping totals
+    must be preserved even though merge order coarsens."""
+    ec = EngineConfig(staleness_window=1e9, max_cohort=2)
+    _, log = run_experiment("fedasync", micro_cfg, max_updates=8,
+                            eval_every=4, alpha=0.4, engine="cohort",
+                            engine_cfg=ec)
+    assert sum(log.update_counts.values()) == sum(log.cohort_sizes) == 8
+    assert max(log.cohort_sizes) == 2        # the window actually batched
+    assert all(len(v) == n for v, n in
+               zip(log.eps_trajectory.values(), log.update_counts.values()))
+
+
+def test_fedbuff_and_adaptive_route_through_engine(micro_cfg):
+    _, log_b = run_experiment("fedbuff", micro_cfg, max_updates=6,
+                              eval_every=6, alpha=0.4, buffer_size=2,
+                              engine="cohort")
+    assert sum(log_b.update_counts.values()) == 6
+    _, log_a = run_experiment("adaptive_async", micro_cfg, max_updates=6,
+                              eval_every=6, alpha=0.4, eps_target=50.0,
+                              engine="cohort")
+    assert sum(log_a.update_counts.values()) == 6
+
+
+# ---------------------------------------------------------------------------
+# the cohort weights vector (staleness weights alpha/(1+tau), folded)
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_vector():
+    """The folded cohort weights carry FedAsync's alpha/(1+tau) (Eq. 10):
+    member i's coefficient is w_i * prod_{j>i} (1 - w_j)."""
+    strat = FedAsync(alpha=0.6)
+    taus = [0, 2, 5]
+    ws = [strat.mixing_weight(t) for t in taus]
+    assert ws == pytest.approx([0.6, 0.2, 0.1])
+    g_coeff, coeffs = fold_cohort_weights(ws)
+    assert coeffs[0] == pytest.approx(0.6 * (1 - 0.2) * (1 - 0.1))
+    assert coeffs[1] == pytest.approx(0.2 * (1 - 0.1))
+    assert coeffs[2] == pytest.approx(0.1)
+    assert g_coeff == pytest.approx((1 - 0.6) * (1 - 0.2) * (1 - 0.1))
+    # convexity: the merged model stays in the hull of {g, p_1..p_K}
+    assert g_coeff + coeffs.sum() == pytest.approx(1.0)
+
+
+def test_fold_equals_sequential_merges():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    g = {"w": jax.random.normal(ks[0], (8,)), "b": jax.random.normal(ks[1], (3,))}
+    ps = [{"w": jax.random.normal(k, (8,)), "b": jax.random.normal(k, (3,))}
+          for k in (ks[2], ks[3])]
+    ws = [0.4, 0.25]
+    seq = g
+    for p, w in zip(ps, ws):
+        seq = tree_lin(seq, p, 1.0 - w, w)
+    g_coeff, coeffs = fold_cohort_weights(ws)
+    fused = jax.tree_util.tree_map(
+        lambda gl, p0, p1: g_coeff * gl + coeffs[0] * p0 + coeffs[1] * p1,
+        g, ps[0], ps[1])
+    _assert_params_close(seq, fused, rtol=1e-6, atol=1e-7)
+
+
+def test_fedavg_weights_normalized():
+    g_coeff, coeffs = fedavg_weights([100, 300])
+    assert g_coeff == 0.0
+    np.testing.assert_allclose(coeffs, [0.25, 0.75])
+
+
+# ---------------------------------------------------------------------------
+# cohort formation & batch planning
+# ---------------------------------------------------------------------------
+
+def test_pop_cohort_window_and_pow2():
+    heap = [(1.0, 0), (1.5, 1), (1.9, 2), (2.1, 3), (9.0, 4)]
+    heapq.heapify(heap)
+    events = pop_cohort(heap, window=1.5, max_size=8)
+    assert [cid for _, cid in events] == [0, 1, 2, 3]
+    assert heap[0] == (9.0, 4)
+
+    heap = [(1.0, 0), (1.1, 1), (1.2, 2), (9.0, 3)]
+    heapq.heapify(heap)
+    events = pop_cohort(heap, window=1.0, max_size=8, bucket_pow2=True)
+    assert [cid for _, cid in events] == [0, 1]   # 3 -> largest pow2 = 2
+    assert heap[0] == (1.2, 2)                    # tail went back
+
+    heap = [(5.0, 7)]
+    heapq.heapify(heap)
+    assert pop_cohort(heap, window=0.0, max_size=4) == [(5.0, 7)]
+
+
+def test_plan_batches_matches_legacy_slicing():
+    """Same schedule as Client.local_train: per epoch one permutation cut
+    into contiguous B-slices, ragged tail dropped."""
+    rng_a = np.random.default_rng(42)
+    rng_b = np.random.default_rng(42)
+    n, B, E = 37, 8, 2
+    idx = plan_batches(rng_a, n, B, E)
+    expect = []
+    for _ in range(E):
+        perm = rng_b.permutation(n)
+        for s in range(0, n - B + 1, B):
+            expect.append(perm[s:s + B])
+    np.testing.assert_array_equal(idx, np.stack(expect))
+    assert idx.shape == (2 * 4, B)
+
+    assert plan_batches(np.random.default_rng(0), 5, 8, 1).shape == (0, 8)

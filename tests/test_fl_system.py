@@ -1,5 +1,9 @@
 """End-to-end FL system behaviour (reduced scale): the paper's qualitative
-claims must EMERGE from the simulation, not be scripted."""
+claims must EMERGE from the simulation, not be scripted.
+
+The multi-round training runs are marked ``slow`` (deselected by default;
+``-m slow`` runs them) — the ``tiny_cfg`` fixture lives in conftest.py.
+"""
 import numpy as np
 import pytest
 
@@ -7,14 +11,6 @@ from repro.core.heterogeneity import PROFILES, TIERS, VirtualClock
 from repro.core.testbed import TestbedConfig, run_experiment
 from repro.data.synthetic_ser import SERDataConfig, generate
 from repro.data.partition import dirichlet_partition, iid_partition
-
-
-@pytest.fixture(scope="module")
-def tiny_cfg():
-    return TestbedConfig(
-        use_dp=True, sigma=1.0, batch_size=64,
-        data=SERDataConfig(n_total=1600), seed=1,
-    )
 
 
 def test_virtual_clock_ordering():
@@ -47,6 +43,7 @@ def test_dirichlet_partition_skews():
     assert max(doms) > 0.5
 
 
+@pytest.mark.slow
 def test_fedavg_trains_and_tracks_privacy(tiny_cfg):
     params, log = run_experiment("fedavg", tiny_cfg, rounds=6)
     assert log.global_acc[-1] > 0.4          # better than 4-class chance
@@ -63,6 +60,7 @@ def test_fedavg_trains_and_tracks_privacy(tiny_cfg):
     assert log.times[0] > PROFILES["HW_T1"].compute_time_s * 0.7
 
 
+@pytest.mark.slow
 def test_fedasync_participation_skew_and_privacy_disparity(tiny_cfg):
     params, log = run_experiment(
         "fedasync", tiny_cfg, max_updates=40, alpha=0.4, eval_every=10)
@@ -80,6 +78,7 @@ def test_fedasync_participation_skew_and_privacy_disparity(tiny_cfg):
     assert fr["privacy_disparity"] > 1.5
 
 
+@pytest.mark.slow
 def test_fedasync_faster_than_fedavg_to_target(tiny_cfg):
     """The headline efficiency claim, at reduced scale (paper Fig. 4)."""
     target = 0.5
@@ -93,6 +92,7 @@ def test_fedasync_faster_than_fedavg_to_target(tiny_cfg):
     assert t_async < t_avg / 2, (t_async, t_avg)
 
 
+@pytest.mark.slow
 def test_fedbuff_and_adaptive_run(tiny_cfg):
     _, log_b = run_experiment("fedbuff", tiny_cfg, max_updates=20,
                               alpha=0.4, eval_every=10, buffer_size=3)
@@ -122,6 +122,7 @@ def test_checkpoint_roundtrip(tmp_path, tiny_cfg):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+@pytest.mark.slow
 def test_personalized_heads_stay_local(tiny_cfg):
     """Beyond-paper (paper Sec. 5 direction 3): personal output heads are
     trained locally, never uploaded, and diverge per client."""

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.pytree import (
     tree_flatten_to_vector, tree_gaussian_like, tree_global_norm, tree_lin,
