@@ -203,19 +203,25 @@ def bench_table3_privacy(sigmas=(0.5, 1.0, 2.0), alphas=(0.2, 0.6),
 
 def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
     """Wall-clock of the SAME virtual FedAsync workload (>= 8 clients,
-    synthetic SER, eval disabled) under three execution paths:
+    synthetic SER, eval disabled) under the execution paths:
 
       * legacy   — per-client Python event loop, one jit call per minibatch
       * cohort_w0 — cohort engine, window=0 (size-1 cohorts: measures the
                     whole-local-round fusion alone)
       * cohort_wN — cohort engine with a staleness window (multi-client
                     cohorts through the compiled stacked step)
+      * cohort_vmap_dD — (multi-device only) the same windowed workload
+                    with the cohort axis partitioned over a D-way data
+                    axis (engine.mesh_backend); spawn host devices with
+                    XLA_FLAGS=--xla_force_host_platform_device_count=8
 
     A warmup pass per engine config is excluded from the timing so the
     numbers compare steady-state execution, not XLA compiles (the engine's
     compiled programs are cached across runs — see repro.engine.cohort_step).
     """
     import time as _time
+
+    import jax
 
     from repro.engine import EngineConfig
 
@@ -244,10 +250,32 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
     t_w0, log_w0 = run("cohort", ec_0)
     t_wN, log_wN = run("cohort", ec_w)
 
+    timed = [("legacy", t_legacy, None),
+             ("cohort_w0", t_w0, log_w0),
+             (f"cohort_w{window:g}", t_wN, log_wN)]
+
+    if len(jax.devices()) > 1:
+        # sharded-cohort variant: cohort axis partitioned over the data
+        # axes, max_cohort = the data-axis size so full cohorts map one
+        # member per device group (smaller cohorts run replicated).  The
+        # unsharded vmap row is the like-for-like ablation — same
+        # executor and cohort sizes, no mesh — so the delta between the
+        # two is attributable to the partitioning alone.
+        from repro.engine import cohort_mesh
+        mesh = cohort_mesh(max_cohort=num_clients)
+        n_data = mesh.shape["data"]
+        ec_vm = EngineConfig(staleness_window=window, max_cohort=n_data,
+                             client_axis="vmap")
+        ec_sh = EngineConfig(staleness_window=window, max_cohort=n_data,
+                             client_axis="vmap", mesh=mesh)
+        for name, ec in ((f"cohort_vmap_nomesh_K{n_data}", ec_vm),
+                         (f"cohort_vmap_d{n_data}", ec_sh)):
+            run("cohort", ec, n=max(8, 2 * n_data))    # warmup compiles
+            t_v, log_v = run("cohort", ec)
+            timed.append((name, t_v, log_v))
+
     rows = []
-    for name, t, log in (("legacy", t_legacy, None),
-                         ("cohort_w0", t_w0, log_w0),
-                         (f"cohort_w{window:g}", t_wN, log_wN)):
+    for name, t, log in timed:
         rows.append({
             "engine": name,
             "num_clients": num_clients,

@@ -57,6 +57,95 @@ def make_server_optimizer(fl: FLStepConfig):
     return SGD(lr=fl.server_lr)
 
 
+def split_batch(x, G: int, n_local: int, n_micro: int):
+    """Reshape one global-batch array to ``(G, n_local, n_micro, per_micro,
+    ...)`` — the stacked per-client microbatch layout the local phase scans.
+
+    Divisibility is validated up front: the old inline reshape surfaced an
+    inscrutable XLA "cannot reshape" error that named neither the batch
+    shape nor the config values that made it impossible.
+    """
+    b = int(x.shape[0])
+    if b % G:
+        raise ValueError(
+            f"global batch dim {b} (leading dim of shape {tuple(x.shape)}) "
+            f"is not divisible by num_clients G={G}")
+    per_client = b // G
+    if per_client % (n_local * n_micro):
+        raise ValueError(
+            f"per-client batch {per_client} (global batch {b} over G={G} "
+            f"clients) is not divisible by n_local*n_micro = "
+            f"{n_local}*{n_micro} = {n_local * n_micro}; use a global batch "
+            f"that is a multiple of G*n_local*n_micro = "
+            f"{G * n_local * n_micro}")
+    per_micro = per_client // (n_local * n_micro)
+    return x.reshape((G, n_local, n_micro, per_micro) + x.shape[1:])
+
+
+def make_local_phase(loss_fn: Callable, fl: FLStepConfig):
+    """One client's local phase (paper Eq. 4-6): a scan of local SGD steps,
+    each accumulating ``n_micro`` clipped microbatch gradients before one
+    noise draw and the ``local_lr`` update.
+
+    Factored out of :func:`make_fl_train_step` so the cohort engine can
+    drive the IDENTICAL production round from its event loop
+    (``repro.engine.cohort_step`` with ``client_axis="fl_step"``).
+
+    Returns ``local_phase(client_params, client_batch, key, n_steps=None)``
+    where ``client_batch`` leaves are ``(n_local, n_micro, per_micro, ...)``
+    (the step count is taken from the batch's leading dim, so callers may
+    run more or fewer steps than ``fl.n_local``) and ``n_steps`` optionally
+    masks trailing steps — a masked step leaves params untouched, which is
+    how the engine pads every cohort member to a common step count.
+    """
+
+    def local_phase(client_params, client_batch, key, n_steps=None):
+        n_local = jax.tree_util.tree_leaves(client_batch)[0].shape[0]
+
+        def one_local_step(params, inp):
+            step_i, step_key, micro_batch = inp
+            # scan over microbatches: clip each microbatch grad (Eq. 4)
+            def micro(acc, mb):
+                g = jax.grad(lambda p: loss_fn(p, mb))(params)
+                if fl.dp.granularity == "per_microbatch":
+                    g, _ = clip_tree(g, fl.dp.clip_norm)
+                return jax.tree_util.tree_map(jnp.add, acc, g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            acc, _ = jax.lax.scan(micro, zeros, micro_batch)
+            mean_g = jax.tree_util.tree_map(lambda a: a / fl.n_micro, acc)
+            if (fl.dp.granularity == "per_microbatch"
+                    and fl.dp.noise_multiplier > 0):
+                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm / fl.n_micro
+                leaves, treedef = jax.tree_util.tree_flatten(mean_g)
+                keys = jax.random.split(step_key, len(leaves))
+                mean_g = jax.tree_util.tree_unflatten(
+                    treedef,
+                    [g + stddev * jax.random.normal(k, g.shape, jnp.float32)
+                     for k, g in zip(keys, leaves)],
+                )
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - fl.local_lr * g).astype(p.dtype),
+                params, mean_g,
+            )
+            if n_steps is not None:
+                live = step_i < n_steps
+                new = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(live, a, b), new, params)
+            return new, None
+
+        step_keys = jax.random.split(key, n_local)
+        params, _ = jax.lax.scan(
+            one_local_step, client_params,
+            (jnp.arange(n_local), step_keys, client_batch))
+        return params
+
+    return local_phase
+
+
 def make_fl_train_step(loss_fn: Callable, fl: FLStepConfig,
                        client_shardings=None, master_shardings=None):
     """loss_fn(params, batch) -> scalar mean loss, where every array in
@@ -86,44 +175,7 @@ def make_fl_train_step(loss_fn: Callable, fl: FLStepConfig,
         return jax.tree_util.tree_map(
             jax.lax.with_sharding_constraint, tree, client_shardings)
 
-    def local_phase(client_params, client_batch, key):
-        """One client's n_local DP-SGD steps.  client_params: bf16 tree."""
-
-        def one_local_step(params, inp):
-            step_key, micro_batch = inp
-            # scan over microbatches: clip each microbatch grad (Eq. 4)
-            def micro(acc, mb):
-                g = jax.grad(lambda p: loss_fn(p, mb))(params)
-                if fl.dp.granularity == "per_microbatch":
-                    g, _ = clip_tree(g, fl.dp.clip_norm)
-                return jax.tree_util.tree_map(jnp.add, acc, g), None
-
-            zeros = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            )
-            acc, _ = jax.lax.scan(micro, zeros, micro_batch)
-            mean_g = jax.tree_util.tree_map(lambda a: a / fl.n_micro, acc)
-            if (fl.dp.granularity == "per_microbatch"
-                    and fl.dp.noise_multiplier > 0):
-                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm / fl.n_micro
-                leaves, treedef = jax.tree_util.tree_flatten(mean_g)
-                keys = jax.random.split(step_key, len(leaves))
-                mean_g = jax.tree_util.tree_unflatten(
-                    treedef,
-                    [g + stddev * jax.random.normal(k, g.shape, jnp.float32)
-                     for k, g in zip(keys, leaves)],
-                )
-            new = jax.tree_util.tree_map(
-                lambda p, g: (p.astype(jnp.float32)
-                              - fl.local_lr * g).astype(p.dtype),
-                params, mean_g,
-            )
-            return new, None
-
-        step_keys = jax.random.split(key, fl.n_local)
-        params, _ = jax.lax.scan(one_local_step, client_params,
-                                 (step_keys, client_batch))
-        return params
+    local_phase = make_local_phase(loss_fn, fl)
 
     def fl_train_step(master, opt_state, batch, weights, key):
         # 1. broadcast master -> stacked per-client replicas.  Convert to
@@ -148,13 +200,8 @@ def make_fl_train_step(loss_fn: Callable, fl: FLStepConfig,
         stacked = constrain_clients(jax.tree_util.tree_map(bcast, master_c))
 
         # reshape global batch to (G, n_local, n_micro, per_micro, ...)
-        def split_batch(x):
-            per_client = x.shape[0] // G
-            per_micro = per_client // (fl.n_local * fl.n_micro)
-            return x.reshape((G, fl.n_local, fl.n_micro, per_micro)
-                             + x.shape[1:])
-
-        cbatch = jax.tree_util.tree_map(split_batch, batch)
+        cbatch = jax.tree_util.tree_map(
+            lambda x: split_batch(x, G, fl.n_local, fl.n_micro), batch)
         keys = jax.random.split(key, G + 1)
         client_keys, delta_key = keys[:G], keys[G]
 

@@ -44,16 +44,22 @@ def run_fedavg(
     target_acc: Optional[float] = None,
     engine: str = "cohort",
     engine_cfg=None,
+    mesh=None,
 ) -> tuple:
-    """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog)."""
+    """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog).
+
+    ``mesh`` (a ``launch.mesh`` mesh) partitions the cohort engine's
+    client axis over the mesh's data axes — cohort-engine only."""
     if engine == "cohort":
         from repro.engine import run_fedavg_engine
         return run_fedavg_engine(
             clients, global_params, accuracy_fn, test_data, rounds=rounds,
             seed=seed, eval_every=eval_every, target_acc=target_acc,
-            engine_cfg=engine_cfg)
+            engine_cfg=engine_cfg, mesh=mesh)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
+    if mesh is not None:
+        raise ValueError("mesh execution requires engine='cohort'")
     return _run_fedavg_legacy(
         clients, global_params, accuracy_fn, test_data, rounds=rounds,
         seed=seed, eval_every=eval_every, target_acc=target_acc)
@@ -72,6 +78,7 @@ def run_async(
     target_acc: Optional[float] = None,
     engine: str = "cohort",
     engine_cfg=None,
+    mesh=None,
 ) -> tuple:
     """Event-driven asynchronous FL (Eq. 10-11).
 
@@ -80,6 +87,9 @@ def run_async(
     times come from each client's VirtualClock, so fast tiers complete
     many rounds while slow tiers finish one (the paper's participation
     skew emerges, it is not scripted).
+
+    ``mesh`` partitions the cohort engine's client axis over the mesh's
+    data axes — cohort-engine only.
     """
     if engine == "cohort":
         from repro.engine import run_async_engine
@@ -87,9 +97,11 @@ def run_async(
             clients, global_params, accuracy_fn, test_data, strategy,
             max_updates=max_updates, max_time=max_time, seed=seed,
             eval_every=eval_every, target_acc=target_acc,
-            engine_cfg=engine_cfg)
+            engine_cfg=engine_cfg, mesh=mesh)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
+    if mesh is not None:
+        raise ValueError("mesh execution requires engine='cohort'")
     return _run_async_legacy(
         clients, global_params, accuracy_fn, test_data, strategy,
         max_updates=max_updates, max_time=max_time, seed=seed,

@@ -120,12 +120,16 @@ def run_experiment(
     eval_every: int = 1,
     engine: str = "cohort",
     engine_cfg=None,
+    mesh=None,
     **strategy_kw,
 ):
     """One full FL run; returns (params, RunLog).
 
     ``engine`` selects the execution path: "cohort" (the batched engine in
     repro.engine, default) or "legacy" (the per-client reference loop).
+    ``mesh`` (cohort engine only) partitions the cohort client axis over
+    the mesh's data axes — pair it with
+    ``engine_cfg=EngineConfig(client_axis="vmap" or "fl_step", ...)``.
     """
     clients, params, acc_fn, pooled_test = build_testbed(cfg)
     if strategy_name == "fedavg":
@@ -133,6 +137,7 @@ def run_experiment(
             clients, params, acc_fn, pooled_test,
             rounds=rounds, seed=cfg.seed, target_acc=target_acc,
             eval_every=eval_every, engine=engine, engine_cfg=engine_cfg,
+            mesh=mesh,
         )
     if strategy_name in ("fedasync", "fedasync_nostale", "fedbuff", "adaptive_async"):
         kw = dict(alpha=alpha)
@@ -144,6 +149,6 @@ def run_experiment(
             clients, params, acc_fn, pooled_test, strat,
             max_updates=max_updates, seed=cfg.seed, target_acc=target_acc,
             eval_every=max(1, eval_every), engine=engine,
-            engine_cfg=engine_cfg,
+            engine_cfg=engine_cfg, mesh=mesh,
         )
     raise ValueError(strategy_name)

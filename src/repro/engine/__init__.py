@@ -23,6 +23,14 @@ tests/test_engine_parity.py).  With ``EngineConfig.staleness_window=0``
 the cohort path reproduces the legacy loop update-for-update; positive
 windows batch near-simultaneous completions for throughput
 (benchmarks/fl_benchmarks.py::bench_engine_throughput).
+
+Mesh execution (``repro.engine.mesh_backend``): pass ``mesh=`` to the
+frontends (or set ``EngineConfig.mesh``) and the stacked client axis is
+partitioned over the mesh's data axes, so full-size cohorts genuinely run
+one member per device group.  Executor choice: single CPU device —
+``client_axis="unroll"``; mesh — ``"vmap"`` (simulation math) or
+``"fl_step"`` (the production per-microbatch-DP round from
+``core/fl_step.py``, driven by the same event loop).
 """
 from repro.engine.cohort import (
     LocalRoundPlan,
@@ -32,7 +40,9 @@ from repro.engine.cohort import (
     pop_cohort,
 )
 from repro.engine.cohort_step import (
+    CLIENT_AXES,
     cached_cohort_step,
+    invalidate_step_cache,
     make_cohort_step,
     stack_trees,
     unstack_tree,
@@ -43,14 +53,26 @@ from repro.engine.engine import (
     run_async_engine,
     run_fedavg_engine,
 )
+from repro.engine.mesh_backend import (
+    CohortSharding,
+    assert_cohort_partitioned,
+    cohort_mesh,
+    cohort_spec,
+)
 
 __all__ = [
+    "CLIENT_AXES",
     "CohortRunner",
+    "CohortSharding",
     "EngineConfig",
     "LocalRoundPlan",
+    "assert_cohort_partitioned",
     "cached_cohort_step",
+    "cohort_mesh",
+    "cohort_spec",
     "fedavg_weights",
     "fold_cohort_weights",
+    "invalidate_step_cache",
     "make_cohort_step",
     "plan_batches",
     "pop_cohort",

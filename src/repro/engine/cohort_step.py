@@ -14,7 +14,7 @@ Members whose local round is shorter than the cohort's padded step count
 are masked with ``jnp.where`` (a masked step leaves params/opt state/key
 untouched).
 
-Three client-axis executors (``client_axis``), chosen from CPU
+Four client-axis executors (``client_axis``), chosen from CPU
 measurements on the SER testbed (B=32, 5 local steps, 317k params; legacy
 per-step dispatch = 377 ms per local round):
 
@@ -22,7 +22,8 @@ per-step dispatch = 377 ms per local round):
   AND the local steps inside one jit.  ~250 ms per client warm (the
   whole-round fusion is where the engine's measured speedup comes from),
   but XLA compile time scales with K * S — keep ``max_cohort`` small and
-  let the cross-run step cache amortize it.
+  let the cross-run step cache amortize it.  The right choice on a single
+  CPU device.
 * ``"map"``  — ``lax.map`` over the stacked axis: compile cost is
   K-independent (body compiled once) but XLA CPU optimizes while-loop
   bodies poorly (~2x slower warm than the flat program).  Use for large
@@ -30,9 +31,19 @@ per-step dispatch = 377 ms per local round):
 * ``"vmap"`` — ``jax.vmap`` over the stacked axis, composing with
   ``client_shardings`` exactly like ``fl_train_step``'s broadcast/stack
   layout: on a mesh the cohort partitions over the data axes and members
-  genuinely run in parallel.  (On CPU it turns every convolution into a
-  batched-filter conv that XLA lowers off the fast path — do not use it
-  single-device.)
+  genuinely run in parallel (build the shardings with
+  ``engine.mesh_backend.CohortSharding``).  On a single CPU device it
+  turns every convolution into a batched-filter conv that XLA lowers off
+  the fast path — do not use it there.
+* ``"fl_step"`` — the PRODUCTION local round: each member runs
+  ``core/fl_step.make_local_phase`` (per-microbatch DP clipping, one
+  noise draw per local step, plain ``local_lr`` SGD — the client
+  optimizer state passes through untouched), vmapped over the stacked
+  axis and composing with ``client_shardings`` the same way.  Requires an
+  ``FLStepConfig`` (``fl_cfg``); with DP off and ``n_micro=1`` it
+  computes exactly the simulation math (the tier-1 parity test asserts
+  it), with DP on it is the per-microbatch granularity the large
+  architectures train under rather than the paper's per-example Eq. 4.
 """
 from __future__ import annotations
 
@@ -48,6 +59,19 @@ from repro.core.dp import DPConfig, dp_mean_gradient
 # to a rolled scan to keep compile times bounded
 _MAX_FULL_UNROLL = 16
 
+# the one place the executor set is defined: make_cohort_step and
+# EngineConfig both validate against it (they used to disagree on the
+# default too — "map" vs "unroll" — which handed direct callers the
+# executor the docstring calls ~2x slower on CPU)
+CLIENT_AXES = ("unroll", "map", "vmap", "fl_step")
+
+
+def validate_client_axis(client_axis: str) -> str:
+    if client_axis not in CLIENT_AXES:
+        raise ValueError(
+            f"client_axis must be one of {CLIENT_AXES}: {client_axis!r}")
+    return client_axis
+
 
 def _tree_where(mask, new, old):
     return jax.tree_util.tree_map(
@@ -56,7 +80,8 @@ def _tree_where(mask, new, old):
 
 def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                      use_dp: bool = True, use_kernel: bool = False,
-                     client_axis: str = "map", client_shardings=None):
+                     client_axis: str = "unroll", client_shardings=None,
+                     fl_cfg=None):
     """Build the jitted cohort program.
 
     Returns ``(cohort_step, merge_cohort)``:
@@ -76,14 +101,28 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     reduction over the client axis (the ``weights``-vector aggregation of
     ``fl_train_step``, here carrying alpha/(1+tau) staleness weights or
     FedAvg's n_k / sum n).
+
+    ``client_shardings`` may be a pytree of NamedShardings congruent with
+    the stacked params (legacy form) or a callable ``leaf -> sharding``
+    applied to EVERY stacked input — params, optimizer state and batches
+    — at trace time (``engine.mesh_backend.CohortSharding``; being
+    shape-aware it can partition the full-size cohorts and replicate the
+    undersized tails).  ``fl_cfg`` (an ``FLStepConfig``) is required by
+    the ``"fl_step"`` executor and ignored by the others.
     """
-    if client_axis not in ("unroll", "map", "vmap"):
+    validate_client_axis(client_axis)
+    if client_axis == "fl_step" and fl_cfg is None:
         raise ValueError(
-            f"client_axis must be 'unroll', 'map' or 'vmap': {client_axis!r}")
+            "client_axis='fl_step' drives the production local round and "
+            "needs an FLStepConfig (EngineConfig.fl_cfg / fl_cfg=)")
 
     def constrain(tree):
         if client_shardings is None:
             return tree
+        if callable(client_shardings):
+            return jax.tree_util.tree_map(
+                lambda l: jax.lax.with_sharding_constraint(
+                    l, client_shardings(l)), tree)
         return jax.tree_util.tree_map(
             jax.lax.with_sharding_constraint, tree, client_shardings)
 
@@ -127,11 +166,48 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             body, (params, opt_state, key), (jnp.arange(s_max), batches))
         return p, o
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    if client_axis == "fl_step":
+        from repro.core.fl_step import make_local_phase
+
+        def batch_mean_loss(p, mb):
+            # the engine's loss is per-example; fl_step's local phase
+            # consumes a batch-mean loss (production loss signature)
+            return jnp.mean(jax.vmap(lambda ex: loss_fn(p, ex))(mb))
+
+        fl_local = make_local_phase(batch_mean_loss, fl_cfg)
+
+        def fl_member_phase(params, opt_state, key, member_batches, steps):
+            def to_micro(l):
+                s, b = l.shape[0], l.shape[1]
+                if b % fl_cfg.n_micro:
+                    raise ValueError(
+                        f"cohort batch size {b} is not divisible by "
+                        f"fl_cfg.n_micro={fl_cfg.n_micro}")
+                return l.reshape((s, fl_cfg.n_micro, b // fl_cfg.n_micro)
+                                 + l.shape[2:])
+
+            micro = jax.tree_util.tree_map(to_micro, member_batches)
+            # production semantics: plain local_lr SGD inside the round —
+            # the client optimizer state passes through untouched (the
+            # server-side merge is the engine's weights-vector reduction)
+            return fl_local(params, micro, key, n_steps=steps), opt_state
+
+    # donation is only a win when input and output buffers can alias;
+    # under mesh shardings the replicated inputs and partitioned outputs
+    # never do, and jax warns on every call — so don't donate there
+    jit_kw = {} if client_shardings is not None else {"donate_argnums": (0, 1)}
+
+    @functools.partial(jax.jit, **jit_kw)
     def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps):
         stacked_params = constrain(stacked_params)
+        if callable(client_shardings):
+            stacked_opt = constrain(stacked_opt)
+            batches = constrain(batches)
         if client_axis == "vmap":
             new_params, new_opt = jax.vmap(local_phase)(
+                stacked_params, stacked_opt, keys, batches, n_steps)
+        elif client_axis == "fl_step":
+            new_params, new_opt = jax.vmap(fl_member_phase)(
                 stacked_params, stacked_opt, keys, batches, n_steps)
         elif client_axis == "map":
             new_params, new_opt = jax.lax.map(
@@ -185,27 +261,82 @@ def _hashable_loss(loss_fn):
     return loss_fn
 
 
+_UNCACHEABLE = object()  # sentinel: shardings we cannot turn into a key
+
+
+def _shardings_key(client_shardings):
+    """Hashable cache key for the shardings argument.  ``CohortSharding``
+    hashes by (mesh, arch_cfg); a raw pytree of NamedShardings flattens to
+    (treedef, leaves); anything unhashable disables caching for that call
+    only (returns the _UNCACHEABLE sentinel, never None — None means "no
+    shardings" and is a perfectly cacheable key)."""
+    if client_shardings is None:
+        return None
+    try:
+        hash(client_shardings)
+        return client_shardings
+    except TypeError:
+        pass
+    try:
+        leaves, treedef = jax.tree_util.tree_flatten(client_shardings)
+        key = (treedef, tuple(leaves))
+        hash(key)
+        return key
+    except TypeError:
+        return _UNCACHEABLE
+
+
 def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
-                       client_axis="map", client_shardings=None):
-    """Memoized :func:`make_cohort_step` (no caching when shardings are
-    given — NamedShardings are mesh-lifetime objects)."""
-    if client_shardings is not None:
-        return make_cohort_step(loss_fn, dp_cfg, opt, use_dp=use_dp,
-                                use_kernel=use_kernel,
-                                client_axis=client_axis,
-                                client_shardings=client_shardings)
+                       client_axis="unroll", client_shardings=None,
+                       fl_cfg=None):
+    """Memoized :func:`make_cohort_step`, keyed per (training config,
+    executor, shardings/mesh): scenario sweeps over the same testbed AND
+    mesh reuse the compiled programs instead of re-tracing every run.
+    Supplying shardings no longer bypasses the cache — mesh-lifetime
+    entries are dropped explicitly with :func:`invalidate_step_cache`."""
+
+    def build():
+        return make_cohort_step(
+            loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
+            client_axis=client_axis, client_shardings=client_shardings,
+            fl_cfg=fl_cfg)
+
+    sh_key = _shardings_key(client_shardings)
+    if sh_key is _UNCACHEABLE:
+        return build()
     key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
-           client_axis)
+           client_axis, fl_cfg, sh_key)
     try:
         hash(key)
     except TypeError:
-        return make_cohort_step(loss_fn, dp_cfg, opt, use_dp=use_dp,
-                                use_kernel=use_kernel, client_axis=client_axis)
+        return build()
     if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = make_cohort_step(
-            loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
-            client_axis=client_axis)
+        _STEP_CACHE[key] = build()
     return _STEP_CACHE[key]
+
+
+def _mentions_mesh(obj, mesh) -> bool:
+    if isinstance(obj, tuple):
+        return any(_mentions_mesh(o, mesh) for o in obj)
+    return getattr(obj, "mesh", None) == mesh
+
+
+def invalidate_step_cache(mesh=None) -> int:
+    """Explicitly drop cached compiled cohort steps.
+
+    With ``mesh``, drop only entries whose shardings were built for that
+    mesh (call it when a mesh's devices go away, or between sweeps that
+    rebuild meshes); with no argument, clear everything.  Returns the
+    number of entries dropped.
+    """
+    if mesh is None:
+        n = len(_STEP_CACHE)
+        _STEP_CACHE.clear()
+        return n
+    drop = [k for k in _STEP_CACHE if _mentions_mesh(k, mesh)]
+    for k in drop:
+        del _STEP_CACHE[k]
+    return len(drop)
 
 
 def stack_trees(trees):

@@ -34,7 +34,7 @@ cohorts and is where the throughput win comes from (see
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 import jax
@@ -48,7 +48,7 @@ from repro.engine.cohort import (
     LocalRoundPlan, fedavg_weights, fold_cohort_weights, plan_batches,
     pop_cohort, steps_per_round)
 from repro.engine.cohort_step import (
-    cached_cohort_step, stack_trees, unstack_tree)
+    cached_cohort_step, stack_trees, unstack_tree, validate_client_axis)
 
 
 @dataclass(frozen=True)
@@ -56,14 +56,40 @@ class EngineConfig:
     staleness_window: float = 0.0  # virtual seconds of completions per cohort
     max_cohort: int = 2            # cap on compiled-step client axis ("unroll"
                                    # compile time scales with it; see cohort_step)
+                                   # — on a mesh set it to a multiple of the
+                                   # data-axis product so cohorts partition
     fused_merge: bool = True       # fold FedAvg/FedAsync into the weights vector
     delta: float = 1e-5            # accountant delta (matches legacy loop)
-    client_axis: str = "unroll"    # unroll (CPU) | map | vmap (mesh, fl_step-style)
+    client_axis: str = "unroll"    # unroll (single CPU) | map | vmap (mesh,
+                                   # sim math) | fl_step (mesh, production
+                                   # per-microbatch-DP round) — see cohort_step
     pow2_cohorts: bool = True      # bucket cohort sizes to bound recompiles
+    mesh: Optional[object] = None  # jax Mesh: partition the cohort axis over
+                                   # its data axes (engine.mesh_backend builds
+                                   # the CohortSharding); None = replicated
+    fl_cfg: Optional[object] = None  # FLStepConfig for client_axis="fl_step"
+
+    def __post_init__(self):
+        validate_client_axis(self.client_axis)
+
+
+def _resolve_mesh_cfg(cfg: EngineConfig, mesh) -> EngineConfig:
+    """Fold a frontend-supplied mesh into the engine config (an explicit
+    EngineConfig.mesh wins over the run_experiment/run_* keyword)."""
+    if mesh is not None and cfg.mesh is None:
+        cfg = replace(cfg, mesh=mesh)
+    return cfg
 
 
 class CohortRunner:
-    """Owns the compiled cohort program and the host-side plan/IO glue."""
+    """Owns the compiled cohort program and the host-side plan/IO glue.
+
+    When ``cfg.mesh`` is set (or ``client_shardings`` is passed
+    explicitly), the compiled step constrains every stacked input's
+    leading cohort dim onto the mesh's data axes — the members of a
+    full-size cohort then genuinely run on different devices (see
+    :mod:`repro.engine.mesh_backend`).
+    """
 
     def __init__(self, clients, cfg: EngineConfig,
                  client_shardings=None):
@@ -85,10 +111,31 @@ class CohortRunner:
         self.s_max = max(
             steps_per_round(c.n_train, c.batch_size, c.local_epochs)
             for c in clients)
+        if cfg.client_axis == "fl_step" and c0.use_dp:
+            # the host-side accountant (dispatch) charges the clients'
+            # dp_cfg mechanism: eps depends on (q, sigma, steps) — the
+            # sampling rate and step count are the same either way and
+            # eps is clip-norm-independent, so the bound transfers to the
+            # executed per-microbatch mechanism ONLY when the noise
+            # multipliers agree and noise is actually added per step
+            fl_dp = cfg.fl_cfg.dp if cfg.fl_cfg is not None else None
+            if (fl_dp is None or fl_dp.granularity != "per_microbatch"
+                    or fl_dp.noise_multiplier != c0.dp_cfg.noise_multiplier):
+                raise ValueError(
+                    "client_axis='fl_step' with DP clients requires "
+                    "fl_cfg.dp to use granularity='per_microbatch' with the "
+                    "same noise_multiplier as the clients' dp_cfg "
+                    f"(got {fl_dp!r} vs sigma={c0.dp_cfg.noise_multiplier}) "
+                    "— otherwise the reported epsilon does not describe "
+                    "the executed mechanism")
+        if client_shardings is None and cfg.mesh is not None:
+            from repro.engine.mesh_backend import CohortSharding
+            client_shardings = CohortSharding(cfg.mesh)
+        self.client_shardings = client_shardings
         self.cohort_step, self.merge_cohort = cached_cohort_step(
             c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
             use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
-            client_shardings=client_shardings)
+            client_shardings=client_shardings, fl_cfg=cfg.fl_cfg)
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, c, global_params, key, server_version: int
@@ -189,11 +236,13 @@ def run_fedavg_engine(
     eval_every: int = 1,
     target_acc: Optional[float] = None,
     engine_cfg: Optional[EngineConfig] = None,
+    mesh=None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9): each round is one full-population
     barrier, executed as ceil(N / max_cohort) compiled cohort chunks whose
-    dataset-size-weighted partial sums accumulate into the new globals."""
-    cfg = engine_cfg or EngineConfig()
+    dataset-size-weighted partial sums accumulate into the new globals.
+    ``mesh`` partitions the cohort axis (see CohortRunner)."""
+    cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
     runner = CohortRunner(clients, cfg)
     log = RunLog(strategy="fedavg")
     key = jax.random.PRNGKey(seed)
@@ -267,12 +316,14 @@ def run_async_engine(
     eval_every: int = 5,
     target_acc: Optional[float] = None,
     engine_cfg: Optional[EngineConfig] = None,
+    mesh=None,
 ) -> tuple:
     """Event-driven async FL (Eq. 10-11) over cohorts popped from the
     virtual-clock heap.  ``staleness_window=0`` reproduces the legacy loop
     update-for-update; a positive window batches near-simultaneous
-    completions into one compiled step."""
-    cfg = engine_cfg or EngineConfig()
+    completions into one compiled step.  ``mesh`` partitions the cohort
+    axis (see CohortRunner)."""
+    cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
     runner = CohortRunner(clients, cfg)
     log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)

@@ -1,0 +1,152 @@
+"""Mesh backend for the cohort engine: client-axis shardings + helpers.
+
+The compiled cohort step (:mod:`repro.engine.cohort_step`) stacks every
+cohort member on a leading client axis — the same layout
+``core/fl_step.py``'s ``fl_train_step`` uses for its G client groups.  On
+a mesh, constraining that leading axis onto the ``data``/``pod`` axes is
+what turns the vmapped local phase into genuinely parallel per-member
+execution; without the constraint XLA keeps the stacked program fully
+replicated and every device redoes the whole cohort's work.
+
+:class:`CohortSharding` is the piece the engine plumbs end-to-end: a
+hashable ``leaf -> NamedSharding`` rule built from a
+``launch.mesh``-style mesh, applied per stacked leaf at trace time
+(params, optimizer state and batches all carry the leading cohort dim, so
+one rank-generic rule covers them), and usable as a compiled-step cache
+key so scenario sweeps over the same mesh reuse compiled programs
+(``cohort_step.cached_cohort_step`` caches per (step-key, mesh);
+``cohort_step.invalidate_step_cache(mesh=...)`` drops a mesh's entries).
+
+Executor-choice guidance (measured on this repo's surfaces):
+
+* single CPU device — ``client_axis="unroll"`` (flat program; vmap turns
+  the SER convolutions into batched-filter convs off XLA CPU's fast path);
+* mesh (forced host devices or real accelerators) — ``"vmap"``
+  (simulation math) or ``"fl_step"`` (production per-microbatch-DP round
+  via ``core/fl_step.make_local_phase``) with a :class:`CohortSharding`.
+
+Partitioning caveat: GSPMD silently REPLICATES a leading-dim constraint
+whose size does not divide evenly over the named axes (verified on CPU:
+a (2, ...) or (4, ...) array constrained to an 8-way axis comes back
+replicated).  :func:`cohort_spec` is therefore shape-aware — it emits the
+partitioned spec only when the cohort size is a multiple of the data-axis
+product and falls back to replication otherwise.  Pick
+``EngineConfig.max_cohort`` as a multiple of the data-axis product (with
+``pow2_cohorts`` and a pow2 device count the full-size cohorts then always
+partition; undersized tail cohorts run replicated, which is correct, just
+not parallel).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, make_host_mesh
+# the cohort axis partitions over the same pod x data product that
+# fl_train_step calls its client-group axis — one definition, not two
+from repro.launch.mesh import num_client_groups as _data_axis_size
+
+
+def cohort_mesh(max_cohort: Optional[int] = None):
+    """Host mesh for sharded cohorts: every available device on the data
+    axis (clamped to a divisor of the device count, and to ``max_cohort``
+    when given so a full cohort maps one-member-per-device-group)."""
+    n = len(jax.devices())
+    return make_host_mesh(data=n if max_cohort is None else min(n, max_cohort))
+
+
+def cohort_spec(mesh, shape) -> P:
+    """PartitionSpec for one cohort-stacked leaf: the leading client dim
+    over the ``pod``/``data`` axes when the cohort size divides their
+    product evenly, fully replicated otherwise (GSPMD would silently
+    replicate an uneven leading-dim partition anyway — see module
+    docstring)."""
+    shape = tuple(shape)
+    if not shape or shape[0] % _data_axis_size(mesh):
+        return P()
+    daxes = data_axes(mesh)
+    return P(daxes if len(daxes) > 1 else daxes[0],
+             *([None] * (len(shape) - 1)))
+
+
+class CohortSharding:
+    """Hashable ``leaf -> NamedSharding`` rule for cohort-stacked pytrees.
+
+    Passed as ``client_shardings`` to the cohort step, which applies it to
+    every stacked leaf inside the traced program (so it sees the concrete
+    cohort size K of the shape being compiled; each K is its own XLA
+    program, so the rule may partition one K and replicate another).
+
+    With ``arch_cfg`` (a model-zoo architecture config) tensor dims are
+    additionally sharded over ``model`` via
+    ``launch.shardings.leaf_spec``'s ``role="client"`` rules — exactly
+    ``fl_train_step``'s stacked layout.  Without it only the leading
+    client dim is partitioned, which is the right call for the small SER
+    CNN: zero tensor-parallel collectives inside the local phase.
+
+    Equality/hash key on ``(mesh, arch_cfg)`` so
+    ``cached_cohort_step`` memoizes one compiled step per mesh.
+    """
+
+    def __init__(self, mesh, arch_cfg=None):
+        self.mesh = mesh
+        self.arch_cfg = arch_cfg
+
+    def spec(self, shape) -> P:
+        shape = tuple(shape)
+        base = cohort_spec(self.mesh, shape)
+        if self.arch_cfg is None or len(shape) < 2:
+            return base
+        from repro.launch.shardings import leaf_spec
+        tensor = leaf_spec(shape, self.arch_cfg, self.mesh, role="client")
+        # keep cohort_spec's shape-aware leading dim (leaf_spec assumes the
+        # leading dim always partitions) and graft the tensor dims onto it
+        lead = base[0] if len(base) else None
+        return P(lead, *tuple(tensor)[1:])
+
+    def __call__(self, leaf) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(leaf.shape))
+
+    def __eq__(self, other):
+        return (type(other) is CohortSharding and self.mesh == other.mesh
+                and self.arch_cfg == other.arch_cfg)
+
+    def __hash__(self):
+        return hash((CohortSharding, self.mesh, self.arch_cfg))
+
+    def __repr__(self):
+        return (f"CohortSharding(mesh={dict(self.mesh.shape)}, "
+                f"arch_cfg={'set' if self.arch_cfg is not None else None})")
+
+
+def assert_cohort_partitioned(tree, mesh) -> dict:
+    """Assert every leaf of a cohort-stacked tree is GENUINELY partitioned
+    on its leading axis: each addressable shard holds exactly
+    ``K / data_axis_product`` members (not a padded or replicated copy).
+
+    Returns ``{leaf_path: members_per_shard}`` for smoke-test output.
+    Raises ``AssertionError`` naming the first offending leaf — the
+    regression this guards is GSPMD quietly replicating the cohort axis,
+    which keeps results correct while silently destroying the parallelism.
+    """
+    n_data = _data_axis_size(mesh)
+    report = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path)
+        k = leaf.shape[0]
+        if k % n_data:
+            raise AssertionError(
+                f"{name}: cohort size {k} is not a multiple of the "
+                f"data-axis product {n_data} — this shape cannot partition")
+        expect = (k // n_data,) + tuple(leaf.shape[1:])
+        shard_shapes = {s.data.shape for s in leaf.addressable_shards}
+        if shard_shapes != {expect}:
+            raise AssertionError(
+                f"{name}: expected every shard to hold {expect} of global "
+                f"{tuple(leaf.shape)}, got shards {sorted(shard_shapes)} — "
+                f"the cohort axis is replicated, not partitioned")
+        report[name] = k // n_data
+    return report

@@ -17,12 +17,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def largest_divisor(n: int, k: int) -> int:
+    """Largest divisor of ``n`` that is <= ``k`` (always >= 1)."""
+    k = max(1, min(k, n))
+    while n % k:
+        k -= 1
+    return k
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (examples / integration tests)."""
+    """Small mesh over whatever devices exist (examples / integration tests).
+
+    Requested axis sizes are clamped to DIVISORS of the device count
+    (largest divisor <= the request), never just ``min``-clamped: e.g.
+    ``data=4`` on 6 devices used to build a ``(4, 1)`` mesh — invalid on
+    jax versions that require the product to cover the device list, and
+    silently stranding two devices on versions that truncate — and
+    ``data=0`` divided by zero.  Now ``data=4`` on 6 devices gives
+    ``(3, ...)`` and the model axis is clamped to a divisor of what
+    remains, so ``data * model`` always divides the device count.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"))
+    data = largest_divisor(n, data)
+    model = largest_divisor(n // data, model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])
 
 
 def data_axes(mesh) -> tuple:

@@ -1,8 +1,10 @@
 """Cohort engine vs legacy per-client loop: the engine must reproduce the
 legacy event loop update-for-update (params allclose, IDENTICAL per-tier
-update counts / epsilon trajectories / staleness), plus unit tests for the
-cohort weights vector and cohort formation."""
+update counts / epsilon trajectories / staleness), plus executor parity
+(vmap / fl_step vs unroll) and unit tests for the cohort weights vector
+and cohort formation."""
 import heapq
+from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core.aggregation import FedAsync
-from repro.core.testbed import run_experiment
+from repro.core.testbed import build_testbed, run_experiment
 from repro.engine import EngineConfig, fedavg_weights, fold_cohort_weights
 from repro.engine.cohort import plan_batches, pop_cohort
 from repro.pytree import tree_lin
@@ -84,6 +86,125 @@ def test_fedbuff_and_adaptive_route_through_engine(micro_cfg):
                               eval_every=6, alpha=0.4, eps_target=50.0,
                               engine="cohort")
     assert sum(log_a.update_counts.values()) == 6
+
+
+# ---------------------------------------------------------------------------
+# executor parity: vmap / fl_step vs unroll (single device, unsharded —
+# the sharded variants run in the multi-device job, tests/test_mesh_backend)
+# ---------------------------------------------------------------------------
+
+def test_vmap_executor_matches_unroll(micro_cfg):
+    """client_axis="vmap" must match the unroll executor's params allclose
+    with identical RunLog bookkeeping for FedAvg and FedAsync.  DP off for
+    the tight tolerance: under DP the noise-dominated near-zero gradients
+    pick up sign flips from the batched-vs-unbatched conv lowering and
+    Adam's normalized first step amplifies each to ±lr."""
+    nodp = replace(micro_cfg, use_dp=False)
+    for strat, kw in (("fedavg", dict(rounds=2)),
+                      ("fedasync", dict(max_updates=8, eval_every=4,
+                                        alpha=0.4))):
+        p_u, log_u = run_experiment(strat, nodp, engine="cohort", **kw)
+        p_v, log_v = run_experiment(
+            strat, nodp, engine="cohort",
+            engine_cfg=EngineConfig(client_axis="vmap"), **kw)
+        _assert_params_close(p_u, p_v)
+        _assert_logs_match(log_u, log_v)
+
+
+def test_vmap_executor_dp_bookkeeping_matches(micro_cfg):
+    """With DP on the executors agree at the Adam-sign-amplified tolerance
+    (see above) and the privacy/participation bookkeeping stays exact."""
+    kw = dict(max_updates=6, eval_every=6, alpha=0.4, engine="cohort")
+    p_u, log_u = run_experiment("fedasync", micro_cfg, **kw)
+    p_v, log_v = run_experiment(
+        "fedasync", micro_cfg,
+        engine_cfg=EngineConfig(client_axis="vmap"), **kw)
+    _assert_params_close(p_u, p_v, rtol=1e-2, atol=5e-3)
+    assert log_u.update_counts == log_v.update_counts
+    assert log_u.eps_trajectory == log_v.eps_trajectory
+    assert log_u.staleness == log_v.staleness
+
+
+def test_fl_step_executor_matches_simulation(micro_cfg):
+    """client_axis="fl_step" drives the production per-microbatch local
+    round (core/fl_step.make_local_phase) from the engine event loop.
+    With DP off, n_micro=1 and a plain-SGD client optimizer the production
+    math IS the simulation math, so at staleness_window=0 it must match
+    the unroll executor allclose with identical bookkeeping."""
+    from repro.core.aggregation import FedAsync as FA
+    from repro.core.dp import DPConfig
+    from repro.core.fl_step import FLStepConfig
+    from repro.engine import run_async_engine
+    from repro.optim.optimizers import SGD
+
+    fl = FLStepConfig(
+        num_clients=1, n_local=1, n_micro=1, local_lr=0.05,
+        dp=DPConfig(clip_norm=1e9, noise_multiplier=0.0,
+                    granularity="per_microbatch"))
+
+    def run(ec):
+        clients, params, acc_fn, test = build_testbed(
+            replace(micro_cfg, use_dp=False))
+        for c in clients:  # production local phase = plain local_lr SGD
+            c.opt = SGD(lr=fl.local_lr)
+        return run_async_engine(
+            clients, params, acc_fn, test, FA(alpha=0.4), max_updates=8,
+            eval_every=4, seed=micro_cfg.seed, engine_cfg=ec)
+
+    p_u, log_u = run(EngineConfig())
+    p_f, log_f = run(EngineConfig(client_axis="fl_step", fl_cfg=fl))
+    _assert_params_close(p_u, p_f)
+    _assert_logs_match(log_u, log_f)
+
+
+def test_fl_step_executor_rejects_incoherent_dp_accounting(micro_cfg):
+    """With DP clients, the accountant charges the clients' dp_cfg; the
+    fl_step executor executes fl_cfg.dp — the runner must refuse configs
+    where the reported epsilon would not describe the executed mechanism
+    (e.g. noiseless fl_cfg under use_dp=True clients)."""
+    from repro.core.dp import DPConfig
+    from repro.core.fl_step import FLStepConfig
+    from repro.engine import CohortRunner
+
+    clients, _, _, _ = build_testbed(micro_cfg)   # use_dp=True, sigma=1.0
+    noiseless = FLStepConfig(
+        num_clients=1, n_micro=1,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.0,
+                    granularity="per_microbatch"))
+    with pytest.raises(ValueError, match="executed mechanism"):
+        CohortRunner(clients, EngineConfig(client_axis="fl_step",
+                                           fl_cfg=noiseless))
+    # matching noise at per-microbatch granularity is accepted
+    coherent = FLStepConfig(
+        num_clients=1, n_micro=1,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=micro_cfg.sigma,
+                    granularity="per_microbatch"))
+    CohortRunner(clients, EngineConfig(client_axis="fl_step",
+                                       fl_cfg=coherent))
+
+
+def test_fl_step_executor_requires_fl_cfg():
+    from repro.engine.cohort_step import make_cohort_step
+    from repro.core.dp import DPConfig
+    from repro.optim.optimizers import Adam
+    with pytest.raises(ValueError, match="FLStepConfig"):
+        make_cohort_step(lambda p, ex: 0.0, DPConfig(), Adam(),
+                         client_axis="fl_step")
+
+
+def test_client_axis_validated_in_one_place():
+    """EngineConfig and make_cohort_step share one executor set (their
+    defaults used to disagree: "unroll" vs "map")."""
+    import inspect
+    from repro.engine import CLIENT_AXES
+    from repro.engine.cohort_step import cached_cohort_step, make_cohort_step
+    assert EngineConfig().client_axis == "unroll"
+    for fn in (make_cohort_step, cached_cohort_step):
+        assert inspect.signature(fn).parameters["client_axis"].default == \
+            "unroll"
+    with pytest.raises(ValueError, match="client_axis"):
+        EngineConfig(client_axis="bogus")
+    assert set(CLIENT_AXES) == {"unroll", "map", "vmap", "fl_step"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,68 @@
+"""fl_step seams: split_batch validation (was a cryptic XLA reshape
+error) and the factored local phase the cohort engine drives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dp import DPConfig
+from repro.core.fl_step import (
+    FLStepConfig, make_fl_train_step, make_local_phase,
+    make_server_optimizer, split_batch)
+
+_NOCLIP = DPConfig(clip_norm=1e9, noise_multiplier=0.0,
+                   granularity="per_microbatch")
+
+
+def test_split_batch_layout():
+    y = split_batch(jnp.zeros((24, 5)), G=2, n_local=3, n_micro=2)
+    assert y.shape == (2, 3, 2, 2, 5)
+
+
+def test_split_batch_rejects_indivisible_global_batch():
+    with pytest.raises(ValueError, match=r"num_clients G=3"):
+        split_batch(jnp.zeros((20, 5)), G=3, n_local=1, n_micro=2)
+
+
+def test_split_batch_rejects_indivisible_per_client_slice():
+    with pytest.raises(ValueError, match=r"n_local\*n_micro = 2\*3"):
+        split_batch(jnp.zeros((20, 5)), G=2, n_local=2, n_micro=3)
+
+
+def test_fl_train_step_names_bad_batch_config():
+    """The compiled step surfaces the ValueError at trace time, naming
+    the offending shape and config values."""
+    fl = FLStepConfig(num_clients=2, n_local=2, n_micro=2, dp=_NOCLIP)
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"]) ** 2)
+
+    params = {"w": jnp.ones((4, 2))}
+    step = make_fl_train_step(loss, fl)
+    opt_state = make_server_optimizer(fl).init(params)
+    batch = {"x": jnp.zeros((12, 4))}    # 12/G=6 not divisible by 2*2
+    with pytest.raises(ValueError, match=r"global batch 12 over G=2"):
+        step(params, opt_state, batch, jnp.ones((2,)) / 2,
+             jax.random.PRNGKey(0))
+
+
+def test_local_phase_step_count_from_batch_and_mask():
+    """make_local_phase takes its step count from the batch's leading dim
+    and n_steps masks trailing steps without touching params — the cohort
+    engine pads every member to a common step count this way."""
+    fl = FLStepConfig(num_clients=1, n_local=3, n_micro=1, local_lr=0.1,
+                      dp=_NOCLIP)
+
+    def loss(p, b):
+        return jnp.mean((p["w"] - b["x"]) ** 2)
+
+    lp = make_local_phase(loss, fl)
+    params = {"w": jnp.zeros((3,))}
+    key = jax.random.PRNGKey(0)
+    batch3 = {"x": jnp.ones((3, 1, 2, 3))}   # (n_local, n_micro, per, feat)
+    full = lp(params, batch3, key)
+    masked = lp(params, batch3, key, n_steps=2)
+    ref2 = lp(params, {"x": jnp.ones((2, 1, 2, 3))}, key)
+    np.testing.assert_allclose(np.asarray(masked["w"]), np.asarray(ref2["w"]),
+                               rtol=1e-6)
+    assert not np.allclose(np.asarray(full["w"]), np.asarray(masked["w"]))
