@@ -13,6 +13,7 @@ import csv
 import json
 import os
 import time
+from dataclasses import replace
 
 import numpy as np
 
@@ -201,7 +202,8 @@ def bench_table3_privacy(sigmas=(0.5, 1.0, 2.0), alphas=(0.2, 0.6),
 # Engine throughput: legacy per-client loop vs cohort-batched engine
 # ---------------------------------------------------------------------------
 
-def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
+def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
+                            tiny=False):
     """Wall-clock of the SAME virtual FedAsync workload (>= 8 clients,
     synthetic SER, eval disabled) under the execution paths:
 
@@ -210,14 +212,33 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
                     whole-local-round fusion alone)
       * cohort_wN — cohort engine with a staleness window (multi-client
                     cohorts through the compiled stacked step)
-      * cohort_vmap_dD — (multi-device only) the same windowed workload
-                    with the cohort axis partitioned over a D-way data
-                    axis (engine.mesh_backend); spawn host devices with
+      * cohort_wN_hostpath — the same workload on the PR-2 host-fed data
+                    path (device_arena=False): per-cohort numpy gathers
+                    and full batch tensors over H2D
+      * cohort_vmap_dD — (multi-device only) the windowed workload with
+                    the cohort axis partitioned over a D-way data axis
+                    (engine.mesh_backend); spawn host devices with
                     XLA_FLAGS=--xla_force_host_platform_device_count=8
+      * cohort_vmap_dD_uneven{_hostpath} — (multi-device only) UNEVEN
+                    cohorts (max_cohort that does not divide the data
+                    axis): the host path runs them replicated (the PR-2
+                    failure mode), the arena path pads them to the bucket
+                    size so they always partition — the acceptance pair
+                    for the device-resident data path.
+
+    Every row carries ``h2d_bytes_per_cohort`` (RunLog.engine_stats): on
+    the arena path this is index-only traffic (a few KB), on the host
+    path it is the full stacked batch tensors.
 
     A warmup pass per engine config is excluded from the timing so the
     numbers compare steady-state execution, not XLA compiles (the engine's
     compiled programs are cached across runs — see repro.engine.cohort_step).
+
+    Writes ``results/bench/engine_throughput.json`` (the usual artifact)
+    AND the machine-readable perf trajectory ``BENCH_engine.json`` at the
+    repo root (``benchmarks/summarize.py`` reads both; CI's bench-smoke
+    step fails when the latter is missing or malformed).  ``tiny`` shrinks
+    the workload for that smoke step.
     """
     import time as _time
 
@@ -225,9 +246,13 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
 
     from repro.engine import EngineConfig
 
+    if tiny:
+        num_clients = min(num_clients, 4)
+        updates = min(updates, 8)
     cfg = TestbedConfig(use_dp=True, sigma=1.0, batch_size=32,
                         num_clients=num_clients,
-                        data=SERDataConfig(n_total=200 * num_clients),
+                        data=SERDataConfig(
+                            n_total=(96 if tiny else 200) * num_clients),
                         seed=seed)
 
     def run(engine, ec=None, n=updates):
@@ -239,28 +264,32 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
 
     ec_w = EngineConfig(staleness_window=window)
     ec_0 = EngineConfig(staleness_window=0.0)
+    ec_wh = EngineConfig(staleness_window=window, device_arena=False)
     # warmup: compile every shape the timed runs will hit — the engine's
     # cohort shapes AND the legacy per-step jit (every path pays its XLA
     # compiles here, outside the timed region)
     run("cohort", ec_w, n=max(8, 2 * ec_w.max_cohort))
     run("cohort", ec_0, n=4)
+    run("cohort", ec_wh, n=max(8, 2 * ec_wh.max_cohort))
     run("legacy", n=4)
 
     t_legacy, _ = run("legacy")
     t_w0, log_w0 = run("cohort", ec_0)
     t_wN, log_wN = run("cohort", ec_w)
+    t_wh, log_wh = run("cohort", ec_wh)
 
-    timed = [("legacy", t_legacy, None),
-             ("cohort_w0", t_w0, log_w0),
-             (f"cohort_w{window:g}", t_wN, log_wN)]
+    timed = [("legacy", t_legacy, None, None),
+             ("cohort_w0", t_w0, log_w0, ec_0),
+             (f"cohort_w{window:g}", t_wN, log_wN, ec_w),
+             (f"cohort_w{window:g}_hostpath", t_wh, log_wh, ec_wh)]
 
     if len(jax.devices()) > 1:
-        # sharded-cohort variant: cohort axis partitioned over the data
-        # axes, max_cohort = the data-axis size so full cohorts map one
-        # member per device group (smaller cohorts run replicated).  The
-        # unsharded vmap row is the like-for-like ablation — same
-        # executor and cohort sizes, no mesh — so the delta between the
-        # two is attributable to the partitioning alone.
+        # sharded-cohort variants: cohort axis partitioned over the data
+        # axes.  The unsharded vmap row is the like-for-like ablation —
+        # same executor and cohort sizes, no mesh — so the delta between
+        # the two is attributable to the partitioning alone.  The uneven
+        # pair (max_cohort = 3/4 of the data axis, pow2 bucketing off)
+        # compares the PR-2 replicated execution against padded cohorts.
         from repro.engine import cohort_mesh
         mesh = cohort_mesh(max_cohort=num_clients)
         n_data = mesh.shape["data"]
@@ -268,25 +297,64 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0):
                              client_axis="vmap")
         ec_sh = EngineConfig(staleness_window=window, max_cohort=n_data,
                              client_axis="vmap", mesh=mesh)
-        for name, ec in ((f"cohort_vmap_nomesh_K{n_data}", ec_vm),
-                         (f"cohort_vmap_d{n_data}", ec_sh)):
+        variants = [(f"cohort_vmap_nomesh_K{n_data}", ec_vm),
+                    (f"cohort_vmap_d{n_data}", ec_sh)]
+        k_uneven = max(2, (3 * n_data) // 4)
+        if k_uneven % n_data:
+            ec_un = EngineConfig(staleness_window=window,
+                                 max_cohort=k_uneven, client_axis="vmap",
+                                 mesh=mesh, pow2_cohorts=False)
+            variants += [
+                (f"cohort_vmap_d{n_data}_uneven{k_uneven}_hostpath",
+                 replace(ec_un, device_arena=False)),
+                (f"cohort_vmap_d{n_data}_uneven{k_uneven}", ec_un),
+            ]
+        for name, ec in variants:
             run("cohort", ec, n=max(8, 2 * n_data))    # warmup compiles
             t_v, log_v = run("cohort", ec)
-            timed.append((name, t_v, log_v))
+            timed.append((name, t_v, log_v, ec))
 
     rows = []
-    for name, t, log in timed:
+    for name, t, log, ec in timed:
+        stats = log.engine_stats if log else {}
+        n_cohorts = len(log.cohort_sizes) if log else None
         rows.append({
             "engine": name,
+            "executor": ec.client_axis if ec else "legacy",
+            "data_path": stats.get("data_path", "legacy"),
+            "mesh": (dict(ec.mesh.shape) if ec is not None
+                     and ec.mesh is not None else None),
             "num_clients": num_clients,
             "updates": updates,
             "wall_s": round(t, 2),
+            "warm_step_ms": (round(1e3 * t / n_cohorts, 2)
+                             if n_cohorts else None),
             "updates_per_s": round(updates / t, 2),
             "speedup_vs_legacy": round(t_legacy / t, 2),
             "mean_cohort": (round(float(np.mean(log.cohort_sizes)), 2)
                             if log and log.cohort_sizes else None),
+            "h2d_bytes_per_cohort": (
+                round(stats["h2d_bytes_per_cohort"])
+                if "h2d_bytes_per_cohort" in stats else None),
         })
+    _write_bench_engine(rows)
     return _write("engine_throughput", rows)
+
+
+def _write_bench_engine(rows):
+    """The machine-readable perf trajectory: BENCH_engine.json at the repo
+    root (schema checked by ``benchmarks/summarize.py --check-engine``)."""
+    import jax
+
+    out = {
+        "benchmark": "engine_throughput",
+        "devices": len(jax.devices()),
+        "rows": rows,
+    }
+    fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(fn, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return fn
 
 
 # ---------------------------------------------------------------------------

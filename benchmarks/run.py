@@ -65,9 +65,21 @@ def main() -> None:
     ap.add_argument("--skip-fl", action="store_true")
     ap.add_argument("--fresh", action="store_true",
                     help="recompute even when a cached artifact exists")
+    ap.add_argument("--engine-smoke", action="store_true",
+                    help="tiny bench_engine_throughput pass only: emits "
+                         "BENCH_engine.json for summarize.py --check-engine "
+                         "(CI's engine-mesh bench-smoke step)")
     args = ap.parse_args()
 
     from benchmarks import fl_benchmarks as flb
+
+    if args.engine_smoke:
+        t0 = time.time()
+        rows = flb.bench_engine_throughput(tiny=True)
+        _line("engine.smoke", round((time.time() - t0) * 1e6),
+              ";".join(f"{r['engine']}:{r['speedup_vs_legacy']}x"
+                       for r in rows))
+        return
 
     def run_or_cache(name, fn):
         if not args.fresh:

@@ -1,19 +1,70 @@
 """Render the paper-validation summary from results/bench/*.json
-(EXPERIMENTS.md §Paper-validation table).
+(EXPERIMENTS.md §Paper-validation table) plus the engine perf trajectory
+from BENCH_engine.json at the repo root.
 
     PYTHONPATH=src:. python benchmarks/summarize.py
+    PYTHONPATH=src:. python benchmarks/summarize.py --check-engine
+        # validate BENCH_engine.json only; exit 1 when missing/malformed
+        # (CI's engine-mesh bench-smoke step)
 """
 import json
 import os
+import sys
 
 import numpy as np
 
 BENCH = os.path.join(os.path.dirname(__file__), "../results/bench")
+BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "../BENCH_engine.json")
+
+# every row bench_engine_throughput emits must carry these keys (values
+# may be null for the legacy row)
+_ENGINE_ROW_KEYS = {
+    "engine", "executor", "data_path", "mesh", "wall_s", "warm_step_ms",
+    "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort",
+}
 
 
 def _load(name):
     fn = os.path.join(BENCH, f"{name}.json")
     return json.load(open(fn)) if os.path.exists(fn) else None
+
+
+def load_engine_bench(path=None):
+    """Load + schema-check BENCH_engine.json.  Returns the parsed dict or
+    raises ValueError naming what is wrong (missing file, bad shape)."""
+    fn = path or BENCH_ENGINE
+    if not os.path.exists(fn):
+        raise ValueError(f"{fn} is missing — run "
+                         "benchmarks.fl_benchmarks.bench_engine_throughput")
+    try:
+        data = json.load(open(fn))
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{fn} is not valid JSON: {e}") from e
+    if data.get("benchmark") != "engine_throughput":
+        raise ValueError(f"{fn}: benchmark != 'engine_throughput'")
+    rows = data.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError(f"{fn}: no rows")
+    for i, r in enumerate(rows):
+        missing = _ENGINE_ROW_KEYS - set(r)
+        if missing:
+            raise ValueError(f"{fn}: row {i} missing keys {sorted(missing)}")
+    return data
+
+
+def summarize_engine(out):
+    try:
+        data = load_engine_bench()
+    except ValueError:
+        return
+    for r in data["rows"]:
+        h2d = r["h2d_bytes_per_cohort"]
+        out.append(
+            f"engine[{data['devices']}dev] {r['engine']}: "
+            f"{r['speedup_vs_legacy']}x vs legacy, "
+            f"warm step {r['warm_step_ms']}ms, "
+            f"h2d/cohort {h2d if h2d is not None else '-'}B "
+            f"({r['data_path']})")
 
 
 def main():
@@ -91,8 +142,19 @@ def main():
                 f"max_eps={r['max_eps']}"
             )
 
+    summarize_engine(out)
+
     print("\n".join(out))
 
 
 if __name__ == "__main__":
+    if "--check-engine" in sys.argv:
+        try:
+            data = load_engine_bench()
+        except ValueError as e:
+            print(f"BENCH_engine.json check FAILED: {e}")
+            sys.exit(1)
+        print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
+              f"{data['devices']} device(s)")
+        sys.exit(0)
     main()

@@ -80,6 +80,10 @@ def main():
     print(f"[mesh-cohorts] {sum(log.update_counts.values())} updates in "
           f"cohorts of {sorted(set(log.cohort_sizes))}, "
           f"final acc {log.global_acc[-1]:.3f}, eps per tier {eps}")
+    st = log.engine_stats
+    print(f"[mesh-cohorts] data path: {st['data_path']} — "
+          f"{st['h2d_bytes_per_cohort']:.0f} B/cohort over H2D "
+          f"({st['cohorts']} cohorts; index plans only on the arena path)")
 
 
 if __name__ == "__main__":

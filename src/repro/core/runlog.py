@@ -31,6 +31,9 @@ class RunLog:
     dropouts: dict = field(default_factory=dict)
     # engine-only: size of each merged cohort (legacy loops leave it empty)
     cohort_sizes: list = field(default_factory=list)
+    # engine-only: data-path counters from CohortRunner.stats() — which
+    # path ran ("arena" | "host") and the per-cohort H2D byte traffic
+    engine_stats: dict = field(default_factory=dict)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         for t, a in zip(self.times, self.global_acc):

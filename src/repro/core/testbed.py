@@ -130,6 +130,10 @@ def run_experiment(
     ``mesh`` (cohort engine only) partitions the cohort client axis over
     the mesh's data axes — pair it with
     ``engine_cfg=EngineConfig(client_axis="vmap" or "fl_step", ...)``.
+    The cohort engine runs the device-resident arena data path by default
+    (datasets upload once, cohorts assemble on device from int32 index
+    plans, padded so they always partition on a mesh);
+    ``EngineConfig(device_arena=False)`` selects the host-fed baseline.
     """
     clients, params, acc_fn, pooled_test = build_testbed(cfg)
     if strategy_name == "fedavg":

@@ -26,16 +26,27 @@ windows batch near-simultaneous completions for throughput
 
 Mesh execution (``repro.engine.mesh_backend``): pass ``mesh=`` to the
 frontends (or set ``EngineConfig.mesh``) and the stacked client axis is
-partitioned over the mesh's data axes, so full-size cohorts genuinely run
-one member per device group.  Executor choice: single CPU device —
+partitioned over the mesh's data axes; with the default device-resident
+arena path every cohort pads to a bucket that divides the data axes, so
+EVERY cohort — not just full-size ones — genuinely runs one member chunk
+per device group.  Executor choice: single CPU device —
 ``client_axis="unroll"``; mesh — ``"vmap"`` (simulation math) or
 ``"fl_step"`` (the production per-microbatch-DP round from
 ``core/fl_step.py``, driven by the same event loop).
+
+Data path (``EngineConfig.device_arena``, default on): all clients'
+params/opt state live in one stacked device arena and datasets upload
+once at runner construction; per-cohort traffic is a few KB of int32
+index plans (``RunLog.engine_stats`` reports the measured bytes).
+``device_arena=False`` keeps the PR-2 host-fed path for comparison
+(``benchmarks/fl_benchmarks.py::bench_engine_throughput`` times both and
+writes ``BENCH_engine.json``).
 """
 from repro.engine.cohort import (
     LocalRoundPlan,
     fedavg_weights,
     fold_cohort_weights,
+    padded_cohort_size,
     plan_batches,
     pop_cohort,
 )
@@ -74,6 +85,7 @@ __all__ = [
     "fold_cohort_weights",
     "invalidate_step_cache",
     "make_cohort_step",
+    "padded_cohort_size",
     "plan_batches",
     "pop_cohort",
     "run_async_engine",

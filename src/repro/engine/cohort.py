@@ -35,7 +35,10 @@ class LocalRoundPlan:
 
     cid: int
     params0: object          # globals (+ personal overlay) pulled at dispatch
-    opt_state: object        # client optimizer state at dispatch
+                             # (None on the arena path: the snapshot lives in
+                             # the client's device-resident arena slot)
+    opt_state: object        # client optimizer state at dispatch (None on
+                             # the arena path — state never leaves the arena)
     batch_idx: np.ndarray    # (S, B) int32 minibatch indices into c.data
     key: object              # dispatch PRNG key (the legacy local_train sub)
     n_steps: int             # S actually executed (== legacy DP-SGD steps)
@@ -91,6 +94,26 @@ def pop_cohort(heap: list, window: float, max_size: int,
             heapq.heappush(heap, ev)
         events = events[:keep]
     return events
+
+
+def padded_cohort_size(k: int, n_data: int = 1, pow2: bool = True) -> int:
+    """Leading dim of the compiled step for a K-member cohort: the pow2
+    bucket >= K, rounded up to a multiple of the mesh data-axis product
+    ``n_data`` so the stacked cohort ALWAYS partitions under GSPMD (which
+    silently replicates uneven leading-dim constraints).  Pad members are
+    zero-weight masked — ``n_steps=0`` in the compiled step, coefficient 0
+    in ``merge_cohort`` — so the result is bit-identical to the unpadded
+    cohort while the recompile set collapses to the bucket sizes.
+
+    ``pow2`` mirrors ``EngineConfig.pow2_cohorts``: with bucketing off the
+    pad goes straight to the MINIMAL multiple of ``n_data`` — pad members
+    still execute the masked local phase, so rounding 5 up through 8 to a
+    12 on a 6-way axis would double the device work the user asked to
+    avoid."""
+    kp = (1 << max(0, k - 1).bit_length()) if pow2 else k
+    if n_data > 1:
+        kp = -(-kp // n_data) * n_data
+    return kp
 
 
 def fold_cohort_weights(ws) -> tuple:

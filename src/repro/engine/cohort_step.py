@@ -5,6 +5,20 @@ weighted aggregation — the simulation-side sibling of
 axis -> mapped local phase -> weights-vector reduction over the client
 axis).
 
+Two data paths feed it (``make_cohort_step(..., arena=...)``):
+
+* **arena** (the engine's default) — the cohort assembles ON DEVICE from
+  persistent arenas: all clients' params/opt state live in one stacked
+  (A, ...) pytree (slot per client) and every client's dataset is
+  uploaded once; the step gathers the cohort with ``jnp.take`` over a
+  (K,) slot vector, gathers minibatches from the resident data via the
+  (K, S_max, B) int32 ``batch_idx`` plan, and scatters the new optimizer
+  state back into the (donated) opt arena.  Per-cohort H2D is a few KB
+  of indices.
+* **host** (PR-2 baseline, ``arena=False``) — params/opt state stack in
+  Python per cohort and fully materialized batch tensors cross H2D every
+  step; kept for the benchmark comparison and for raw-pytree shardings.
+
 Numerical parity with the legacy per-client loop is load-bearing (the
 tier-1 parity tests assert it): the per-step math is literally the same
 ``dp_mean_gradient`` / ``opt.update`` composition as ``Client.local_train``
@@ -78,13 +92,31 @@ def _tree_where(mask, new, old):
         lambda n, o: jnp.where(mask, n, o), new, old)
 
 
+def constrain_tree(tree, client_shardings):
+    """Apply the shardings to every leaf: a callable rule (CohortSharding)
+    maps each leaf's shape to its sharding; a raw pytree of shardings is
+    zipped leaf-wise; None is a no-op.  The ONE place constraint
+    application lives — the cohort step and the arena helpers both call
+    it."""
+    if client_shardings is None:
+        return tree
+    if callable(client_shardings):
+        return jax.tree_util.tree_map(
+            lambda l: jax.lax.with_sharding_constraint(
+                l, client_shardings(l)), tree)
+    return jax.tree_util.tree_map(
+        jax.lax.with_sharding_constraint, tree, client_shardings)
+
+
 def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                      use_dp: bool = True, use_kernel: bool = False,
                      client_axis: str = "unroll", client_shardings=None,
-                     fl_cfg=None):
+                     fl_cfg=None, arena: bool = False,
+                     donate_globals: bool = False):
     """Build the jitted cohort program.
 
-    Returns ``(cohort_step, merge_cohort)``:
+    Returns ``(cohort_step, merge_cohort)``.  With ``arena=False`` (the
+    host-fed data path, kept as the PR-2 comparison baseline):
 
     ``cohort_step(stacked_params, stacked_opt, batches, keys, n_steps)``
     where every input has a leading cohort axis K:
@@ -96,35 +128,63 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
       n_steps:        (K,) int32 — member i executes its first n_steps[i]
                       loop iterations; the rest are masked no-ops
 
+    With ``arena=True`` (the device-resident data path, the engine's
+    default) the per-cohort inputs are a few KB of int32 indices instead
+    of stacked state and batch tensors:
+
+    ``cohort_step(arena_params, arena_opt, arena_data, slots, batch_idx,
+    keys, n_steps)`` where the arenas hold ALL clients' state/data on a
+    leading slot axis A (slot per client plus a spare pad slot):
+
+      arena_params: pytree, leaves (A, ...) — per-slot dispatch params
+      arena_opt:    pytree, leaves (A, ...) — per-slot optimizer state
+                    (DONATED: scatter-updated in place each cohort)
+      arena_data:   pytree, leaves (A, n_max, ...) — every client's
+                    dataset, uploaded once at runner construction
+      slots:        (K,) int32 — arena slot of each cohort member
+                    (padded mask members point at the spare slot)
+      batch_idx:    (K, S_max, B) int32 minibatch plan, gathered from
+                    ``arena_data`` INSIDE the compiled program
+
+    Cohort assembly is then one fused ``jnp.take`` over the slot axis and
+    write-back one scatter — no per-member Python stacking, no batch
+    tensors over H2D.
+
     ``merge_cohort(global_params, stacked_uploads, coeffs, g_coeff)``
     computes ``g_coeff * g + sum_i coeffs[i] * upload_i`` as one weighted
     reduction over the client axis (the ``weights``-vector aggregation of
     ``fl_train_step``, here carrying alpha/(1+tau) staleness weights or
-    FedAvg's n_k / sum n).
+    FedAvg's n_k / sum n).  With ``donate_globals`` its ``global_params``
+    argument is donated — the async inner loop re-merges every cohort and
+    never reuses the old globals.  Only safe when nothing else aliases the
+    globals buffer: the CohortRunner enables it on the arena path (plans
+    carry slot ids, not params0 snapshots) for populations without
+    personalized clients (whose ``_personal`` / ``personal_snapshot``
+    subtrees alias received globals across merges).
 
     ``client_shardings`` may be a pytree of NamedShardings congruent with
-    the stacked params (legacy form) or a callable ``leaf -> sharding``
-    applied to EVERY stacked input — params, optimizer state and batches
-    — at trace time (``engine.mesh_backend.CohortSharding``; being
-    shape-aware it can partition the full-size cohorts and replicate the
-    undersized tails).  ``fl_cfg`` (an ``FLStepConfig``) is required by
-    the ``"fl_step"`` executor and ignored by the others.
+    the stacked params (legacy form, host path only) or a callable
+    ``leaf -> sharding`` applied to EVERY stacked input — params,
+    optimizer state and batches — at trace time
+    (``engine.mesh_backend.CohortSharding``; being shape-aware it can
+    partition the divisible leading dims and replicate the rest).
+    ``fl_cfg`` (an ``FLStepConfig``) is required by the ``"fl_step"``
+    executor and ignored by the others.
     """
     validate_client_axis(client_axis)
     if client_axis == "fl_step" and fl_cfg is None:
         raise ValueError(
             "client_axis='fl_step' drives the production local round and "
             "needs an FLStepConfig (EngineConfig.fl_cfg / fl_cfg=)")
+    if arena and client_shardings is not None and not callable(client_shardings):
+        raise ValueError(
+            "the arena data path needs a shape-aware callable shardings "
+            "rule (engine.mesh_backend.CohortSharding) or None — a raw "
+            "pytree of NamedShardings is congruent with one cohort stack, "
+            "not with the (A, ...) arenas")
 
     def constrain(tree):
-        if client_shardings is None:
-            return tree
-        if callable(client_shardings):
-            return jax.tree_util.tree_map(
-                lambda l: jax.lax.with_sharding_constraint(
-                    l, client_shardings(l)), tree)
-        return jax.tree_util.tree_map(
-            jax.lax.with_sharding_constraint, tree, client_shardings)
+        return constrain_tree(tree, client_shardings)
 
     def one_step(params, opt_state, batch, key):
         """Identical math to the legacy ``_dp_sgd_step`` / ``_sgd_step``."""
@@ -192,42 +252,81 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             # server-side merge is the engine's weights-vector reduction)
             return fl_local(params, micro, key, n_steps=steps), opt_state
 
-    # donation is only a win when input and output buffers can alias;
-    # under mesh shardings the replicated inputs and partitioned outputs
-    # never do, and jax warns on every call — so don't donate there
-    jit_kw = {} if client_shardings is not None else {"donate_argnums": (0, 1)}
-
-    @functools.partial(jax.jit, **jit_kw)
-    def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps):
-        stacked_params = constrain(stacked_params)
-        if callable(client_shardings):
-            stacked_opt = constrain(stacked_opt)
-            batches = constrain(batches)
+    def run_members(stacked_params, stacked_opt, keys, batches, n_steps):
+        """The client-axis executor switch over one stacked cohort."""
         if client_axis == "vmap":
-            new_params, new_opt = jax.vmap(local_phase)(
+            return jax.vmap(local_phase)(
                 stacked_params, stacked_opt, keys, batches, n_steps)
-        elif client_axis == "fl_step":
-            new_params, new_opt = jax.vmap(fl_member_phase)(
+        if client_axis == "fl_step":
+            return jax.vmap(fl_member_phase)(
                 stacked_params, stacked_opt, keys, batches, n_steps)
-        elif client_axis == "map":
-            new_params, new_opt = jax.lax.map(
+        if client_axis == "map":
+            return jax.lax.map(
                 lambda t: local_phase(*t),
                 (stacked_params, stacked_opt, keys, batches, n_steps))
-        else:  # unroll: flat program over the K members
-            K = keys.shape[0]
-            outs = [
-                local_phase(unstack_tree(stacked_params, i),
-                            unstack_tree(stacked_opt, i),
-                            keys[i],
-                            unstack_tree(batches, i),
-                            n_steps[i])
-                for i in range(K)
-            ]
-            new_params = stack_trees([p for p, _ in outs])
-            new_opt = stack_trees([o for _, o in outs])
-        return constrain(new_params), new_opt
+        # unroll: flat program over the K members
+        K = keys.shape[0]
+        outs = [
+            local_phase(unstack_tree(stacked_params, i),
+                        unstack_tree(stacked_opt, i),
+                        keys[i],
+                        unstack_tree(batches, i),
+                        n_steps[i])
+            for i in range(K)
+        ]
+        return (stack_trees([p for p, _ in outs]),
+                stack_trees([o for _, o in outs]))
 
-    @jax.jit
+    if arena:
+        # the opt arena is scatter-updated in place every cohort: input and
+        # output leaves share shape/dtype AND the same shape-aware sharding
+        # rule, so donation aliases even on a mesh (unlike the host path's
+        # replicated-in / partitioned-out cohort stacks)
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def cohort_step(arena_params, arena_opt, arena_data, slots,
+                        batch_idx, keys, n_steps):
+            def take(tree):
+                return jax.tree_util.tree_map(
+                    lambda l: jnp.take(l, slots, axis=0), tree)
+
+            stacked_params = constrain(take(arena_params))
+            stacked_opt = constrain(take(arena_opt))
+            # in-step batch gather: (A, n_max, ...)[slot, idx] -> the
+            # (K, S_max, B, ...) batch stack, computed on device from the
+            # resident datasets (only `batch_idx` crossed H2D)
+            batches = constrain(jax.tree_util.tree_map(
+                lambda l: l[slots[:, None, None], batch_idx], arena_data))
+            new_params, new_opt = run_members(
+                stacked_params, stacked_opt, keys, batches, n_steps)
+            # write-back scatter: pad members target the spare slot with
+            # their (masked, unchanged) gathered state, so duplicate
+            # indices only ever carry identical values
+            new_arena_opt = constrain(jax.tree_util.tree_map(
+                lambda a, n: a.at[slots].set(n), arena_opt, new_opt))
+            return constrain(new_params), new_arena_opt
+    else:
+        # donation is only a win when input and output buffers can alias;
+        # under mesh shardings the replicated inputs and partitioned
+        # outputs never do, and jax warns on every call — don't donate
+        jit_kw = ({} if client_shardings is not None
+                  else {"donate_argnums": (0, 1)})
+
+        @functools.partial(jax.jit, **jit_kw)
+        def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps):
+            stacked_params = constrain(stacked_params)
+            if callable(client_shardings):
+                stacked_opt = constrain(stacked_opt)
+                batches = constrain(batches)
+            new_params, new_opt = run_members(
+                stacked_params, stacked_opt, keys, batches, n_steps)
+            return constrain(new_params), new_opt
+
+    # every merge replaces the globals, so donating kills the one
+    # full-model re-allocation in the async inner loop — but only when the
+    # runner proved nothing aliases the buffer (see docstring)
+    merge_kw = {"donate_argnums": (0,)} if donate_globals else {}
+
+    @functools.partial(jax.jit, **merge_kw)
     def merge_cohort(global_params, stacked_uploads, coeffs, g_coeff):
         coeffs = coeffs.astype(jnp.float32)
         return jax.tree_util.tree_map(
@@ -288,24 +387,75 @@ def _shardings_key(client_shardings):
 
 def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
                        client_axis="unroll", client_shardings=None,
-                       fl_cfg=None):
+                       fl_cfg=None, arena=False, donate_globals=False):
     """Memoized :func:`make_cohort_step`, keyed per (training config,
-    executor, shardings/mesh): scenario sweeps over the same testbed AND
-    mesh reuse the compiled programs instead of re-tracing every run.
-    Supplying shardings no longer bypasses the cache — mesh-lifetime
-    entries are dropped explicitly with :func:`invalidate_step_cache`."""
+    executor, data path, shardings/mesh): scenario sweeps over the same
+    testbed AND mesh reuse the compiled programs instead of re-tracing
+    every run.  Supplying shardings no longer bypasses the cache —
+    mesh-lifetime entries are dropped explicitly with
+    :func:`invalidate_step_cache`.  The cache only ever holds the compiled
+    step FUNCTIONS; arenas are per-runner arguments, never closed over, so
+    dropping a runner frees its device buffers regardless of the cache."""
 
     def build():
         return make_cohort_step(
             loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
             client_axis=client_axis, client_shardings=client_shardings,
-            fl_cfg=fl_cfg)
+            fl_cfg=fl_cfg, arena=arena, donate_globals=donate_globals)
 
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:
         return build()
     key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
-           client_axis, fl_cfg, sh_key)
+           client_axis, fl_cfg, sh_key, arena, donate_globals)
+    try:
+        hash(key)
+    except TypeError:
+        return build()
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = build()
+    return _STEP_CACHE[key]
+
+
+def cached_arena_helpers(arena_slots: int, opt, client_shardings):
+    """Compiled arena plumbing — ``(init, write, gather)`` over the
+    (A, ...) client-state arenas — shared across CohortRunners and stored
+    in the SAME cache as the compiled steps, so
+    :func:`invalidate_step_cache` drops a mesh's helper entries alongside
+    its step entries (the documented mesh-lifetime cleanup covers both).
+    The arenas themselves are call arguments, never closed over: the
+    cache holds compiled functions only, no device buffers."""
+
+    def build():
+        def constrain(tree):
+            return constrain_tree(tree, client_shardings)
+
+        @jax.jit
+        def init(p):
+            stacked = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(
+                    l[None], (arena_slots,) + l.shape), p)
+            return constrain(stacked), constrain(jax.vmap(opt.init)(stacked))
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def write(arena, p, slots):
+            return constrain(jax.tree_util.tree_map(
+                lambda a, l: a.at[slots].set(
+                    jnp.broadcast_to(l[None].astype(a.dtype),
+                                     (slots.shape[0],) + l.shape)),
+                arena, p))
+
+        @jax.jit
+        def gather(arena, slots):
+            return jax.tree_util.tree_map(
+                lambda l: jnp.take(l, slots, axis=0), arena)
+
+        return init, write, gather
+
+    sh_key = _shardings_key(client_shardings)
+    if sh_key is _UNCACHEABLE:
+        return build()
+    key = ("arena_helpers", arena_slots, opt, sh_key)
     try:
         hash(key)
     except TypeError:

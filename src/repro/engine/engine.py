@@ -11,9 +11,15 @@ virtual-clock priority queue that the legacy per-client loop in
      does, but WITHOUT running the training yet;
   2. **cohort pop**: all completions within ``staleness_window`` virtual
      seconds of the earliest pending event come off the heap as one cohort;
-  3. **compiled local phase**: the members' dispatch-time params and
-     optimizer states are stacked on a leading client axis and the whole
-     cohort's local rounds run as ONE jitted scan+vmap program;
+  3. **compiled local phase**: the cohort runs as ONE jitted program.
+     On the default device-resident data path the members' dispatch-time
+     params / optimizer states are GATHERED inside the program from a
+     per-client arena (dispatch wrote the pulled globals into the
+     member's slot), minibatches are gathered from the once-uploaded
+     per-client datasets by a (K, S_max, B) int32 index plan — the only
+     per-cohort H2D traffic — and cohorts pad to bucket sizes that always
+     partition on a mesh (pad members are zero-step masked and merge with
+     coefficient 0);
   4. **merge**: FedAvg/FedAsync weights (n_k / sum n, alpha/(1+tau_i))
      are folded into a single weights-vector reduction over the client
      axis (``fold_cohort_weights`` makes the fused merge exactly equal to
@@ -33,6 +39,7 @@ cohorts and is where the throughput win comes from (see
 """
 from __future__ import annotations
 
+import functools
 import heapq
 from dataclasses import dataclass, replace
 from typing import Callable, Optional
@@ -45,19 +52,22 @@ from repro.core.aggregation import (
     AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
 from repro.core.runlog import RunLog, eval_all
 from repro.engine.cohort import (
-    LocalRoundPlan, fedavg_weights, fold_cohort_weights, plan_batches,
-    pop_cohort, steps_per_round)
+    LocalRoundPlan, fedavg_weights, fold_cohort_weights, padded_cohort_size,
+    plan_batches, pop_cohort, steps_per_round)
 from repro.engine.cohort_step import (
-    cached_cohort_step, stack_trees, unstack_tree, validate_client_axis)
+    cached_arena_helpers, cached_cohort_step, stack_trees, unstack_tree,
+    validate_client_axis)
+from repro.engine.mesh_backend import CohortSharding
 
 
 @dataclass(frozen=True)
 class EngineConfig:
     staleness_window: float = 0.0  # virtual seconds of completions per cohort
-    max_cohort: int = 2            # cap on compiled-step client axis ("unroll"
-                                   # compile time scales with it; see cohort_step)
-                                   # — on a mesh set it to a multiple of the
-                                   # data-axis product so cohorts partition
+    max_cohort: int = 2            # cap on POPPED cohort size ("unroll" compile
+                                   # time scales with it; see cohort_step) — on
+                                   # a mesh the arena path pads the compiled
+                                   # leading dim up to the next bucket that
+                                   # divides the data-axis product
     fused_merge: bool = True       # fold FedAvg/FedAsync into the weights vector
     delta: float = 1e-5            # accountant delta (matches legacy loop)
     client_axis: str = "unroll"    # unroll (single CPU) | map | vmap (mesh,
@@ -68,6 +78,11 @@ class EngineConfig:
                                    # its data axes (engine.mesh_backend builds
                                    # the CohortSharding); None = replicated
     fl_cfg: Optional[object] = None  # FLStepConfig for client_axis="fl_step"
+    device_arena: bool = True      # device-resident data path: client
+                                   # params/opt state live in a stacked arena,
+                                   # datasets upload once, cohorts assemble as
+                                   # a compiled gather fed by index plans only
+                                   # (False = PR-2 host-fed baseline)
 
     def __post_init__(self):
         validate_client_axis(self.client_axis)
@@ -81,6 +96,8 @@ def _resolve_mesh_cfg(cfg: EngineConfig, mesh) -> EngineConfig:
     return cfg
 
 
+
+
 class CohortRunner:
     """Owns the compiled cohort program and the host-side plan/IO glue.
 
@@ -89,6 +106,19 @@ class CohortRunner:
     leading cohort dim onto the mesh's data axes — the members of a
     full-size cohort then genuinely run on different devices (see
     :mod:`repro.engine.mesh_backend`).
+
+    With ``cfg.device_arena`` (the default) the per-cohort hot path is
+    device-resident end to end: every client's params and optimizer state
+    live in one stacked arena (slot per client, sharded by the same
+    shape-aware rule), every client's dataset uploads to device ONCE at
+    construction, and a cohort is assembled inside the compiled step by a
+    ``jnp.take`` over slots plus an in-step batch gather driven by the
+    (K, S_max, B) int32 index plan — the only per-cohort H2D traffic.
+    Cohorts additionally pad to the bucket size from
+    :func:`repro.engine.cohort.padded_cohort_size`, so on a mesh the
+    compiled leading dim always divides the data-axis product and the
+    cohort ALWAYS partitions (pad members gather a spare slot, run zero
+    masked steps and merge with coefficient zero).
     """
 
     def __init__(self, clients, cfg: EngineConfig,
@@ -129,13 +159,117 @@ class CohortRunner:
                     "— otherwise the reported epsilon does not describe "
                     "the executed mechanism")
         if client_shardings is None and cfg.mesh is not None:
-            from repro.engine.mesh_backend import CohortSharding
             client_shardings = CohortSharding(cfg.mesh)
         self.client_shardings = client_shardings
+        # a raw pytree of per-leaf shardings is congruent with one cohort
+        # stack, not with the arenas — fall back to the host data path
+        self.use_arena = bool(cfg.device_arena) and (
+            client_shardings is None or callable(client_shardings))
+        # donate the globals into the fused merge only when nothing can
+        # alias their buffer across merges: the host path keeps params0
+        # snapshots in pending plans, and personalized clients keep
+        # _personal / personal_snapshot refs to received globals.  The
+        # engine loops read this flag and defensively copy the CALLER's
+        # initial globals once per run (donation would otherwise delete
+        # the caller's buffers at the first merge).
+        self.donates_globals = self.use_arena and not any(
+            c.personal_keys for c in clients)
         self.cohort_step, self.merge_cohort = cached_cohort_step(
             c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
             use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
-            client_shardings=client_shardings, fl_cfg=cfg.fl_cfg)
+            client_shardings=client_shardings, fl_cfg=cfg.fl_cfg,
+            arena=self.use_arena, donate_globals=self.donates_globals)
+        # data-axis product: arena cohorts pad to a multiple of it so the
+        # compiled leading dim always partitions on the mesh (resolved
+        # from cfg.mesh when set, else from the CohortSharding's mesh; a
+        # custom callable rule without cfg.mesh cannot be introspected,
+        # so such cohorts keep their natural size)
+        self._n_data = 1
+        mesh = cfg.mesh
+        if mesh is None and isinstance(client_shardings, CohortSharding):
+            mesh = client_shardings.mesh
+        if self.use_arena and mesh is not None:
+            from repro.launch.mesh import num_client_groups
+            self._n_data = num_client_groups(mesh)
+        self._arena_params = None
+        self._arena_opt = None
+        self._writeq = []
+        self.cohorts_run = 0
+        self.h2d_bytes_total = 0
+        if self.use_arena:
+            self._build_data_arena()
+
+    # -- device-resident arenas -------------------------------------------
+    def _build_data_arena(self):
+        """Upload every client's dataset once: pytree leaves
+        (A, n_max, ...) with slot = cid, short datasets zero-padded (the
+        pad rows are never indexed by a real batch plan), plus spare
+        slots so A is a multiple of the data-axis product (the arena
+        itself then shards under the shape-aware rule)."""
+        clients = self.clients
+        n = len(clients)
+        self.pad_slot = n                       # gathered by padded members
+        slots = n + 1
+        if self._n_data > 1:
+            slots = -(-slots // self._n_data) * self._n_data
+        self.arena_slots = slots
+        n_max = max(c.n_train for c in clients)
+        cs = self.client_shardings
+        put = ((lambda a: jax.device_put(a, cs(a))) if callable(cs)
+               else jnp.asarray)
+        arena = {}
+        for k, v0 in clients[0].data.items():
+            buf = np.zeros((slots, n_max) + v0.shape[1:], v0.dtype)
+            for c in clients:
+                buf[c.cid, : c.data[k].shape[0]] = c.data[k]
+            arena[k] = put(buf)
+        self._arena_data = arena
+
+    def _ensure_state_arenas(self, params):
+        """Lazy-init the params/opt arenas from the first dispatched
+        globals (shapes only — every slot is overwritten at dispatch
+        before the compiled step reads it).  The compiled helpers come
+        from the cross-runner cache in
+        :func:`repro.engine.cohort_step.cached_arena_helpers` (dropped by
+        ``invalidate_step_cache`` together with the step entries)."""
+        if self._arena_params is not None:
+            return
+        init, self._write, self._gather = cached_arena_helpers(
+            self.arena_slots, self.clients[0].opt, self.client_shardings)
+        self._arena_params, self._arena_opt = init(params)
+
+    def _queue_write(self, slot: int, params_tree):
+        """Record 'slot trains from this params tree'; the device scatter
+        is deferred so consecutive dispatches sharing one globals object
+        (a whole FedAvg round, every post-merge re-dispatch) collapse
+        into ONE compiled broadcast-write."""
+        self._ensure_state_arenas(params_tree)
+        self._writeq.append((slot, params_tree))
+
+    def _flush_writes(self):
+        q, self._writeq = self._writeq, []
+        i = 0
+        while i < len(q):
+            tree = q[i][1]
+            slots = [q[i][0]]
+            j = i + 1
+            while j < len(q) and q[j][1] is tree:
+                slots.append(q[j][0])
+                j += 1
+            self._arena_params = self._write(
+                self._arena_params, tree, jnp.asarray(slots, jnp.int32))
+            i = j
+
+    def stats(self) -> dict:
+        """Data-path counters for RunLog.engine_stats / the benchmarks."""
+        return {
+            "data_path": "arena" if self.use_arena else "host",
+            "cohorts": self.cohorts_run,
+            "h2d_bytes_total": int(self.h2d_bytes_total),
+            "h2d_bytes_per_cohort": (
+                self.h2d_bytes_total / self.cohorts_run
+                if self.cohorts_run else 0.0),
+        }
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, c, global_params, key, server_version: int
@@ -151,7 +285,12 @@ class CohortRunner:
             params0 = dict(global_params)
             params0.update(c._personal)
             personal_snapshot = {k: global_params[k] for k in c.personal_keys}
-        if c.opt_state is None:
+        if self.use_arena:
+            # arena path: the dispatch-time params snapshot is a deferred
+            # device-side slot write; optimizer state already lives in the
+            # arena (initialized for every slot at first dispatch)
+            self._queue_write(c.cid, params0)
+        elif c.opt_state is None:
             c.opt_state = c.opt.init(params0)
         idx = plan_batches(c.rng, c.n_train, c.batch_size, c.local_epochs)
         steps = int(idx.shape[0])
@@ -161,7 +300,9 @@ class CohortRunner:
         c.update_count += 1
         c.model_version = server_version
         plan = LocalRoundPlan(
-            cid=c.cid, params0=params0, opt_state=c.opt_state,
+            cid=c.cid,
+            params0=None if self.use_arena else params0,
+            opt_state=None if self.use_arena else c.opt_state,
             batch_idx=idx, key=key, n_steps=steps, duration=duration,
             epsilon=c.accountant.epsilon(self.cfg.delta) if c.use_dp else 0.0,
             model_version=server_version)
@@ -169,9 +310,24 @@ class CohortRunner:
         return plan
 
     # -- compiled local phase ---------------------------------------------
+    def _pad_idx(self, idx, batch_size: int):
+        """Pad one member's (S, B) batch plan to (s_max, B) with masked
+        tail rows (repeat the first row; all-zeros when S == 0)."""
+        if idx.shape[0] >= self.s_max:
+            return idx
+        pad_row = idx[:1] if idx.shape[0] else np.zeros(
+            (1, batch_size), np.int32)
+        return np.concatenate(
+            [idx, np.broadcast_to(
+                pad_row, (self.s_max - idx.shape[0],) + pad_row.shape[1:])])
+
     def run_cohort(self, plans):
         """Run every member's local round in one compiled call; returns the
-        stacked new params and writes optimizer states back to clients."""
+        stacked new params (leading dim K, or the padded bucket size on
+        the arena path) and persists the members' new optimizer states
+        (arena scatter, or per-client write-back on the host path)."""
+        if self.use_arena:
+            return self._run_cohort_arena(plans)
         s_max = self.s_max
         if s_max == 0:  # degenerate: no client has a full batch
             return stack_trees([p.params0 for p in plans])
@@ -180,24 +336,51 @@ class CohortRunner:
         member_batches = []
         for p in plans:
             c = self.clients[p.cid]
-            idx = p.batch_idx
-            if idx.shape[0] < s_max:  # pad masked tail steps
-                pad_row = idx[:1] if idx.shape[0] else np.zeros(
-                    (1, c.batch_size), np.int32)
-                idx = np.concatenate(
-                    [idx, np.broadcast_to(pad_row,
-                                          (s_max - idx.shape[0],) + pad_row.shape[1:])])
+            idx = self._pad_idx(p.batch_idx, c.batch_size)
             member_batches.append({k: v[idx] for k, v in c.data.items()})
-        batches = {
-            k: jnp.asarray(np.stack([mb[k] for mb in member_batches]))
+        batches_np = {
+            k: np.stack([mb[k] for mb in member_batches])
             for k in member_batches[0]
         }
+        self.cohorts_run += 1
+        self.h2d_bytes_total += (
+            sum(a.nbytes for a in batches_np.values()) + 4 * len(plans))
+        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
         keys = jnp.stack([p.key for p in plans])
         n_steps = jnp.asarray([p.n_steps for p in plans], jnp.int32)
         new_stacked, new_opt = self.cohort_step(
             stacked_params, stacked_opt, batches, keys, n_steps)
         for i, p in enumerate(plans):
             self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
+        return new_stacked
+
+    def _run_cohort_arena(self, plans):
+        """Arena data path: flush the queued dispatch writes, then run the
+        cohort as ONE compiled gather->train->scatter whose only H2D
+        inputs are int32 index plans (slots, batch_idx, n_steps)."""
+        self._flush_writes()
+        k = len(plans)
+        k_pad = (padded_cohort_size(k, self._n_data, self.cfg.pow2_cohorts)
+                 if self._n_data > 1 else k)
+        slots = np.full((k_pad,), self.pad_slot, np.int32)
+        slots[:k] = [p.cid for p in plans]
+        slots_j = jnp.asarray(slots)
+        if self.s_max == 0:  # degenerate: no client has a full batch
+            return self._gather(self._arena_params, slots_j)
+        batch_size = self.clients[0].batch_size
+        batch_idx = np.zeros((k_pad, self.s_max, batch_size), np.int32)
+        for i, p in enumerate(plans):
+            batch_idx[i] = self._pad_idx(p.batch_idx, batch_size)
+        n_steps = np.zeros((k_pad,), np.int32)
+        n_steps[:k] = [p.n_steps for p in plans]
+        keys = jnp.stack(
+            [p.key for p in plans]
+            + [jnp.zeros_like(plans[0].key)] * (k_pad - k))
+        self.cohorts_run += 1
+        self.h2d_bytes_total += batch_idx.nbytes + slots.nbytes + n_steps.nbytes
+        new_stacked, self._arena_opt = self.cohort_step(
+            self._arena_params, self._arena_opt, self._arena_data,
+            slots_j, jnp.asarray(batch_idx), keys, jnp.asarray(n_steps))
         return new_stacked
 
     # -- upload ------------------------------------------------------------
@@ -212,6 +395,15 @@ class CohortRunner:
         up = dict(new_params)
         up.update(plan.personal_snapshot)
         return up
+
+
+def _pad_coeffs(coeffs, stacked):
+    """Zero-extend the cohort's merge coefficients to the compiled stack's
+    (possibly padded) leading dim — pad members contribute exactly 0."""
+    k_pad = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    out = np.zeros((k_pad,), np.float64)
+    out[: len(coeffs)] = coeffs
+    return jnp.asarray(out)
 
 
 def _fused_ok(strategy, clients, plans, cfg: EngineConfig) -> bool:
@@ -265,15 +457,18 @@ def run_fedavg_engine(
 
         if _fused_ok(FedAvg(), clients, plans, cfg):
             # Eq. 9 as chunked weights-vector reductions: the new globals
-            # accumulate sum_k (n_k / sum n) p_k across the chunks
+            # accumulate sum_k (n_k / sum n) p_k across the chunks.
+            # (`merged`, not `acc`: the eval scalar below is `acc` — the
+            # accumulator pytree must never share its name)
             _, coeffs = fedavg_weights([clients[p.cid].n_train for p in plans])
-            acc = jax.tree_util.tree_map(jnp.zeros_like, global_params)
+            merged = jax.tree_util.tree_map(jnp.zeros_like, global_params)
             off = 0
             for ch, st in zip(chunks, stacked_chunks):
-                acc = runner.merge_cohort(
-                    acc, st, jnp.asarray(coeffs[off:off + len(ch)]), 1.0)
+                merged = runner.merge_cohort(
+                    merged, st, _pad_coeffs(coeffs[off:off + len(ch)], st),
+                    1.0)
                 off += len(ch)
-            global_params = acc
+            global_params = merged
         else:
             updates = []
             for ch, st in zip(chunks, stacked_chunks):
@@ -301,6 +496,7 @@ def run_fedavg_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    log.engine_stats = runner.stats()
     return global_params, log
 
 
@@ -325,6 +521,12 @@ def run_async_engine(
     axis (see CohortRunner)."""
     cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
     runner = CohortRunner(clients, cfg)
+    if runner.donates_globals:
+        # the fused merge donates its globals argument; copy ONCE so the
+        # first merge consumes our copy, not the caller's buffers (which
+        # the caller may still read — e.g. a baseline eval or a second
+        # run from the same initial params)
+        global_params = jax.tree_util.tree_map(jnp.copy, global_params)
     log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)
     for c in clients:
@@ -365,7 +567,8 @@ def run_async_engine(
             weights = [strategy.mixing_weight(tau) for tau in taus]
             g_coeff, coeffs = fold_cohort_weights(weights)
             global_params = runner.merge_cohort(
-                global_params, new_stacked, jnp.asarray(coeffs), g_coeff)
+                global_params, new_stacked, _pad_coeffs(coeffs, new_stacked),
+                g_coeff)
             server_version += len(plans)
         else:
             taus, weights = [], []
@@ -415,4 +618,5 @@ def run_async_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    log.engine_stats = runner.stats()
     return global_params, log

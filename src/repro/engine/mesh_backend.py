@@ -25,16 +25,19 @@ Executor-choice guidance (measured on this repo's surfaces):
   (simulation math) or ``"fl_step"`` (production per-microbatch-DP round
   via ``core/fl_step.make_local_phase``) with a :class:`CohortSharding`.
 
-Partitioning caveat: GSPMD silently REPLICATES a leading-dim constraint
+Partitioning note: GSPMD silently REPLICATES a leading-dim constraint
 whose size does not divide evenly over the named axes (verified on CPU:
 a (2, ...) or (4, ...) array constrained to an 8-way axis comes back
 replicated).  :func:`cohort_spec` is therefore shape-aware — it emits the
-partitioned spec only when the cohort size is a multiple of the data-axis
-product and falls back to replication otherwise.  Pick
-``EngineConfig.max_cohort`` as a multiple of the data-axis product (with
-``pow2_cohorts`` and a pow2 device count the full-size cohorts then always
-partition; undersized tail cohorts run replicated, which is correct, just
-not parallel).
+partitioned spec only when the leading dim is a multiple of the data-axis
+product and falls back to replication otherwise.  On the engine's default
+arena data path this fallback no longer fires for cohorts: every cohort
+pads to the bucket size from ``cohort.padded_cohort_size`` (a multiple of
+the data-axis product; pad members are zero-step masked with merge
+coefficient 0), so the stacked cohort ALWAYS partitions regardless of how
+many completions the staleness window popped.  The replication fallback
+still covers the arenas themselves and the PR-2 host path
+(``EngineConfig(device_arena=False)``).
 """
 from __future__ import annotations
 

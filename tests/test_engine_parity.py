@@ -88,6 +88,42 @@ def test_fedbuff_and_adaptive_route_through_engine(micro_cfg):
     assert sum(log_a.update_counts.values()) == 6
 
 
+def test_arena_data_path_matches_host_path(micro_cfg):
+    """The device-resident arena path (the default) must reproduce the
+    PR-2 host-fed path: identical bookkeeping, params allclose — while
+    shrinking per-cohort H2D from stacked batch tensors to index-only
+    traffic (the RunLog.engine_stats counters prove which path ran)."""
+    for strat, kw in (("fedavg", dict(rounds=2)),
+                      ("fedasync", dict(max_updates=8, eval_every=4,
+                                        alpha=0.4))):
+        p_a, log_a = run_experiment(strat, micro_cfg, engine="cohort", **kw)
+        p_h, log_h = run_experiment(
+            strat, micro_cfg, engine="cohort",
+            engine_cfg=EngineConfig(device_arena=False), **kw)
+        _assert_params_close(p_a, p_h)
+        _assert_logs_match(log_h, log_a)
+        assert log_a.engine_stats["data_path"] == "arena"
+        assert log_h.engine_stats["data_path"] == "host"
+        # the arena path ships a (K, S_max, B) int32 plan; the host path
+        # ships the full gathered batch tensors
+        assert (log_a.engine_stats["h2d_bytes_per_cohort"] * 100
+                < log_h.engine_stats["h2d_bytes_per_cohort"])
+
+
+def test_async_engine_preserves_callers_initial_params(micro_cfg):
+    """The arena path's fused merge donates its globals argument; the
+    engine must consume a COPY of the caller's initial params so they
+    stay readable after the run (reading a donated jax buffer raises)."""
+    from repro.core.aggregation import FedAsync as FA
+    from repro.engine import run_async_engine
+
+    clients, params, acc_fn, test = build_testbed(micro_cfg)
+    run_async_engine(clients, params, acc_fn, test, FA(alpha=0.4),
+                     max_updates=4, eval_every=4, seed=micro_cfg.seed)
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()  # still alive
+
+
 # ---------------------------------------------------------------------------
 # executor parity: vmap / fl_step vs unroll (single device, unsharded —
 # the sharded variants run in the multi-device job, tests/test_mesh_backend)
@@ -270,6 +306,30 @@ def test_pop_cohort_window_and_pow2():
     heap = [(5.0, 7)]
     heapq.heapify(heap)
     assert pop_cohort(heap, window=0.0, max_size=4) == [(5.0, 7)]
+
+
+def test_padded_cohort_size_buckets():
+    """Arena cohorts pad to the pow2 bucket rounded up to a multiple of
+    the mesh data-axis product, so the compiled leading dim always
+    partitions and the recompile set collapses to the bucket sizes."""
+    from repro.engine import padded_cohort_size
+    assert [padded_cohort_size(k) for k in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    assert [padded_cohort_size(k, 8) for k in (1, 3, 6, 8, 9)] == \
+        [8, 8, 8, 8, 16]
+    # non-pow2 data axes round up to the next multiple
+    assert padded_cohort_size(4, 6) == 6
+    assert padded_cohort_size(8, 6) == 12
+    # pow2 bucketing off (EngineConfig.pow2_cohorts=False): pad straight
+    # to the MINIMAL multiple — pad members still burn masked compute
+    assert padded_cohort_size(5, 6, pow2=False) == 6   # not 12
+    assert padded_cohort_size(5, 1, pow2=False) == 5   # no padding at all
+    assert padded_cohort_size(9, 8, pow2=False) == 16
+    # every result divides evenly over the data axis
+    for n_data in (1, 2, 4, 6, 8):
+        for k in range(1, 33):
+            for pow2 in (True, False):
+                kp = padded_cohort_size(k, n_data, pow2)
+                assert kp % n_data == 0 and kp >= k
 
 
 def test_plan_batches_matches_legacy_slicing():

@@ -181,6 +181,81 @@ def test_cohort_step_partitions_cohort_axis():
 
 
 @multi_device
+def test_padded_uneven_cohort_partitions_and_matches():
+    """Tentpole acceptance: an UNEVEN cohort — the case PR 2's GSPMD rule
+    could only run replicated — pads to its bucket size, GENUINELY
+    partitions (addressable-shard shapes), and its first K rows equal the
+    unpadded host-path result (pad members are zero-step masked)."""
+    from repro.core.testbed import build_testbed
+    from repro.engine import (CohortRunner, EngineConfig,
+                              assert_cohort_partitioned, cohort_mesh,
+                              padded_cohort_size)
+    mesh = cohort_mesh()
+    n = len(jax.devices())
+    n_data = mesh.shape["data"]
+    k = max(2, (3 * n_data) // 4)
+    assert k % n_data, "need a cohort size that does not divide the axis"
+    cfg = replace(_mesh_cfg(), use_dp=False)
+
+    def one_cohort(ec):
+        clients, params, _, _ = build_testbed(cfg)
+        runner = CohortRunner(clients, ec)
+        key = jax.random.PRNGKey(0)
+        plans = []
+        for c in clients[:k]:
+            key, sub = jax.random.split(key)
+            plans.append(runner.dispatch(c, params, sub, 0))
+        return runner.run_cohort(plans)
+
+    stacked = one_cohort(
+        EngineConfig(client_axis="vmap", mesh=mesh, max_cohort=n))
+    k_pad = padded_cohort_size(k, n_data)
+    assert jax.tree_util.tree_leaves(stacked)[0].shape[0] == k_pad
+    report = assert_cohort_partitioned(stacked, mesh)
+    assert report and set(report.values()) == {k_pad // n_data}
+    ref = one_cohort(EngineConfig(device_arena=False))  # host path, no mesh
+    for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a)[:k], np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_invalidate_step_cache_frees_arena_buffers(micro_cfg):
+    """The compiled-step cache holds step FUNCTIONS only — arenas are
+    per-runner call arguments, never closed over — so dropping a mesh's
+    cache entries plus the runner must free every device-resident arena
+    buffer (params, opt state and dataset)."""
+    import gc
+    import weakref
+
+    from repro.core.testbed import build_testbed
+    from repro.engine import CohortRunner, EngineConfig, cohort_mesh
+    from repro.engine.cohort_step import invalidate_step_cache
+
+    mesh = cohort_mesh()
+    clients, params, _, _ = build_testbed(micro_cfg)
+    runner = CohortRunner(clients, EngineConfig(mesh=mesh, max_cohort=2))
+    key = jax.random.PRNGKey(0)
+    plans = []
+    for c in clients[:2]:
+        key, sub = jax.random.split(key)
+        plans.append(runner.dispatch(c, params, sub, 0))
+    stacked = runner.run_cohort(plans)
+    jax.block_until_ready(jax.tree_util.tree_leaves(stacked)[0])
+    refs = [weakref.ref(leaf) for leaf in (
+        jax.tree_util.tree_leaves(runner._arena_data)
+        + jax.tree_util.tree_leaves(runner._arena_params)
+        + jax.tree_util.tree_leaves(runner._arena_opt))]
+    # at least the runner's compiled step AND its arena helpers entry
+    # (cached_arena_helpers shares the step cache) must drop
+    assert invalidate_step_cache(mesh) >= 2
+    del runner, plans, stacked
+    gc.collect()
+    alive = [r for r in refs if r() is not None]
+    assert not alive, f"{len(alive)}/{len(refs)} arena buffers leaked"
+
+
+@multi_device
 def test_run_experiment_vmap_sharded_matches_unroll():
     """The acceptance criterion: run_experiment(..., engine="cohort",
     engine_cfg=EngineConfig(client_axis="vmap"), mesh=...) end-to-end on a
