@@ -337,13 +337,123 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
                 round(stats["h2d_bytes_per_cohort"])
                 if "h2d_bytes_per_cohort" in stats else None),
         })
-    _write_bench_engine(rows)
+    pipeline_rows = bench_engine_pipeline(tiny=tiny)
+    _write_bench_engine(rows, pipeline_rows)
     return _write("engine_throughput", rows)
 
 
-def _write_bench_engine(rows):
+# ---------------------------------------------------------------------------
+# Pipelined cohort scheduler: serial (pre-pipeline) driver vs pipelined
+# submit/drain on the forced-8-device mesh
+# ---------------------------------------------------------------------------
+
+def bench_engine_pipeline(num_clients=32, updates=96, seed=0, window=120.0,
+                          tiny=False):
+    """The pipelined-scheduler acceptance pair (multi-device only; spawn
+    host devices with XLA_FLAGS=--xla_force_host_platform_device_count=8):
+    an identical scheduler-bound async workload — many clients, short
+    local rounds, eval disabled, cohorts padded to the data axis — under
+
+      * serial    — pipeline_depth=1 with per-dispatch moments-accountant
+                    recomputation: the pre-pipeline driver, whose
+                    donation-chained submits block the host for every
+                    cohort's full device time (engine_stats counts them
+                    as ``blocking_submits``)
+      * serial_memo_acct — pipeline_depth=1 with the memoized one-step
+                    accountant vector (attribution row: how much of the
+                    win is accounting vs overlap)
+      * pipelined — pipeline_depth=2 submit/drain: donation-free compiled
+                    steps dispatch async, host planning/staging overlaps
+                    device compute, zero device->host syncs between eval
+                    boundaries (``host_syncs_between_evals`` is asserted
+                    in the row)
+
+    The workload is deliberately scheduler-bound (the regime the paper's
+    async-speedup argument targets: server-side planning on the critical
+    path, not client compute) — small SER model, one/two local steps per
+    round, wide cohorts.  Rows land in BENCH_engine.json under the
+    ``pipeline`` section (``summarize.py --check-engine`` validates it on
+    multi-device runs)."""
+    import time as _time
+
+    import jax
+
+    from repro.core.accountant import use_fast_accounting
+    from repro.engine import EngineConfig, cohort_mesh
+    from repro.models.ser_cnn import SERConfig
+
+    if len(jax.devices()) <= 1:
+        return []
+    if tiny:
+        num_clients = min(num_clients, 16)
+        updates = min(updates, 32)
+    dims = dict(time_frames=12, n_mels=12)
+    cfg = TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=16, num_clients=num_clients,
+        data=SERDataConfig(n_total=36 * num_clients, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims),
+        seed=seed)
+    mesh = cohort_mesh(max_cohort=num_clients)
+    base = dict(staleness_window=window, max_cohort=mesh.shape["data"],
+                client_axis="vmap", mesh=mesh)
+    variants = [
+        ("serial", EngineConfig(**base), False),
+        ("serial_memo_acct", EngineConfig(**base), True),
+        ("pipelined", EngineConfig(pipeline_depth=2, **base), True),
+    ]
+
+    def run(ec, fast, n=updates):
+        prev = use_fast_accounting(fast)
+        try:
+            t0 = _time.perf_counter()
+            _, log = run_experiment("fedasync", cfg, max_updates=n,
+                                    alpha=0.4, eval_every=10 ** 9,
+                                    engine="cohort", engine_cfg=ec)
+            return _time.perf_counter() - t0, log
+        finally:
+            use_fast_accounting(prev)
+
+    for _, ec, fast in variants:           # warmup: pay the XLA compiles
+        run(ec, fast, n=max(8, 2 * mesh.shape["data"]))
+
+    rows = []
+    t_serial = None
+    for name, ec, fast in variants:
+        t, log = run(ec, fast)
+        if t_serial is None:
+            t_serial = t
+        stats = log.engine_stats
+        n_cohorts = len(log.cohort_sizes)
+        rows.append({
+            "engine": name,
+            "pipeline_depth": stats["pipeline_depth"],
+            "accounting": ("memoized" if fast else
+                           "per_dispatch_recompute"),
+            "executor": ec.client_axis,
+            "data_path": stats["data_path"],
+            "mesh": dict(ec.mesh.shape),
+            "num_clients": num_clients,
+            "updates": updates,
+            "wall_s": round(t, 2),
+            "warm_step_ms": (round(1e3 * t / n_cohorts, 2)
+                             if n_cohorts else None),
+            "updates_per_s": round(updates / t, 2),
+            "speedup_vs_serial": round(t_serial / t, 2),
+            "mean_cohort": (round(float(np.mean(log.cohort_sizes)), 2)
+                            if log.cohort_sizes else None),
+            "host_syncs_between_evals": stats["host_syncs_between_evals"],
+            "blocking_submits": stats["blocking_submits"],
+            "drain_waits": stats["drain_waits"],
+        })
+    _write("engine_pipeline", rows)
+    return rows
+
+
+def _write_bench_engine(rows, pipeline_rows=None):
     """The machine-readable perf trajectory: BENCH_engine.json at the repo
-    root (schema checked by ``benchmarks/summarize.py --check-engine``)."""
+    root (schema checked by ``benchmarks/summarize.py --check-engine``).
+    ``pipeline_rows`` (multi-device runs) land under the ``pipeline``
+    section — the serial-vs-pipelined scheduler comparison."""
     import jax
 
     out = {
@@ -351,6 +461,8 @@ def _write_bench_engine(rows):
         "devices": len(jax.devices()),
         "rows": rows,
     }
+    if pipeline_rows:
+        out["pipeline"] = {"rows": pipeline_rows}
     fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(fn, "w") as f:
         json.dump(out, f, indent=1, default=float)

@@ -79,6 +79,22 @@ def main() -> None:
         _line("engine.smoke", round((time.time() - t0) * 1e6),
               ";".join(f"{r['engine']}:{r['speedup_vs_legacy']}x"
                        for r in rows))
+        # the pipelined-scheduler pair (multi-device only): tiny
+        # pipeline_depth=2 run vs the serial driver, validated by
+        # summarize.py --check-engine against the BENCH pipeline section.
+        # Read THIS run's BENCH_engine.json (bench_engine_throughput just
+        # rewrote it) — the results/bench cache may hold a stale
+        # multi-device artifact from an earlier invocation.
+        import json
+        import os
+        bench_fn = os.path.join(os.path.dirname(flb.__file__), "..",
+                                "BENCH_engine.json")
+        with open(bench_fn) as f:
+            pipe = json.load(f).get("pipeline", {}).get("rows", [])
+        if pipe:
+            _line("engine.pipeline.smoke", None,
+                  ";".join(f"{r['engine']}:{r['speedup_vs_serial']}x"
+                           for r in pipe))
         return
 
     def run_or_cache(name, fn):

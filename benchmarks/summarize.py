@@ -23,6 +23,14 @@ _ENGINE_ROW_KEYS = {
     "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort",
 }
 
+# the pipelined-scheduler section (bench_engine_pipeline, multi-device
+# runs): serial vs pipelined driver rows
+_PIPELINE_ROW_KEYS = {
+    "engine", "pipeline_depth", "accounting", "wall_s", "warm_step_ms",
+    "updates_per_s", "speedup_vs_serial", "host_syncs_between_evals",
+    "blocking_submits", "drain_waits",
+}
+
 
 def _load(name):
     fn = os.path.join(BENCH, f"{name}.json")
@@ -49,6 +57,39 @@ def load_engine_bench(path=None):
         missing = _ENGINE_ROW_KEYS - set(r)
         if missing:
             raise ValueError(f"{fn}: row {i} missing keys {sorted(missing)}")
+    pipe = data.get("pipeline")
+    if pipe is None:
+        if data.get("devices", 1) > 1:
+            raise ValueError(
+                f"{fn}: multi-device run is missing the 'pipeline' section "
+                "(serial vs pipelined scheduler rows — run "
+                "benchmarks.fl_benchmarks.bench_engine_pipeline)")
+    else:
+        prows = pipe.get("rows")
+        if not isinstance(prows, list) or not prows:
+            raise ValueError(f"{fn}: pipeline section has no rows")
+        for i, r in enumerate(prows):
+            missing = _PIPELINE_ROW_KEYS - set(r)
+            if missing:
+                raise ValueError(
+                    f"{fn}: pipeline row {i} missing keys {sorted(missing)}")
+        names = {r["engine"] for r in prows}
+        if not {"serial", "pipelined"} <= names:
+            raise ValueError(
+                f"{fn}: pipeline section must compare 'serial' and "
+                f"'pipelined' rows (got {sorted(names)})")
+        for r in prows:
+            if r["engine"] == "pipelined" and r["host_syncs_between_evals"]:
+                raise ValueError(
+                    f"{fn}: pipelined row reports "
+                    f"{r['host_syncs_between_evals']} host syncs between "
+                    "eval boundaries (must be 0)")
+            if r["engine"] == "serial" and not r["host_syncs_between_evals"]:
+                raise ValueError(
+                    f"{fn}: serial row reports 0 host syncs between eval "
+                    "boundaries — the serial driver's donation-blocked "
+                    "submits must be counted (one per cohort), otherwise "
+                    "the pipelined row's 0 is vacuous")
     return data
 
 
@@ -65,6 +106,14 @@ def summarize_engine(out):
             f"warm step {r['warm_step_ms']}ms, "
             f"h2d/cohort {h2d if h2d is not None else '-'}B "
             f"({r['data_path']})")
+    for r in data.get("pipeline", {}).get("rows", []):
+        out.append(
+            f"pipeline[{data['devices']}dev] {r['engine']} "
+            f"(depth={r['pipeline_depth']}, {r['accounting']} acct): "
+            f"{r['speedup_vs_serial']}x vs serial, "
+            f"wall {r['wall_s']}s, warm step {r['warm_step_ms']}ms, "
+            f"syncs-between-evals {r['host_syncs_between_evals']}, "
+            f"blocking submits {r['blocking_submits']}")
 
 
 def main():
@@ -154,7 +203,8 @@ if __name__ == "__main__":
         except ValueError as e:
             print(f"BENCH_engine.json check FAILED: {e}")
             sys.exit(1)
+        n_pipe = len(data.get("pipeline", {}).get("rows", []))
         print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
-              f"{data['devices']} device(s)")
+              f"{n_pipe} pipeline rows, {data['devices']} device(s)")
         sys.exit(0)
     main()

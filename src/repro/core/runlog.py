@@ -31,8 +31,12 @@ class RunLog:
     dropouts: dict = field(default_factory=dict)
     # engine-only: size of each merged cohort (legacy loops leave it empty)
     cohort_sizes: list = field(default_factory=list)
-    # engine-only: data-path counters from CohortRunner.stats() — which
-    # path ran ("arena" | "host") and the per-cohort H2D byte traffic
+    # engine-only: data-path + scheduler counters from
+    # CohortRunner.stats() — which path ran ("arena" | "host"), the
+    # per-cohort H2D byte traffic, and the pipelined-scheduler sync
+    # accounting (pipeline_depth, host_syncs_between_evals — 0 on the
+    # pipelined path, blocking_submits — the serial path's per-cohort
+    # donation syncs, drain_waits — overlapped backpressure waits)
     engine_stats: dict = field(default_factory=dict)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:

@@ -41,6 +41,18 @@ index plans (``RunLog.engine_stats`` reports the measured bytes).
 ``device_arena=False`` keeps the PR-2 host-fed path for comparison
 (``benchmarks/fl_benchmarks.py::bench_engine_throughput`` times both and
 writes ``BENCH_engine.json``).
+
+Scheduling (``EngineConfig.pipeline_depth``): the default depth 1 is the
+serial driver (donation-chained — every submit blocks the host for the
+cohort's device time); depth >= 2 is the pipelined submit/drain
+scheduler — donation-free compiled steps dispatch asynchronously, host
+planning and the few-KB staging uploads for cohort t+1 overlap cohort
+t's device execution, and the host blocks only at eval boundaries (see
+the pipeline diagram in :mod:`repro.engine.engine`; dispatch-time
+privacy accounting is O(orders) via the memoized vectors and epsilon
+schedules in :mod:`repro.core.accountant`).  ``RunLog`` is bit-identical
+across depths — the parity suite in tests/test_engine_pipeline.py holds
+the pipelined path to the serial engine AND the legacy loop.
 """
 from repro.engine.cohort import (
     LocalRoundPlan,

@@ -78,7 +78,16 @@ def plan_batches(rng: np.random.Generator, n: int, batch_size: int,
 def pop_cohort(heap: list, window: float, max_size: int,
                bucket_pow2: bool = False):
     """Pop the earliest event plus every event within ``window`` virtual
-    seconds of it (up to ``max_size``), in completion-time order.
+    seconds of it (up to ``max_size``), in stable ``(time, cid)`` order.
+
+    Tie-breaking is a GUARANTEE, not an accident of heap layout: events
+    completing at the same virtual time come off in ascending cid, so a
+    cohort's membership and member order — and therefore the pipelined
+    scheduler's lookahead plans, the fold of the merge weights and every
+    downstream RunLog row — are reproducible across runs and across
+    ``pipeline_depth`` settings.  (Entries are ``(time, cid)`` tuples, so
+    the heap already yields that order; the explicit sort pins the
+    contract against any future entry shape that compares differently.)
 
     With ``bucket_pow2`` the cohort is truncated to the largest power of
     two <= its natural size (the tail goes back on the heap): the compiled
@@ -88,6 +97,7 @@ def pop_cohort(heap: list, window: float, max_size: int,
     t0 = events[0][0]
     while heap and len(events) < max_size and heap[0][0] <= t0 + window:
         events.append(heapq.heappop(heap))
+    events.sort()  # deterministic (time, cid) order even on time ties
     if bucket_pow2:
         keep = 1 << (len(events).bit_length() - 1)
         for ev in events[keep:]:

@@ -112,7 +112,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                      use_dp: bool = True, use_kernel: bool = False,
                      client_axis: str = "unroll", client_shardings=None,
                      fl_cfg=None, arena: bool = False,
-                     donate_globals: bool = False):
+                     donate_globals: bool = False, donate: bool = True):
     """Build the jitted cohort program.
 
     Returns ``(cohort_step, merge_cohort)``.  With ``arena=False`` (the
@@ -170,6 +170,17 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     partition the divisible leading dims and replicate the rest).
     ``fl_cfg`` (an ``FLStepConfig``) is required by the ``"fl_step"``
     executor and ignored by the others.
+
+    ``donate=False`` disables EVERY buffer donation (the opt-arena
+    scatter, the host path's stacked state, and ``donate_globals``).
+    Donation is a throughput win on the strictly serial driver, but a
+    donated-input dispatch BLOCKS the host until the computation
+    finishes (measured on jax 0.4 CPU: a donation-chained loop runs
+    fully synchronously while the identical non-donated chain dispatches
+    asynchronously) — the engine's pipelined scheduler
+    (``EngineConfig.pipeline_depth >= 2``) therefore trades the donated
+    in-place update for an async-dispatchable copy so host planning can
+    overlap device compute.
     """
     validate_client_axis(client_axis)
     if client_axis == "fl_step" and fl_cfg is None:
@@ -282,7 +293,8 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
         # output leaves share shape/dtype AND the same shape-aware sharding
         # rule, so donation aliases even on a mesh (unlike the host path's
         # replicated-in / partitioned-out cohort stacks)
-        @functools.partial(jax.jit, donate_argnums=(1,))
+        @functools.partial(
+            jax.jit, **({"donate_argnums": (1,)} if donate else {}))
         def cohort_step(arena_params, arena_opt, arena_data, slots,
                         batch_idx, keys, n_steps):
             def take(tree):
@@ -308,7 +320,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
         # donation is only a win when input and output buffers can alias;
         # under mesh shardings the replicated inputs and partitioned
         # outputs never do, and jax warns on every call — don't donate
-        jit_kw = ({} if client_shardings is not None
+        jit_kw = ({} if client_shardings is not None or not donate
                   else {"donate_argnums": (0, 1)})
 
         @functools.partial(jax.jit, **jit_kw)
@@ -324,7 +336,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     # every merge replaces the globals, so donating kills the one
     # full-model re-allocation in the async inner loop — but only when the
     # runner proved nothing aliases the buffer (see docstring)
-    merge_kw = {"donate_argnums": (0,)} if donate_globals else {}
+    merge_kw = {"donate_argnums": (0,)} if donate_globals and donate else {}
 
     @functools.partial(jax.jit, **merge_kw)
     def merge_cohort(global_params, stacked_uploads, coeffs, g_coeff):
@@ -387,7 +399,8 @@ def _shardings_key(client_shardings):
 
 def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
                        client_axis="unroll", client_shardings=None,
-                       fl_cfg=None, arena=False, donate_globals=False):
+                       fl_cfg=None, arena=False, donate_globals=False,
+                       donate=True):
     """Memoized :func:`make_cohort_step`, keyed per (training config,
     executor, data path, shardings/mesh): scenario sweeps over the same
     testbed AND mesh reuse the compiled programs instead of re-tracing
@@ -401,13 +414,14 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
         return make_cohort_step(
             loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
             client_axis=client_axis, client_shardings=client_shardings,
-            fl_cfg=fl_cfg, arena=arena, donate_globals=donate_globals)
+            fl_cfg=fl_cfg, arena=arena, donate_globals=donate_globals,
+            donate=donate)
 
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:
         return build()
     key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
-           client_axis, fl_cfg, sh_key, arena, donate_globals)
+           client_axis, fl_cfg, sh_key, arena, donate_globals, donate)
     try:
         hash(key)
     except TypeError:
@@ -417,14 +431,18 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
     return _STEP_CACHE[key]
 
 
-def cached_arena_helpers(arena_slots: int, opt, client_shardings):
+def cached_arena_helpers(arena_slots: int, opt, client_shardings,
+                         donate: bool = True):
     """Compiled arena plumbing — ``(init, write, gather)`` over the
     (A, ...) client-state arenas — shared across CohortRunners and stored
     in the SAME cache as the compiled steps, so
     :func:`invalidate_step_cache` drops a mesh's helper entries alongside
     its step entries (the documented mesh-lifetime cleanup covers both).
     The arenas themselves are call arguments, never closed over: the
-    cache holds compiled functions only, no device buffers."""
+    cache holds compiled functions only, no device buffers.
+    ``donate=False`` keeps ``write`` out-of-place (the pipelined
+    scheduler needs async dispatch; donated inputs block it — see
+    :func:`make_cohort_step`)."""
 
     def build():
         def constrain(tree):
@@ -437,7 +455,8 @@ def cached_arena_helpers(arena_slots: int, opt, client_shardings):
                     l[None], (arena_slots,) + l.shape), p)
             return constrain(stacked), constrain(jax.vmap(opt.init)(stacked))
 
-        @functools.partial(jax.jit, donate_argnums=(0,))
+        @functools.partial(
+            jax.jit, **({"donate_argnums": (0,)} if donate else {}))
         def write(arena, p, slots):
             return constrain(jax.tree_util.tree_map(
                 lambda a, l: a.at[slots].set(
@@ -455,7 +474,7 @@ def cached_arena_helpers(arena_slots: int, opt, client_shardings):
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:
         return build()
-    key = ("arena_helpers", arena_slots, opt, sh_key)
+    key = ("arena_helpers", arena_slots, opt, sh_key, donate)
     try:
         hash(key)
     except TypeError:

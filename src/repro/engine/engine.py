@@ -36,11 +36,46 @@ params allclose and identical update-count/epsilon bookkeeping).  A
 positive window trades a bounded amount of merge reordering for wide
 cohorts and is where the throughput win comes from (see
 ``benchmarks/fl_benchmarks.py::bench_engine_throughput``).
+
+Pipelined scheduling (``EngineConfig.pipeline_depth``):
+
+  Every quantity a cohort needs is deterministic at dispatch time (the
+  virtual clock, the minibatch permutations and the PRNG chain are host
+  state), so the host can assemble cohort *t+1* while cohort *t* still
+  executes on device.  What breaks that overlap on the serial driver is
+  buffer donation: a donated-input dispatch blocks the host until the
+  computation finishes (measured: a donation-chained loop on jax CPU
+  runs fully synchronously), and the PR-3 data path donates the opt
+  arena, the params-arena writes and the merged globals — every cohort
+  is a full host<->device sync.  With ``pipeline_depth >= 2`` the runner
+  builds donation-free programs and the loops split into submit/drain:
+
+      host   │ plan t   plan t+1   plan t+2        drain/eval
+             │ stage t  stage t+1  stage t+2  ...  (the ONLY host
+             │ submit t submit t+1 submit t+2       blocks)
+      ───────┼────────────────────────────────────────────────────
+      device │          step t ──► step t+1 ──► step t+2
+             │           merge t ──► merge t+1 ──► ...
+
+  *plan* (pop_cohort, batch plans, memoized accountant, clock/heap) and
+  *stage* (the few-KB int32/key uploads via async device_put) run ahead
+  of the device; *submit* enqueues the compiled step + merge without
+  waiting.  At most ``pipeline_depth`` cohorts are in flight — beyond
+  that the loop drains the OLDEST cohort's outputs (backpressure, no
+  device->host transfer).  The host genuinely blocks only at eval
+  boundaries, ``target_acc`` checks and end of run; ``RunLog`` is
+  bit-identical to the serial path because every bookkeeping scalar
+  (merge weight, staleness tau, epsilon, influence increment) is packed
+  per cohort from host-deterministic plan state, never fetched from
+  device.  ``RunLog.engine_stats`` reports the sync counters
+  (``host_syncs_between_evals`` is 0 on the pipelined path;
+  ``blocking_submits`` counts the serial path's donation syncs).
 """
 from __future__ import annotations
 
 import functools
 import heapq
+from collections import deque
 from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
@@ -48,6 +83,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import accountant as _accountant
 from repro.core.aggregation import (
     AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
 from repro.core.runlog import RunLog, eval_all
@@ -83,9 +119,20 @@ class EngineConfig:
                                    # datasets upload once, cohorts assemble as
                                    # a compiled gather fed by index plans only
                                    # (False = PR-2 host-fed baseline)
+    pipeline_depth: int = 1        # cohorts in flight: 1 = the serial driver
+                                   # (donation-chained, each submit blocks);
+                                   # >= 2 = pipelined submit/drain — host
+                                   # planning/staging overlaps device compute,
+                                   # donation off so dispatch is async (see
+                                   # module docstring pipeline diagram)
 
     def __post_init__(self):
         validate_client_axis(self.client_axis)
+        if int(self.pipeline_depth) < 1 or self.pipeline_depth != int(
+                self.pipeline_depth):
+            raise ValueError(
+                f"pipeline_depth must be an integer >= 1: "
+                f"{self.pipeline_depth!r}")
 
 
 def _resolve_mesh_cfg(cfg: EngineConfig, mesh) -> EngineConfig:
@@ -96,6 +143,40 @@ def _resolve_mesh_cfg(cfg: EngineConfig, mesh) -> EngineConfig:
     return cfg
 
 
+def _host_fetch(runner, value) -> float:
+    """The funnel for the engine loops' direct device->host scalar reads
+    (the global-accuracy eval; ``eval_all``'s per-client fetches happen
+    inside the same eval boundary but route through the shared
+    ``Client.evaluate``).  Fetches — and the serial driver's
+    donation-blocked submits, counted at the submit site — feed the
+    runner's sync counters, and the pipelined-path acceptance criterion
+    is that the between-evals count stays ZERO (the sync-count parity
+    test monkeypatches this function to prove the fetch side)."""
+    out = float(value)
+    runner.note_host_sync()
+    return out
+
+
+@dataclass
+class StagedCohort:
+    """One cohort's device-ready inputs, assembled (and uploaded) ahead
+    of submission: on the arena path a few KB of int32 index plans plus
+    the stacked PRNG keys; on the host path the stacked state/batch
+    tensors.  Staging cohort t+1 while cohort t executes is the
+    'dispatch queue' of the pipelined scheduler — the H2D device_puts
+    are async, so building one of these never waits on the device."""
+
+    plans: list
+    k: int
+    degenerate: bool = False       # s_max == 0: no client has a full batch
+    arena: bool = True
+    slots: Optional[object] = None       # (K_pad,) int32 on device
+    batch_idx: Optional[object] = None   # (K_pad, S_max, B) int32 on device
+    keys: Optional[object] = None        # (K_pad, 2) uint32 on device
+    n_steps: Optional[object] = None     # (K_pad,) int32 on device
+    stacked_params: Optional[object] = None  # host path only
+    stacked_opt: Optional[object] = None
+    batches: Optional[object] = None
 
 
 class CohortRunner:
@@ -165,6 +246,11 @@ class CohortRunner:
         # stack, not with the arenas — fall back to the host data path
         self.use_arena = bool(cfg.device_arena) and (
             client_shardings is None or callable(client_shardings))
+        # pipelined mode (pipeline_depth >= 2) submits cohorts without
+        # waiting — donation must be OFF throughout the hot loop because
+        # a donated-input dispatch blocks the host until the computation
+        # finishes (the very sync the pipeline deletes)
+        self.pipelined = cfg.pipeline_depth > 1
         # donate the globals into the fused merge only when nothing can
         # alias their buffer across merges: the host path keeps params0
         # snapshots in pending plans, and personalized clients keep
@@ -172,13 +258,15 @@ class CohortRunner:
         # engine loops read this flag and defensively copy the CALLER's
         # initial globals once per run (donation would otherwise delete
         # the caller's buffers at the first merge).
-        self.donates_globals = self.use_arena and not any(
-            c.personal_keys for c in clients)
+        self.donates_globals = (self.use_arena and not self.pipelined
+                                and not any(
+                                    c.personal_keys for c in clients))
         self.cohort_step, self.merge_cohort = cached_cohort_step(
             c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
             use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
             client_shardings=client_shardings, fl_cfg=cfg.fl_cfg,
-            arena=self.use_arena, donate_globals=self.donates_globals)
+            arena=self.use_arena, donate_globals=self.donates_globals,
+            donate=not self.pipelined)
         # data-axis product: arena cohorts pad to a multiple of it so the
         # compiled leading dim always partitions on the mesh (resolved
         # from cfg.mesh when set, else from the CohortSharding's mesh; a
@@ -196,8 +284,38 @@ class CohortRunner:
         self._writeq = []
         self.cohorts_run = 0
         self.h2d_bytes_total = 0
+        # host-sync accounting (RunLog.engine_stats): _host_fetch calls
+        # split by whether the loop was inside an eval boundary, plus the
+        # serial path's donation-blocked submits and the pipelined
+        # path's backpressure drains
+        self._in_eval = False
+        self.host_syncs_at_eval = 0
+        self.host_syncs_between_evals = 0
+        self.drain_waits = 0
+        self.blocking_submits = 0
+        # a donated-input dispatch blocks the host (see cohort_step):
+        # every serial-path submit on the arena path (and the donating
+        # host path) is therefore a per-cohort host sync, counted at the
+        # submit site so the serial rows report a NONZERO between-evals
+        # sync count that the pipelined path demonstrably drops to 0
+        self._submits_block = (not self.pipelined) and (
+            self.use_arena or client_shardings is None)
+        # epsilon-vs-round table per client (lazy; see dispatch)
+        self._eps_sched = {}
         if self.use_arena:
             self._build_data_arena()
+
+    # -- host-sync accounting ---------------------------------------------
+    def note_host_sync(self):
+        if self._in_eval:
+            self.host_syncs_at_eval += 1
+        else:
+            self.host_syncs_between_evals += 1
+
+    def eval_boundary(self, inside: bool):
+        """Mark the loop's eval sections: device->host fetches inside them
+        are the sanctioned blocking points of the pipelined schedule."""
+        self._in_eval = inside
 
     # -- device-resident arenas -------------------------------------------
     def _build_data_arena(self):
@@ -235,7 +353,8 @@ class CohortRunner:
         if self._arena_params is not None:
             return
         init, self._write, self._gather = cached_arena_helpers(
-            self.arena_slots, self.clients[0].opt, self.client_shardings)
+            self.arena_slots, self.clients[0].opt, self.client_shardings,
+            donate=not self.pipelined)
         self._arena_params, self._arena_opt = init(params)
 
     def _queue_write(self, slot: int, params_tree):
@@ -261,7 +380,14 @@ class CohortRunner:
             i = j
 
     def stats(self) -> dict:
-        """Data-path counters for RunLog.engine_stats / the benchmarks."""
+        """Data-path + scheduler counters for RunLog.engine_stats / the
+        benchmarks.  ``host_syncs_between_evals`` is the pipelined-path
+        acceptance number (0: the loop never pulls a device value to the
+        host outside an eval boundary); ``blocking_submits`` counts the
+        serial path's donation-chained submits (each one stalls the host
+        for the cohort's full device time); ``drain_waits`` counts the
+        pipelined path's backpressure waits on OLDER cohorts (overlapped,
+        no device->host transfer)."""
         return {
             "data_path": "arena" if self.use_arena else "host",
             "cohorts": self.cohorts_run,
@@ -269,6 +395,11 @@ class CohortRunner:
             "h2d_bytes_per_cohort": (
                 self.h2d_bytes_total / self.cohorts_run
                 if self.cohorts_run else 0.0),
+            "pipeline_depth": int(self.cfg.pipeline_depth),
+            "host_syncs_at_eval": self.host_syncs_at_eval,
+            "host_syncs_between_evals": self.host_syncs_between_evals,
+            "blocking_submits": self.blocking_submits,
+            "drain_waits": self.drain_waits,
         }
 
     # -- dispatch ----------------------------------------------------------
@@ -304,10 +435,30 @@ class CohortRunner:
             params0=None if self.use_arena else params0,
             opt_state=None if self.use_arena else c.opt_state,
             batch_idx=idx, key=key, n_steps=steps, duration=duration,
-            epsilon=c.accountant.epsilon(self.cfg.delta) if c.use_dp else 0.0,
+            epsilon=self._client_epsilon(c, steps) if c.use_dp else 0.0,
             model_version=server_version)
         plan.personal_snapshot = personal_snapshot
         return plan
+
+    def _client_epsilon(self, c, steps: int) -> float:
+        """Dispatch-time epsilon: a per-round table lookup on the shared
+        :class:`repro.core.accountant.EpsilonSchedule` (bit-identical to
+        ``c.accountant.epsilon`` — the schedule replays the accountant's
+        exact float64 accumulation of the memoized one-step vector, so
+        the per-dispatch min-over-orders recomputation leaves the host
+        critical path).  With the fast path toggled off (the benchmark's
+        pre-memoization baseline) fall back to the accountant itself."""
+        if not _accountant.fast_accounting_enabled():
+            return c.accountant.epsilon(self.cfg.delta)
+        sched = self._eps_sched.get(c.cid)
+        if sched is None:
+            sched = _accountant.cached_epsilon_schedule(
+                c.q, c.dp_cfg.noise_multiplier, steps, self.cfg.delta,
+                orders=c.accountant.orders)
+            self._eps_sched[c.cid] = sched
+        # update_count was just incremented: the client has been charged
+        # for exactly update_count rounds of `steps` DP-SGD steps
+        return sched.epsilon_after_rounds(c.update_count)
 
     # -- compiled local phase ---------------------------------------------
     def _pad_idx(self, idx, batch_size: int):
@@ -325,48 +476,51 @@ class CohortRunner:
         """Run every member's local round in one compiled call; returns the
         stacked new params (leading dim K, or the padded bucket size on
         the arena path) and persists the members' new optimizer states
-        (arena scatter, or per-client write-back on the host path)."""
-        if self.use_arena:
-            return self._run_cohort_arena(plans)
-        s_max = self.s_max
-        if s_max == 0:  # degenerate: no client has a full batch
-            return stack_trees([p.params0 for p in plans])
-        stacked_params = stack_trees([p.params0 for p in plans])
-        stacked_opt = stack_trees([p.opt_state for p in plans])
-        member_batches = []
-        for p in plans:
-            c = self.clients[p.cid]
-            idx = self._pad_idx(p.batch_idx, c.batch_size)
-            member_batches.append({k: v[idx] for k, v in c.data.items()})
-        batches_np = {
-            k: np.stack([mb[k] for mb in member_batches])
-            for k in member_batches[0]
-        }
-        self.cohorts_run += 1
-        self.h2d_bytes_total += (
-            sum(a.nbytes for a in batches_np.values()) + 4 * len(plans))
-        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
-        keys = jnp.stack([p.key for p in plans])
-        n_steps = jnp.asarray([p.n_steps for p in plans], jnp.int32)
-        new_stacked, new_opt = self.cohort_step(
-            stacked_params, stacked_opt, batches, keys, n_steps)
-        for i, p in enumerate(plans):
-            self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
-        return new_stacked
+        (arena scatter, or per-client write-back on the host path).
+        Stage + submit in one call — the serial driver's entry point; the
+        pipelined loops call the two halves separately."""
+        return self.submit_cohort(self.stage_cohort(plans))
 
-    def _run_cohort_arena(self, plans):
-        """Arena data path: flush the queued dispatch writes, then run the
-        cohort as ONE compiled gather->train->scatter whose only H2D
-        inputs are int32 index plans (slots, batch_idx, n_steps)."""
-        self._flush_writes()
+    def stage_cohort(self, plans) -> StagedCohort:
+        """Assemble one cohort's device inputs AHEAD of submission: flush
+        the queued dispatch writes, build the host-side index plans and
+        upload them (async device_put — a few KB on the arena path).
+        Pure w.r.t. the compiled step: staging cohort t+1 while cohort t
+        executes is safe because every input is host-deterministic plan
+        state (the pipelined scheduler's lookahead relies on it)."""
         k = len(plans)
+        if not self.use_arena:
+            if self.s_max == 0:  # degenerate: no client has a full batch
+                return StagedCohort(plans=plans, k=k, degenerate=True,
+                                    arena=False)
+            member_batches = []
+            for p in plans:
+                c = self.clients[p.cid]
+                idx = self._pad_idx(p.batch_idx, c.batch_size)
+                member_batches.append({kk: v[idx] for kk, v in c.data.items()})
+            batches_np = {
+                kk: np.stack([mb[kk] for mb in member_batches])
+                for kk in member_batches[0]
+            }
+            self.cohorts_run += 1
+            self.h2d_bytes_total += (
+                sum(a.nbytes for a in batches_np.values()) + 4 * k)
+            return StagedCohort(
+                plans=plans, k=k, arena=False,
+                stacked_params=stack_trees([p.params0 for p in plans]),
+                stacked_opt=stack_trees([p.opt_state for p in plans]),
+                batches={kk: jnp.asarray(v) for kk, v in batches_np.items()},
+                keys=jnp.stack([p.key for p in plans]),
+                n_steps=jnp.asarray([p.n_steps for p in plans], jnp.int32))
+        self._flush_writes()
         k_pad = (padded_cohort_size(k, self._n_data, self.cfg.pow2_cohorts)
                  if self._n_data > 1 else k)
         slots = np.full((k_pad,), self.pad_slot, np.int32)
         slots[:k] = [p.cid for p in plans]
         slots_j = jnp.asarray(slots)
         if self.s_max == 0:  # degenerate: no client has a full batch
-            return self._gather(self._arena_params, slots_j)
+            return StagedCohort(plans=plans, k=k, degenerate=True,
+                                slots=slots_j)
         batch_size = self.clients[0].batch_size
         batch_idx = np.zeros((k_pad, self.s_max, batch_size), np.int32)
         for i, p in enumerate(plans):
@@ -378,9 +532,36 @@ class CohortRunner:
             + [jnp.zeros_like(plans[0].key)] * (k_pad - k))
         self.cohorts_run += 1
         self.h2d_bytes_total += batch_idx.nbytes + slots.nbytes + n_steps.nbytes
+        return StagedCohort(
+            plans=plans, k=k, slots=slots_j,
+            batch_idx=jnp.asarray(batch_idx), keys=keys,
+            n_steps=jnp.asarray(n_steps))
+
+    def submit_cohort(self, staged: StagedCohort):
+        """Enqueue the compiled local phase for a staged cohort.  On the
+        pipelined (donation-free) path this returns without waiting for
+        the device; on the serial path the donated state blocks the call
+        until the cohort finishes — each such submit is counted as a
+        ``blocking_submits`` host sync (between evals, where the hot
+        loop lives)."""
+        plans = staged.plans
+        if not staged.degenerate and self._submits_block:
+            self.blocking_submits += 1
+            self.note_host_sync()
+        if not staged.arena:
+            if staged.degenerate:
+                return stack_trees([p.params0 for p in plans])
+            new_stacked, new_opt = self.cohort_step(
+                staged.stacked_params, staged.stacked_opt, staged.batches,
+                staged.keys, staged.n_steps)
+            for i, p in enumerate(plans):
+                self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
+            return new_stacked
+        if staged.degenerate:
+            return self._gather(self._arena_params, staged.slots)
         new_stacked, self._arena_opt = self.cohort_step(
             self._arena_params, self._arena_opt, self._arena_data,
-            slots_j, jnp.asarray(batch_idx), keys, jnp.asarray(n_steps))
+            staged.slots, staged.batch_idx, staged.keys, staged.n_steps)
         return new_stacked
 
     # -- upload ------------------------------------------------------------
@@ -397,13 +578,25 @@ class CohortRunner:
         return up
 
 
+_MERGE_COEFF_DTYPE = np.float32  # the dtype merge_cohort reduces in
+
+
 def _pad_coeffs(coeffs, stacked):
     """Zero-extend the cohort's merge coefficients to the compiled stack's
-    (possibly padded) leading dim — pad members contribute exactly 0."""
+    (possibly padded) leading dim — pad members contribute exactly 0.
+
+    Built AT the merge dtype: the float64 fold from
+    ``fold_cohort_weights`` rounds to float32 on assignment (the same
+    values ``jnp.asarray`` used to produce by silently downcasting a
+    float64 buffer under jax's default x64-disabled config, minus the
+    double-width round-trip and the 8-bytes-per-member H2D)."""
     k_pad = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-    out = np.zeros((k_pad,), np.float64)
+    out = np.zeros((k_pad,), _MERGE_COEFF_DTYPE)
     out[: len(coeffs)] = coeffs
-    return jnp.asarray(out)
+    out_j = jnp.asarray(out)
+    assert out_j.dtype == _MERGE_COEFF_DTYPE, (
+        f"merge coefficients must stay {_MERGE_COEFF_DTYPE}: {out_j.dtype}")
+    return out_j
 
 
 def _fused_ok(strategy, clients, plans, cfg: EngineConfig) -> bool:
@@ -444,6 +637,12 @@ def run_fedavg_engine(
         log.staleness.setdefault(c.tier, [])
         log.eps_trajectory.setdefault(c.tier, [])
 
+    # pipelined submit/drain across rounds: the barrier is algorithmic
+    # (round r+1 trains from round r's merged globals) but not a host
+    # sync — the merge output is a device future the next round's
+    # dispatch writes reference, so up to cfg.pipeline_depth rounds of
+    # compiled work stay in flight between eval boundaries
+    inflight = deque()
     for rnd in range(1, rounds + 1):
         plans = []
         for c in clients:
@@ -451,7 +650,8 @@ def run_fedavg_engine(
             plans.append(runner.dispatch(c, global_params, sub, rnd - 1))
         chunks = [plans[i:i + cfg.max_cohort]
                   for i in range(0, len(plans), cfg.max_cohort)]
-        stacked_chunks = [runner.run_cohort(ch) for ch in chunks]
+        stacked_chunks = [
+            runner.submit_cohort(runner.stage_cohort(ch)) for ch in chunks]
         log.cohort_sizes.extend(len(ch) for ch in chunks)
         t_virtual += max(p.duration for p in plans)
 
@@ -485,13 +685,21 @@ def run_fedavg_engine(
             log.eps_trajectory[c.tier].append(p.epsilon)
 
         if rnd % eval_every == 0 or rnd == rounds:
-            acc = float(accuracy_fn(global_params, test_data))
+            runner.eval_boundary(True)
+            acc = _host_fetch(runner, accuracy_fn(global_params, test_data))
             log.times.append(t_virtual)
             log.global_acc.append(acc)
             log.server_version.append(rnd)
             eval_all(clients, global_params, accuracy_fn, log)
+            runner.eval_boundary(False)
+            inflight.clear()
             if target_acc is not None and acc >= target_acc:
                 break
+        elif runner.pipelined:
+            inflight.append(jax.tree_util.tree_leaves(global_params))
+            while len(inflight) > cfg.pipeline_depth:
+                runner.drain_waits += 1
+                jax.block_until_ready(inflight.popleft())
 
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
@@ -546,6 +754,12 @@ def run_async_engine(
 
     t_virtual = 0.0
     done = False
+    # pipelined submit/drain: cohorts in flight are capped at
+    # cfg.pipeline_depth — past that the loop blocks on the OLDEST
+    # cohort's outputs (backpressure; the device keeps executing newer
+    # cohorts while the host waits).  Serial runs (depth 1) never enter
+    # the queue: their donation-chained submits already block per cohort.
+    inflight = deque()
     while heap and not done:
         events = pop_cohort(heap, cfg.staleness_window, cfg.max_cohort,
                             bucket_pow2=cfg.pow2_cohorts)
@@ -555,7 +769,7 @@ def run_async_engine(
             p.t_complete = t
             plans.append(p)
         t_virtual = plans[-1].t_complete
-        new_stacked = runner.run_cohort(plans)
+        new_stacked = runner.submit_cohort(runner.stage_cohort(plans))
         log.cohort_sizes.append(len(plans))
 
         if _fused_ok(strategy, clients, plans, cfg):
@@ -592,11 +806,17 @@ def run_async_engine(
         crossed = any((total_updates - j) % eval_every == 0
                       for j in range(len(plans)))
         if crossed:
-            acc = float(accuracy_fn(global_params, test_data))
+            # eval boundary — the pipelined schedule's ONLY sanctioned
+            # host block between start and end of run: fetching the
+            # global accuracy synchronizes every older cohort too
+            runner.eval_boundary(True)
+            acc = _host_fetch(runner, accuracy_fn(global_params, test_data))
             log.times.append(t_virtual)
             log.global_acc.append(acc)
             log.server_version.append(server_version)
             eval_all(clients, global_params, accuracy_fn, log)
+            runner.eval_boundary(False)
+            inflight.clear()
             if target_acc is not None and acc >= target_acc:
                 done = True
         if total_updates >= max_updates or (max_time and t_virtual >= max_time):
@@ -614,6 +834,12 @@ def run_async_engine(
                 plan = runner.dispatch(c, global_params, sub, server_version)
                 pending[c.cid] = plan
                 heapq.heappush(heap, (p.t_complete + plan.duration, c.cid))
+            if runner.pipelined:
+                inflight.append(jax.tree_util.tree_leaves(new_stacked)
+                                + jax.tree_util.tree_leaves(global_params))
+                while len(inflight) > cfg.pipeline_depth:
+                    runner.drain_waits += 1
+                    jax.block_until_ready(inflight.popleft())
 
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()

@@ -11,11 +11,16 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.accountant import (
+    DEFAULT_ORDERS,
     MomentsAccountant,
+    cached_epsilon_schedule,
+    cached_log_moments,
     compute_epsilon,
     delta_from_moments,
     epsilon_from_moments,
     log_moment_subsampled_gaussian,
+    log_moments_vector,
+    use_fast_accounting,
 )
 
 
@@ -104,6 +109,73 @@ def test_eps_delta_roundtrip():
     eps = acc.epsilon(1e-5)
     # delta at that eps should be <= 1e-5 (tightness of min over lambda)
     assert acc.delta(eps) <= 1e-5 * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-time fast path: vectorized + memoized one-step moments
+# ---------------------------------------------------------------------------
+
+def test_vectorized_moments_match_scalar_on_paper_grid():
+    """The one-pass vector must equal the scalar loop to 1e-12 across the
+    paper's sigma grid and representative sampling ratios, including the
+    q=0 / q=1 / sigma=0 edge cases."""
+    for sigma in (0.5, 1.0, 1.5, 2.0):
+        for q in (0.0, 1e-4, 0.01, 0.136, 0.5, 0.9, 1.0):
+            vec = log_moments_vector(q, sigma, DEFAULT_ORDERS)
+            ref = np.array([log_moment_subsampled_gaussian(q, sigma, lam)
+                            for lam in DEFAULT_ORDERS])
+            np.testing.assert_allclose(vec, ref, rtol=0, atol=1e-12)
+    # sigma = 0: unbounded privacy loss at every order
+    assert np.isinf(log_moments_vector(0.136, 0.0, DEFAULT_ORDERS)).all()
+    with pytest.raises(ValueError, match="outside"):
+        log_moments_vector(1.5, 1.0, DEFAULT_ORDERS)
+
+
+def test_cached_vector_is_shared_and_readonly():
+    a = cached_log_moments(0.136, 1.0)
+    b = cached_log_moments(0.136, 1.0)
+    assert a is b                       # memoized per (q, sigma, orders)
+    with pytest.raises(ValueError):
+        a[0] = 1.0                      # accountants must not mutate it
+
+
+def test_fast_and_scalar_accounting_agree():
+    """MomentsAccountant.step with the memoized fast path must reproduce
+    the scalar recomputation path exactly (the engine's dispatch-time
+    bookkeeping is compared verbatim against the legacy loop's)."""
+    prev = use_fast_accounting(False)
+    try:
+        scalar = MomentsAccountant()
+        scalar.step(0.136, 0.5, 3)
+        scalar.step(0.136, 0.5, 3)
+    finally:
+        use_fast_accounting(prev)
+    fast = MomentsAccountant()
+    fast.step(0.136, 0.5, 3)
+    fast.step(0.136, 0.5, 3)
+    np.testing.assert_allclose(fast._mu, scalar._mu, rtol=0, atol=1e-12)
+    assert fast.epsilon(1e-5) == pytest.approx(scalar.epsilon(1e-5),
+                                               abs=1e-12)
+
+
+def test_epsilon_schedule_matches_stepped_accountant():
+    """The precomputed eps-vs-round table must replay the accountant's
+    exact accumulation: entry r == an accountant charged r rounds."""
+    q, sigma, steps, delta = 0.136, 0.5, 3, 1e-5
+    sched = cached_epsilon_schedule(q, sigma, steps, delta)
+    acc = MomentsAccountant()
+    assert sched.epsilon_after_rounds(0) == 0.0
+    for r in range(1, 15):
+        acc.step(q, sigma, steps)
+        assert sched.epsilon_after_rounds(r) == acc.epsilon(delta), r
+    # random access after the sequential fill is a pure lookup
+    assert sched.epsilon_after_rounds(7) == sched._eps[7]
+    # degenerate config: no full batch => no charged steps, eps stays 0
+    empty = cached_epsilon_schedule(0.5, 1.0, 0, delta)
+    assert empty.epsilon_after_rounds(10) == 0.0
+    with pytest.raises(ValueError, match="rounds"):
+        sched.epsilon_after_rounds(-1)
+    assert cached_epsilon_schedule(q, sigma, steps, delta) is sched
 
 
 def test_heterogeneous_clients_disparity():

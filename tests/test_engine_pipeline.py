@@ -1,0 +1,206 @@
+"""Pipelined cohort scheduler: pipeline_depth >= 2 must reproduce the
+serial engine (and the legacy loop) bit-for-bit in RunLog bookkeeping and
+params-allclose, while performing ZERO device->host transfers between
+eval boundaries (the sync-count test monkeypatches the engine's
+_host_fetch funnel to prove every fetch happens inside an eval
+boundary), plus unit tests for the scheduler plumbing (EngineConfig
+validation, donation-off compiled steps, deterministic pop_cohort
+tie-breaking that lookahead planning relies on)."""
+import heapq
+import random
+
+import jax
+import numpy as np
+import pytest
+
+import repro.engine.engine as engine_mod
+from repro.core.testbed import build_testbed, run_experiment
+from repro.engine import EngineConfig
+from repro.engine.cohort import pop_cohort
+
+
+def _assert_params_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_logs_match(log_a, log_b):
+    assert log_a.update_counts == log_b.update_counts
+    assert log_a.eps_trajectory == log_b.eps_trajectory
+    assert log_a.staleness == log_b.staleness
+    assert log_a.times == log_b.times
+    assert log_a.cohort_sizes == log_b.cohort_sizes
+    np.testing.assert_allclose(log_a.global_acc, log_b.global_acc,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: pipelined vs serial vs legacy (the tentpole criterion)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_async_matches_serial_and_legacy(micro_cfg):
+    kw = dict(max_updates=12, eval_every=4, alpha=0.4)
+    p_leg, log_leg = run_experiment("fedasync", micro_cfg, engine="legacy",
+                                    **kw)
+    p_ser, log_ser = run_experiment("fedasync", micro_cfg, engine="cohort",
+                                    engine_cfg=EngineConfig(), **kw)
+    p_pipe, log_pipe = run_experiment(
+        "fedasync", micro_cfg, engine="cohort",
+        engine_cfg=EngineConfig(pipeline_depth=3), **kw)
+    _assert_params_close(p_ser, p_pipe)
+    _assert_params_close(p_leg, p_pipe)
+    _assert_logs_match(log_ser, log_pipe)
+    assert log_leg.update_counts == log_pipe.update_counts
+    assert log_leg.eps_trajectory == log_pipe.eps_trajectory
+    assert log_leg.staleness == log_pipe.staleness
+    assert log_pipe.engine_stats["pipeline_depth"] == 3
+    assert log_ser.engine_stats["pipeline_depth"] == 1
+
+
+def test_pipelined_fedavg_matches_serial(micro_cfg):
+    kw = dict(rounds=3, eval_every=2)
+    p_ser, log_ser = run_experiment("fedavg", micro_cfg, engine="cohort",
+                                    engine_cfg=EngineConfig(), **kw)
+    p_pipe, log_pipe = run_experiment(
+        "fedavg", micro_cfg, engine="cohort",
+        engine_cfg=EngineConfig(pipeline_depth=2), **kw)
+    _assert_params_close(p_ser, p_pipe)
+    _assert_logs_match(log_ser, log_pipe)
+
+
+def test_pipelined_windowed_cohorts_match_serial(micro_cfg):
+    """Multi-member cohorts (the pipelining target) through both drivers:
+    identical merge results and bookkeeping."""
+    ec_kw = dict(staleness_window=1e9, max_cohort=2)
+    kw = dict(max_updates=8, eval_every=4, alpha=0.4, engine="cohort")
+    p_ser, log_ser = run_experiment("fedasync", micro_cfg,
+                                    engine_cfg=EngineConfig(**ec_kw), **kw)
+    p_pipe, log_pipe = run_experiment(
+        "fedasync", micro_cfg,
+        engine_cfg=EngineConfig(pipeline_depth=2, **ec_kw), **kw)
+    _assert_params_close(p_ser, p_pipe)
+    _assert_logs_match(log_ser, log_pipe)
+    assert max(log_pipe.cohort_sizes) == 2  # the window actually batched
+
+
+# ---------------------------------------------------------------------------
+# sync-count: zero device->host transfers between eval boundaries
+# ---------------------------------------------------------------------------
+
+def test_pipelined_zero_host_syncs_between_evals(micro_cfg, monkeypatch):
+    """Every device->host fetch in the engine loops goes through the
+    _host_fetch funnel; monkeypatch-count it and assert the pipelined
+    path only ever fetches INSIDE an eval boundary — while producing the
+    exact RunLog the serial path does."""
+    fetches = []
+    real_fetch = engine_mod._host_fetch
+
+    def counting_fetch(runner, value):
+        fetches.append(bool(runner._in_eval))
+        return real_fetch(runner, value)
+
+    kw = dict(max_updates=12, eval_every=4, alpha=0.4, engine="cohort")
+    p_ser, log_ser = run_experiment("fedasync", micro_cfg,
+                                    engine_cfg=EngineConfig(), **kw)
+    monkeypatch.setattr(engine_mod, "_host_fetch", counting_fetch)
+    p_pipe, log_pipe = run_experiment(
+        "fedasync", micro_cfg,
+        engine_cfg=EngineConfig(pipeline_depth=2), **kw)
+    monkeypatch.undo()
+
+    assert fetches, "the eval boundary must fetch through the funnel"
+    assert all(fetches), (
+        "a device->host fetch happened OUTSIDE an eval boundary")
+    stats = log_pipe.engine_stats
+    assert stats["host_syncs_between_evals"] == 0
+    assert stats["blocking_submits"] == 0          # no donation syncs
+    assert stats["host_syncs_at_eval"] == len(fetches)
+    # serial path: every submit is a donation-chained host sync — the
+    # per-cohort between-evals count the pipelined path drops to 0
+    assert log_ser.engine_stats["blocking_submits"] == \
+        log_ser.engine_stats["cohorts"]
+    assert log_ser.engine_stats["host_syncs_between_evals"] == \
+        log_ser.engine_stats["cohorts"]
+    _assert_params_close(p_ser, p_pipe)
+    _assert_logs_match(log_ser, log_pipe)
+
+
+def test_pipelined_run_keeps_callers_params_readable(micro_cfg):
+    """Pipelined runners never donate the globals, so the caller's initial
+    params must stay readable without the serial path's defensive copy."""
+    from repro.core.aggregation import FedAsync
+    from repro.engine import CohortRunner, run_async_engine
+
+    clients, params, acc_fn, test = build_testbed(micro_cfg)
+    runner = CohortRunner(clients, EngineConfig(pipeline_depth=2))
+    assert runner.pipelined and not runner.donates_globals
+    clients, params, acc_fn, test = build_testbed(micro_cfg)
+    run_async_engine(clients, params, acc_fn, test, FedAsync(alpha=0.4),
+                     max_updates=4, eval_every=4, seed=micro_cfg.seed,
+                     engine_cfg=EngineConfig(pipeline_depth=2))
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()  # still alive
+
+
+# ---------------------------------------------------------------------------
+# scheduler plumbing
+# ---------------------------------------------------------------------------
+
+def test_pipeline_depth_validated():
+    assert EngineConfig().pipeline_depth == 1
+    EngineConfig(pipeline_depth=2)
+    for bad in (0, -1, 1.5):
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            EngineConfig(pipeline_depth=bad)
+
+
+def test_stage_then_submit_equals_run_cohort(micro_cfg):
+    """The split halves compose to exactly the old run_cohort (the serial
+    driver still calls them fused)."""
+    from repro.engine import CohortRunner
+
+    clients, params, _, _ = build_testbed(micro_cfg)
+    runner = CohortRunner(clients, EngineConfig())
+    key = jax.random.PRNGKey(0)
+    plans = []
+    for c in clients[:2]:
+        key, sub = jax.random.split(key)
+        plans.append(runner.dispatch(c, params, sub, 0))
+    staged = runner.stage_cohort(plans)
+    assert staged.k == 2
+    out = runner.submit_cohort(staged)
+    assert jax.tree_util.tree_leaves(out)[0].shape[0] >= 2
+
+
+def test_pop_cohort_tie_break_deterministic():
+    """Equal completion times pop in ascending cid REGARDLESS of push
+    order — pipelined lookahead replans the same cohorts every run."""
+    for seed in range(6):
+        entries = [(5.0, cid) for cid in range(8)] + [(9.0, 99)]
+        random.Random(seed).shuffle(entries)
+        heap = []
+        for e in entries:
+            heapq.heappush(heap, e)
+        events = pop_cohort(heap, window=0.0, max_size=8)
+        assert events == [(5.0, cid) for cid in range(8)]
+        assert heap == [(9.0, 99)]
+    # ties interleaved with distinct times keep global (time, cid) order
+    heap = [(2.0, 3), (1.0, 7), (1.0, 2), (2.0, 1), (1.0, 5)]
+    heapq.heapify(heap)
+    events = pop_cohort(heap, window=1.0, max_size=8)
+    assert events == [(1.0, 2), (1.0, 5), (1.0, 7), (2.0, 1), (2.0, 3)]
+
+
+def test_merge_coeffs_built_at_merge_dtype():
+    """_pad_coeffs builds float32 directly (no float64 round-trip through
+    jnp.asarray's silent downcast) and zero-fills the padded tail."""
+    import jax.numpy as jnp
+
+    stacked = {"w": jnp.zeros((4, 3))}
+    out = engine_mod._pad_coeffs(np.array([0.5, 0.25], np.float64), stacked)
+    assert out.dtype == jnp.float32
+    assert out.shape == (4,)
+    np.testing.assert_allclose(np.asarray(out), [0.5, 0.25, 0.0, 0.0])
