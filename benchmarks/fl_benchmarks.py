@@ -255,6 +255,12 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
                             n_total=(96 if tiny else 200) * num_clients),
                         seed=seed)
 
+    def spec_of(engine, ec):
+        from repro.api import ExperimentSpec
+        return ExperimentSpec.from_legacy(
+            "fedasync", cfg, max_updates=updates, alpha=0.4,
+            eval_every=10 ** 9, engine=engine, engine_cfg=ec)
+
     def run(engine, ec=None, n=updates):
         t0 = _time.perf_counter()
         _, log = run_experiment("fedasync", cfg, max_updates=n, alpha=0.4,
@@ -336,9 +342,14 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
             "h2d_bytes_per_cohort": (
                 round(stats["h2d_bytes_per_cohort"])
                 if "h2d_bytes_per_cohort" in stats else None),
+            # full reproduction provenance: the row's number can be
+            # re-measured from this dict alone (ExperimentSpec.from_dict)
+            "spec": spec_of("legacy" if ec is None else "cohort",
+                            ec).to_dict(),
         })
     pipeline_rows = bench_engine_pipeline(tiny=tiny)
-    _write_bench_engine(rows, pipeline_rows)
+    sweep_section = bench_sweep_amortization(tiny=tiny)
+    _write_bench_engine(rows, pipeline_rows, sweep_section)
     return _write("engine_throughput", rows)
 
 
@@ -444,16 +455,117 @@ def bench_engine_pipeline(num_clients=32, updates=96, seed=0, window=120.0,
             "host_syncs_between_evals": stats["host_syncs_between_evals"],
             "blocking_submits": stats["blocking_submits"],
             "drain_waits": stats["drain_waits"],
+            "spec": _pipeline_spec(cfg, updates, ec).to_dict(),
         })
     _write("engine_pipeline", rows)
     return rows
 
 
-def _write_bench_engine(rows, pipeline_rows=None):
+def _pipeline_spec(cfg, updates, ec):
+    from repro.api import ExperimentSpec
+    return ExperimentSpec.from_legacy(
+        "fedasync", cfg, max_updates=updates, alpha=0.4,
+        eval_every=10 ** 9, engine="cohort", engine_cfg=ec)
+
+
+# ---------------------------------------------------------------------------
+# Session sweep amortization: cold per-run rebuilds vs one warm Session
+# over the paper's 4-point sigma grid
+# ---------------------------------------------------------------------------
+
+def bench_sweep_amortization(sigmas=(0.5, 1.0, 1.5, 2.0), num_clients=8,
+                             updates=24, seed=0, window=45.0, tiny=False):
+    """The Session acceptance pair: the paper's sigma grid (Table 3's
+    noise axis) run
+
+      * cold — one ``run_experiment`` call per sigma with the compiled-
+        step cache invalidated before each point: what a fresh process
+        per scenario pays (full testbed rebuild, device re-upload, XLA
+        re-trace);
+      * warm — ONE ``Session.sweep`` over the same grid: partitions
+        generated once, and — because the compiled cohort step takes the
+        noise scale as a runtime argument — every sigma replays the same
+        compiled program (``cohort_step.step_builds`` counts 1 vs 4).
+
+    Returns the ``sweep`` section for BENCH_engine.json:
+    per-point wall clocks, the cold/warm step-build counts, the wall-
+    clock speedup, and the base spec + axes as full provenance
+    (``summarize.py --check-engine`` requires the section and that the
+    warm pass both builds fewer programs and finishes faster)."""
+    import time as _time
+
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    from repro.engine import EngineConfig, cohort_step, invalidate_step_cache
+    from repro.models.ser_cnn import SERConfig
+
+    if tiny:
+        num_clients = min(num_clients, 4)
+        updates = min(updates, 8)
+    dims = dict(time_frames=12, n_mels=12)
+    cfg = TestbedConfig(
+        use_dp=True, sigma=sigmas[0], batch_size=16,
+        num_clients=num_clients,
+        data=SERDataConfig(n_total=36 * num_clients, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims),
+        seed=seed)
+    ec = EngineConfig(staleness_window=window)
+    base = ExperimentSpec(
+        testbed=cfg, strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=updates, eval_every=10 ** 9), engine=ec)
+    axes = {"testbed.sigma": list(sigmas)}
+
+    # cold: fresh-process simulation per point — invalidate the compiled
+    # programs and rebuild the world through the legacy one-shot frontend
+    cold_points, b0 = [], cohort_step.step_builds()
+    t_cold = 0.0
+    for sg in sigmas:
+        invalidate_step_cache()
+        t0 = _time.perf_counter()
+        run_experiment("fedasync", replace(cfg, sigma=sg),
+                       max_updates=updates, alpha=0.4, eval_every=10 ** 9,
+                       engine_cfg=ec)
+        dt = _time.perf_counter() - t0
+        t_cold += dt
+        cold_points.append({"sigma": sg, "wall_s": round(dt, 3)})
+    cold_builds = cohort_step.step_builds() - b0
+
+    # warm: one Session, same grid
+    invalidate_step_cache()
+    sess = Session()
+    b1 = cohort_step.step_builds()
+    t0 = _time.perf_counter()
+    result = sess.sweep(base, axes=axes)
+    t_warm = _time.perf_counter() - t0
+    warm_builds = cohort_step.step_builds() - b1
+
+    section = {
+        "sigmas": list(sigmas),
+        "num_clients": num_clients,
+        "updates": updates,
+        "cold_wall_s": round(t_cold, 3),
+        "warm_wall_s": round(t_warm, 3),
+        "speedup": round(t_cold / t_warm, 2),
+        "cold_step_builds": int(cold_builds),
+        "warm_step_builds": int(warm_builds),
+        "cold_points": cold_points,
+        "warm_points": [
+            {"sigma": p["testbed.sigma"], "wall_s": round(w, 3)}
+            for p, w in zip(result.points, result.wall_s)],
+        "session_stats": sess.stats(),
+        "spec": base.to_dict(),
+        "axes": axes,
+    }
+    _write("sweep_amortization", [section])
+    return section
+
+
+def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None):
     """The machine-readable perf trajectory: BENCH_engine.json at the repo
     root (schema checked by ``benchmarks/summarize.py --check-engine``).
     ``pipeline_rows`` (multi-device runs) land under the ``pipeline``
-    section — the serial-vs-pipelined scheduler comparison."""
+    section — the serial-vs-pipelined scheduler comparison — and
+    ``sweep_section`` (bench_sweep_amortization) under ``sweep`` — the
+    cold-per-run vs warm-Session comparison."""
     import jax
 
     out = {
@@ -463,6 +575,8 @@ def _write_bench_engine(rows, pipeline_rows=None):
     }
     if pipeline_rows:
         out["pipeline"] = {"rows": pipeline_rows}
+    if sweep_section:
+        out["sweep"] = sweep_section
     fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(fn, "w") as f:
         json.dump(out, f, indent=1, default=float)

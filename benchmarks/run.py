@@ -59,6 +59,55 @@ def kernel_microbench():
     _line("kernel.ssd_intra.c4q64", round(us), "interpret")
 
 
+def sweep_smoke() -> None:
+    """A tiny 2x2 ``Session.sweep`` — {fedavg, fedasync} x two sigmas —
+    through the declarative API, sharded over the mesh when more than one
+    device exists (CI's engine-mesh job forces 8 host devices).  Prints
+    one CSV line per scenario plus the session's cache telemetry; any
+    scenario failing to train is a hard error."""
+    import jax
+
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    from repro.core.testbed import TestbedConfig
+    from repro.data.synthetic_ser import SERDataConfig
+    from repro.engine import EngineConfig, cohort_mesh
+    from repro.models.ser_cnn import SERConfig
+
+    n_clients = 8
+    dims = dict(time_frames=12, n_mels=12)
+    multi = len(jax.devices()) > 1
+    if multi:
+        mesh = cohort_mesh(max_cohort=n_clients)
+        ec = EngineConfig(staleness_window=45.0,
+                          max_cohort=mesh.shape["data"],
+                          client_axis="vmap", mesh=mesh)
+    else:
+        ec = EngineConfig(staleness_window=45.0)
+    spec = ExperimentSpec(
+        testbed=TestbedConfig(
+            use_dp=True, sigma=0.5, batch_size=16, num_clients=n_clients,
+            data=SERDataConfig(n_total=36 * n_clients, **dims),
+            model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims)),
+        strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(rounds=2, max_updates=8, eval_every=4),
+        engine=ec)
+    t0 = time.time()
+    result = Session().sweep(spec, axes={
+        "strategy": [StrategySpec("fedavg"),
+                     StrategySpec("fedasync", alpha=0.4)],
+        "testbed.sigma": [0.5, 2.0],
+    })
+    for row in result.table():
+        if row["final_acc"] is None:
+            raise SystemExit(f"sweep-smoke scenario produced no eval: {row}")
+        _line(f"sweep.smoke.{row['strategy']}.s{row['sigma']:g}",
+              round(row["wall_s"] * 1e6),
+              f"acc={row['final_acc']};eps={row['max_eps']}"
+              + (";mesh" if multi else ""))
+    _line("sweep.smoke", round((time.time() - t0) * 1e6),
+          f"points={len(result)};mesh={multi}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -69,9 +118,19 @@ def main() -> None:
                     help="tiny bench_engine_throughput pass only: emits "
                          "BENCH_engine.json for summarize.py --check-engine "
                          "(CI's engine-mesh bench-smoke step)")
+    ap.add_argument("--sweep-smoke", action="store_true",
+                    help="tiny 2x2 Session.sweep (strategy x sigma) — "
+                         "exercises the declarative API end to end on "
+                         "whatever devices exist (CI's engine-mesh "
+                         "sweep-smoke step runs it on the forced-8-device "
+                         "mesh)")
     args = ap.parse_args()
 
     from benchmarks import fl_benchmarks as flb
+
+    if args.sweep_smoke:
+        sweep_smoke()
+        return
 
     if args.engine_smoke:
         t0 = time.time()
@@ -90,11 +149,17 @@ def main() -> None:
         bench_fn = os.path.join(os.path.dirname(flb.__file__), "..",
                                 "BENCH_engine.json")
         with open(bench_fn) as f:
-            pipe = json.load(f).get("pipeline", {}).get("rows", [])
+            bench = json.load(f)
+        pipe = bench.get("pipeline", {}).get("rows", [])
         if pipe:
             _line("engine.pipeline.smoke", None,
                   ";".join(f"{r['engine']}:{r['speedup_vs_serial']}x"
                            for r in pipe))
+        sw = bench.get("sweep")
+        if sw:
+            _line("engine.sweep.smoke", None,
+                  f"warm:{sw['speedup']}x;builds:{sw['warm_step_builds']}"
+                  f"/{sw['cold_step_builds']}")
         return
 
     def run_or_cache(name, fn):

@@ -17,10 +17,12 @@ BENCH = os.path.join(os.path.dirname(__file__), "../results/bench")
 BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "../BENCH_engine.json")
 
 # every row bench_engine_throughput emits must carry these keys (values
-# may be null for the legacy row)
+# may be null for the legacy row).  "spec" is the full
+# ExperimentSpec.to_dict() provenance — the row must be reproducible
+# from the JSON alone.
 _ENGINE_ROW_KEYS = {
     "engine", "executor", "data_path", "mesh", "wall_s", "warm_step_ms",
-    "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort",
+    "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort", "spec",
 }
 
 # the pipelined-scheduler section (bench_engine_pipeline, multi-device
@@ -28,8 +30,28 @@ _ENGINE_ROW_KEYS = {
 _PIPELINE_ROW_KEYS = {
     "engine", "pipeline_depth", "accounting", "wall_s", "warm_step_ms",
     "updates_per_s", "speedup_vs_serial", "host_syncs_between_evals",
-    "blocking_submits", "drain_waits",
+    "blocking_submits", "drain_waits", "spec",
 }
+
+# the Session sweep-amortization section (bench_sweep_amortization):
+# cold per-run rebuilds vs one warm Session over the sigma grid
+_SWEEP_KEYS = {
+    "sigmas", "cold_wall_s", "warm_wall_s", "speedup", "cold_step_builds",
+    "warm_step_builds", "spec", "axes",
+}
+
+# an ExperimentSpec provenance dict must at least nest these sub-configs
+_SPEC_KEYS = {"testbed", "strategy", "run", "engine"}
+
+
+def _check_spec(fn, where, spec):
+    if not isinstance(spec, dict) or spec.get("__type__") != "ExperimentSpec":
+        raise ValueError(
+            f"{fn}: {where} 'spec' is not an ExperimentSpec dict")
+    missing = _SPEC_KEYS - set(spec)
+    if missing:
+        raise ValueError(
+            f"{fn}: {where} spec missing sub-configs {sorted(missing)}")
 
 
 def _load(name):
@@ -57,6 +79,7 @@ def load_engine_bench(path=None):
         missing = _ENGINE_ROW_KEYS - set(r)
         if missing:
             raise ValueError(f"{fn}: row {i} missing keys {sorted(missing)}")
+        _check_spec(fn, f"row {i}", r["spec"])
     pipe = data.get("pipeline")
     if pipe is None:
         if data.get("devices", 1) > 1:
@@ -73,6 +96,7 @@ def load_engine_bench(path=None):
             if missing:
                 raise ValueError(
                     f"{fn}: pipeline row {i} missing keys {sorted(missing)}")
+            _check_spec(fn, f"pipeline row {i}", r["spec"])
         names = {r["engine"] for r in prows}
         if not {"serial", "pipelined"} <= names:
             raise ValueError(
@@ -90,6 +114,27 @@ def load_engine_bench(path=None):
                     "boundaries — the serial driver's donation-blocked "
                     "submits must be counted (one per cohort), otherwise "
                     "the pipelined row's 0 is vacuous")
+    sweep = data.get("sweep")
+    if sweep is None:
+        raise ValueError(
+            f"{fn}: missing the 'sweep' section (cold-per-run vs warm "
+            "Session over the sigma grid — run "
+            "benchmarks.fl_benchmarks.bench_sweep_amortization)")
+    missing = _SWEEP_KEYS - set(sweep)
+    if missing:
+        raise ValueError(
+            f"{fn}: sweep section missing keys {sorted(missing)}")
+    _check_spec(fn, "sweep section", sweep["spec"])
+    if sweep["warm_step_builds"] >= sweep["cold_step_builds"]:
+        raise ValueError(
+            f"{fn}: warm Session sweep built {sweep['warm_step_builds']} "
+            f"step programs vs {sweep['cold_step_builds']} cold — the "
+            "sigma grid must share compiled steps (the runtime noise-"
+            "scale argument)")
+    if sweep["speedup"] <= 1.0:
+        raise ValueError(
+            f"{fn}: warm Session sweep is not faster than cold per-run "
+            f"rebuilds (speedup {sweep['speedup']}x must be > 1)")
     return data
 
 
@@ -114,6 +159,13 @@ def summarize_engine(out):
             f"wall {r['wall_s']}s, warm step {r['warm_step_ms']}ms, "
             f"syncs-between-evals {r['host_syncs_between_evals']}, "
             f"blocking submits {r['blocking_submits']}")
+    sw = data.get("sweep")
+    if sw:
+        out.append(
+            f"sweep[{data['devices']}dev] sigma grid {sw['sigmas']}: "
+            f"warm Session {sw['warm_wall_s']}s vs cold per-run "
+            f"{sw['cold_wall_s']}s ({sw['speedup']}x), step builds "
+            f"{sw['warm_step_builds']} vs {sw['cold_step_builds']}")
 
 
 def main():
@@ -204,7 +256,10 @@ if __name__ == "__main__":
             print(f"BENCH_engine.json check FAILED: {e}")
             sys.exit(1)
         n_pipe = len(data.get("pipeline", {}).get("rows", []))
+        sw = data["sweep"]
         print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
-              f"{n_pipe} pipeline rows, {data['devices']} device(s)")
+              f"{n_pipe} pipeline rows, sweep {sw['speedup']}x "
+              f"({sw['warm_step_builds']}/{sw['cold_step_builds']} builds), "
+              f"{data['devices']} device(s)")
         sys.exit(0)
     main()

@@ -1,0 +1,80 @@
+"""Declarative experiment API: ``ExperimentSpec`` + ``Session``.
+
+The paper's contribution is a GRID of scenarios — {FedAvg, FedAsync ±
+staleness, FedBuff, AdaptiveAsync} x sigma {0.5, 1, 1.5, 2} x device
+tiers.  This package is the experiment-facing entry point for driving
+that grid: a fully-typed, serializable spec per scenario, and a session
+that keeps the expensive state (datasets, device arenas, compiled steps)
+warm across the runs of a sweep.
+
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    from repro.core.testbed import TestbedConfig
+
+    spec = ExperimentSpec(
+        testbed=TestbedConfig(sigma=1.0, batch_size=64),
+        strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=300, eval_every=5, target_acc=0.75),
+    )
+    session = Session()
+    params, log = session.run(spec)
+    result = session.sweep(spec, axes={"testbed.sigma": [0.5, 1, 1.5, 2]})
+    for row in result.table():
+        print(row)
+
+Migration from the legacy keyword frontends (which remain as thin shims
+with their exact historical signatures and bit-identical results):
+
+    old (still works)                       new
+    ------------------------------------   ---------------------------------
+    run_experiment("fedasync", cfg,         Session().run(ExperimentSpec(
+        max_updates=300, alpha=0.4,             testbed=cfg,
+        staleness_aware=True,                   strategy=StrategySpec(
+        eval_every=5,                               "fedasync", alpha=0.4,
+        engine_cfg=ec, mesh=m)                      staleness_aware=True),
+                                                run=RunBudget(
+                                                    max_updates=300,
+                                                    eval_every=5),
+                                                engine=replace(ec, mesh=m)))
+    run_experiment("fedavg", cfg,           ... strategy=StrategySpec(
+        rounds=60)                              "fedavg"),
+                                                run=RunBudget(rounds=60) ...
+    engine="legacy"                         ExperimentSpec(...,
+                                                backend="legacy")
+    for s in sigmas:                        Session().sweep(spec, axes={
+        run_experiment(..., TestbedConfig(      "testbed.sigma": sigmas})
+            sigma=s, ...))                  # datasets + compiled steps warm
+
+Strategy params are validated at SPEC construction against the registry
+in :mod:`repro.core.aggregation` (unknown names/params raise listing the
+valid options), the eval cadence is normalized once in ``RunBudget``, and
+``spec.to_dict()`` / ``ExperimentSpec.from_dict`` round-trip the whole
+configuration through JSON for benchmark/CI provenance.  The model family
+behind a testbed is pluggable through ``TestbedConfig.workload`` and
+:func:`repro.api.workloads.register_workload`.
+"""
+from repro.api.session import Session, SweepResult
+from repro.api.spec import (
+    ExperimentSpec,
+    RunBudget,
+    StrategySpec,
+    replace_path,
+)
+from repro.api.workloads import (
+    Workload,
+    get_workload,
+    register_workload,
+    workload_names,
+)
+
+__all__ = [
+    "ExperimentSpec",
+    "RunBudget",
+    "Session",
+    "StrategySpec",
+    "SweepResult",
+    "Workload",
+    "get_workload",
+    "register_workload",
+    "replace_path",
+    "workload_names",
+]

@@ -1,0 +1,248 @@
+"""The Session: long-lived execution state behind declarative experiments.
+
+``run_experiment`` rebuilt the world per call: regenerate + repartition
+the synthetic dataset, reconstruct every client, re-upload the device
+dataset arena, rebuild the cohort runner.  A :class:`Session` owns all of
+that as KEYED state and, between consecutive :class:`ExperimentSpec`\\ s,
+rebuilds only what the spec diff actually invalidates:
+
+    what changed             what is rebuilt          what stays warm
+    ---------------------    ----------------------   -------------------
+    nothing (re-run)         client state reset       everything
+    strategy / run budget    client state reset       testbed, runner +
+                                                      device arenas,
+                                                      compiled steps
+    testbed.sigma (DP)       clients (cheap), runner  dataset partitions,
+                                                      compiled steps (the
+                                                      noise scale is a
+                                                      runtime arg of the
+                                                      step — PR 5)
+    testbed.data/partition   everything below the
+                             step cache               compiled steps (per
+                                                      step-config, global)
+
+``session.sweep(spec, axes={...})`` runs the cartesian grid of a spec
+with dotted-path axes —
+
+    Session().sweep(spec, axes={"testbed.sigma": [0.5, 1.0, 1.5, 2.0],
+                                "strategy": [StrategySpec("fedavg"),
+                                             StrategySpec("fedasync",
+                                                          alpha=0.4)]})
+
+— ordering the points so consecutive runs share the longest cache prefix
+(the LAST axis varies fastest), and returns a :class:`SweepResult`: the
+per-scenario ``RunLog``\\ s plus a tidy comparison table feeding the
+paper's efficiency/fairness/privacy figures.  Runs inside one session are
+bit-identical to fresh-process runs — every client resets to its
+construction-time RNG/clock/accountant chain between runs (asserted by
+the session parity tests).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.api.spec import ExperimentSpec, StrategySpec, replace_path
+from repro.core.testbed import (
+    TestbedConfig, build_clients, build_partitions, partition_key)
+
+
+def _axis_label(value) -> object:
+    """Human-readable cell for a sweep-axis value."""
+    if isinstance(value, StrategySpec):
+        kw = ", ".join(f"{k}={v}" for k, v in value.params)
+        return f"{value.name}({kw})" if kw else value.name
+    if hasattr(value, "__dataclass_fields__"):
+        return type(value).__name__
+    return value
+
+
+@dataclass
+class SweepResult:
+    """Outcome of :meth:`Session.sweep`: parallel lists over the grid
+    points (``specs[i]`` produced ``logs[i]`` in ``wall_s[i]`` seconds;
+    ``points[i]`` maps each axis path to the value it took)."""
+
+    base: ExperimentSpec
+    axes: dict
+    points: list = field(default_factory=list)
+    specs: list = field(default_factory=list)
+    logs: list = field(default_factory=list)
+    wall_s: list = field(default_factory=list)
+
+    def __len__(self):
+        return len(self.logs)
+
+    def __iter__(self):
+        return iter(zip(self.specs, self.logs))
+
+    def table(self) -> list:
+        """One row per scenario: the axis values plus the summary metrics
+        the paper's figures are built from (efficiency: final acc /
+        time-to-target; fairness: Jain + participation skew; privacy:
+        max-eps + disparity)."""
+        rows = []
+        for point, spec, log, wall in zip(
+                self.points, self.specs, self.logs, self.wall_s):
+            fr = log.fairness()
+            eps_final = [v[-1] for v in log.eps_trajectory.values() if v]
+            target = spec.run.target_acc
+            row = {
+                "strategy": spec.strategy.name,
+                "sigma": spec.testbed.sigma,
+                "final_acc": (round(log.global_acc[-1], 4)
+                              if log.global_acc else None),
+                "time_to_target_s": (log.time_to_accuracy(target)
+                                     if target is not None else None),
+                "updates": sum(log.update_counts.values()),
+                "jain_participation": round(fr["jain_participation"], 4),
+                "accuracy_gap": round(fr["accuracy_gap"], 4),
+                "privacy_disparity": round(fr["privacy_disparity"], 2),
+                "max_eps": (round(max(eps_final), 3) if eps_final else 0.0),
+                "wall_s": round(wall, 3),
+            }
+            # axis columns LAST so they win any name collision: a
+            # StrategySpec axis point must show "fedasync(alpha=0.2)",
+            # not be clobbered down to the bare name shared by every row
+            row.update({p: _axis_label(v) for p, v in point.items()})
+            rows.append(row)
+        return rows
+
+
+class Session:
+    """Owns testbed + engine state across runs (see module docstring).
+
+    One live testbed and one live cohort runner at a time (device arenas
+    are big — a sweep should not accumulate one per scenario); dataset
+    partitions are kept per distinct data-config so alternating testbeds
+    still skip regeneration.  The compiled-step cache itself is process-
+    global (:mod:`repro.engine.cohort_step`) — the session adds the layers
+    above it."""
+
+    def __init__(self):
+        self._partitions = {}          # partition_key -> (splits, pooled)
+        self._testbed_cfg: Optional[TestbedConfig] = None
+        self._clients = None
+        self._params0 = None
+        self._acc_fn = None
+        self._pooled = None
+        self._runner = None
+        self._runner_key = None
+        self.events = Counter()        # cache telemetry (tests/bench)
+
+    # -- cache layers ------------------------------------------------------
+    def _materialize(self, tb: TestbedConfig):
+        """Clients + initial params + eval closures for ``tb``, reusing
+        cached partitions / the live testbed where the config allows."""
+        if self._testbed_cfg == tb:
+            for c in self._clients:
+                c.reset()
+            self.events["testbed_reuses"] += 1
+            return
+        pk = partition_key(tb)
+        cached = self._partitions.get(pk)
+        if cached is None:
+            cached = build_partitions(tb)
+            self._partitions[pk] = cached
+            self.events["partition_builds"] += 1
+        else:
+            self.events["partition_reuses"] += 1
+        splits, pooled = cached
+        from repro.api.workloads import get_workload
+        import jax
+        wl = get_workload(tb.workload)
+        self._clients = build_clients(tb, splits)
+        self._params0 = wl.init(jax.random.PRNGKey(tb.seed), tb.model)
+        self._acc_fn = wl.shared_accuracy(tb.model)
+        self._pooled = pooled
+        self._testbed_cfg = tb
+        self._runner = None            # built over the OLD clients
+        self._runner_key = None
+        self.events["testbed_builds"] += 1
+
+    def _get_runner(self, tb: TestbedConfig, engine_cfg):
+        from repro.engine import CohortRunner
+        key = (tb, engine_cfg)
+        if self._runner_key == key:
+            self._runner.reset_for_run()
+            self.events["runner_reuses"] += 1
+        else:
+            self._runner = CohortRunner(self._clients, engine_cfg)
+            self._runner_key = key
+            self.events["runner_builds"] += 1
+        return self._runner
+
+    # -- execution ---------------------------------------------------------
+    def run(self, spec: ExperimentSpec) -> tuple:
+        """Execute one spec; returns ``(final_params, RunLog)`` — exactly
+        what ``run_experiment`` returns (the legacy frontends are shims
+        over this)."""
+        if not isinstance(spec, ExperimentSpec):
+            raise TypeError(f"Session.run takes an ExperimentSpec: {spec!r}")
+        tb, b = spec.testbed, spec.run
+        self._materialize(tb)
+        clients, params0 = self._clients, self._params0
+        acc_fn, pooled = self._acc_fn, self._pooled
+        self.events["runs"] += 1
+        if spec.backend == "legacy":
+            if spec.engine.mesh is not None:
+                raise ValueError("mesh execution requires backend='cohort'")
+            from repro.core.server import run_async, run_fedavg
+            if spec.strategy.name == "fedavg":
+                return run_fedavg(
+                    clients, params0, acc_fn, pooled, rounds=b.rounds,
+                    seed=tb.seed, eval_every=b.eval_every,
+                    target_acc=b.target_acc, engine="legacy")
+            return run_async(
+                clients, params0, acc_fn, pooled, spec.strategy.make(),
+                max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
+                eval_every=b.eval_every, target_acc=b.target_acc,
+                engine="legacy")
+        from repro.engine import run_async_engine, run_fedavg_engine
+        runner = self._get_runner(tb, spec.engine)
+        if spec.strategy.name == "fedavg":
+            return run_fedavg_engine(
+                clients, params0, acc_fn, pooled, rounds=b.rounds,
+                seed=tb.seed, eval_every=b.eval_every,
+                target_acc=b.target_acc, runner=runner)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, spec.strategy.make(),
+            max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
+            eval_every=b.eval_every, target_acc=b.target_acc, runner=runner)
+
+    def sweep(self, spec: ExperimentSpec, axes: dict) -> SweepResult:
+        """Run the cartesian grid of ``spec`` with ``axes`` mapping dotted
+        field paths to value lists (see module docstring).  Axis order is
+        significant: the LAST axis varies fastest, so putting the
+        expensive-to-change axis first (e.g. ``testbed.data``) maximizes
+        consecutive-run reuse."""
+        if not axes:
+            raise ValueError("sweep needs at least one axis")
+        paths = list(axes)
+        values = [list(axes[p]) for p in paths]
+        for p, vs in zip(paths, values):
+            if not vs:
+                raise ValueError(f"sweep axis {p!r} has no values")
+            replace_path(spec, p, vs[0])   # fail fast on bad paths/values
+        result = SweepResult(base=spec, axes={p: list(v) for p, v in
+                                              zip(paths, values)})
+        for combo in itertools.product(*values):
+            point = dict(zip(paths, combo))
+            s = spec
+            for p, v in point.items():
+                s = replace_path(s, p, v)
+            t0 = time.perf_counter()
+            _, log = self.run(s)
+            result.points.append(point)
+            result.specs.append(s)
+            result.logs.append(log)
+            result.wall_s.append(time.perf_counter() - t0)
+        return result
+
+    def stats(self) -> dict:
+        """Cache telemetry: builds vs reuses per layer (partitions /
+        testbed / runner) plus the run count."""
+        return dict(self.events)

@@ -1,0 +1,261 @@
+"""Typed, frozen, serializable experiment specifications.
+
+An :class:`ExperimentSpec` is the complete description of one FL run —
+the paper's every figure/table point is one spec:
+
+    spec = ExperimentSpec(
+        testbed=TestbedConfig(sigma=1.0, batch_size=64),
+        strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=300, eval_every=5, target_acc=0.75),
+        engine=EngineConfig(staleness_window=45.0),
+    )
+
+Specs are value objects: frozen, hashable, comparable, and round-trip
+through plain JSON-able dicts (``spec.to_dict()`` /
+``ExperimentSpec.from_dict(d)``), so benchmark provenance rows, CI
+artifacts and ``BENCH_engine.json`` can carry the FULL configuration a
+number was produced under and reproduce it from the JSON alone.
+
+Validation happens at CONSTRUCTION, not deep inside a run:
+:class:`StrategySpec` checks its name and params against the registry in
+:mod:`repro.core.aggregation` (unknown names/params raise immediately,
+listing the valid options), and :class:`RunBudget` normalizes the eval
+cadence once (``eval_every=0`` used to reach the fedavg loop raw and
+die on ``rnd % 0``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.aggregation import make_strategy, validate_strategy_params
+from repro.core.dp import DPConfig
+from repro.core.fl_step import FLStepConfig
+from repro.core.testbed import TestbedConfig
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import EngineConfig
+from repro.models.ser_cnn import SERConfig
+
+
+@dataclass(frozen=True, init=False)
+class StrategySpec:
+    """Registry-validated aggregation strategy: ``name`` plus keyword
+    params, canonicalized to a sorted tuple so specs hash/compare by
+    value.  Replaces the old ``strategy_name``/``alpha``/
+    ``staleness_aware``/``**strategy_kw`` keyword pile — a typo'd or
+    misplaced param now fails HERE with the valid options listed, not
+    deep inside ``make_strategy`` mid-run."""
+
+    name: str
+    params: tuple                   # sorted ((key, value), ...)
+
+    def __init__(self, name: str, /, **params):
+        name = validate_strategy_params(name, params)
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "params", tuple(sorted(params.items())))
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+    def make(self):
+        """Instantiate the aggregation strategy (fresh per run — FedBuff
+        carries cross-update buffer state)."""
+        return make_strategy(self.name, **self.kwargs)
+
+    def replace(self, **params) -> "StrategySpec":
+        """A copy with the given params overriding the current ones."""
+        merged = {**self.kwargs, **params}
+        return StrategySpec(self.name, **merged)
+
+
+@dataclass(frozen=True)
+class RunBudget:
+    """How long a run goes and how often it evaluates.  FedAvg consumes
+    ``rounds``; the async strategies consume ``max_updates``/``max_time``
+    — carrying both keeps one spec valid across a strategy sweep."""
+
+    rounds: int = 60               # fedavg barrier rounds
+    max_updates: int = 300         # async: total merged updates
+    max_time: Optional[float] = None   # async: virtual-seconds cap
+    eval_every: int = 1            # rounds (fedavg) / updates (async)
+    target_acc: Optional[float] = None  # early-stop accuracy
+
+    def __post_init__(self):
+        if self.rounds < 0 or self.max_updates < 0:
+            raise ValueError(
+                f"rounds/max_updates must be >= 0: "
+                f"{self.rounds}/{self.max_updates}")
+        # THE eval-cadence validation point: every frontend routes its
+        # eval_every through here, so a 0 can no longer reach the fedavg
+        # loop raw and die on `rnd % 0` (it used to — only the async
+        # path clamped)
+        object.__setattr__(self, "eval_every", max(1, int(self.eval_every)))
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One fully-specified experiment.  ``backend`` selects the execution
+    path ("cohort" — the batched engine, default — or "legacy", the
+    per-client reference loop); everything else is typed sub-config."""
+
+    testbed: TestbedConfig = TestbedConfig()
+    strategy: StrategySpec = StrategySpec("fedasync", alpha=0.4)
+    run: RunBudget = RunBudget()
+    engine: EngineConfig = EngineConfig()
+    backend: str = "cohort"
+
+    def __post_init__(self):
+        if self.backend not in ("cohort", "legacy"):
+            raise ValueError(
+                f"backend must be 'cohort' or 'legacy': {self.backend!r}")
+        for fld, typ in (("testbed", TestbedConfig),
+                         ("strategy", StrategySpec),
+                         ("run", RunBudget),
+                         ("engine", EngineConfig)):
+            if not isinstance(getattr(self, fld), typ):
+                raise TypeError(
+                    f"ExperimentSpec.{fld} must be a {typ.__name__}: "
+                    f"{getattr(self, fld)!r}")
+
+    # -- legacy-frontend bridge -------------------------------------------
+    @classmethod
+    def from_legacy(cls, strategy_name: str, cfg: TestbedConfig = None,
+                    rounds: int = 60, max_updates: int = 300,
+                    alpha: float = 0.4, staleness_aware: bool = True,
+                    target_acc: Optional[float] = None, eval_every: int = 1,
+                    engine: str = "cohort", engine_cfg: EngineConfig = None,
+                    mesh=None, **strategy_kw) -> "ExperimentSpec":
+        """Build a spec from ``run_experiment``'s historical signature
+        (the shim calls this, so old call sites keep working verbatim)."""
+        name = str(strategy_name).lower()
+        if name == "fedavg":
+            kw = dict(strategy_kw)
+        else:
+            kw = dict(alpha=alpha)
+            if name == "fedasync":
+                kw["staleness_aware"] = staleness_aware
+            kw.update(strategy_kw)
+            if name == "fedasync_nostale":
+                # historical tolerance: the old frontend silently dropped
+                # this (the variant pins it False)
+                kw.pop("staleness_aware", None)
+        ecfg = engine_cfg or EngineConfig()
+        if mesh is not None and ecfg.mesh is None:
+            ecfg = dataclasses.replace(ecfg, mesh=mesh)
+        return cls(
+            testbed=cfg if cfg is not None else TestbedConfig(),
+            strategy=StrategySpec(name, **kw),
+            run=RunBudget(rounds=rounds, max_updates=max_updates,
+                          eval_every=eval_every, target_acc=target_acc),
+            engine=ecfg,
+            backend=engine,
+        )
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain JSON-able dict (nested configs become tagged dicts; a
+        live mesh is recorded by its axis sizes — see :func:`encode`)."""
+        return encode(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        spec = decode(d)
+        if not isinstance(spec, cls):
+            raise ValueError(f"not an ExperimentSpec dict: {d!r}")
+        return spec
+
+
+def replace_path(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
+    """Functional update through a dotted field path — the sweep-axis
+    primitive: ``replace_path(spec, "testbed.sigma", 2.0)`` or a whole
+    sub-config at once (``replace_path(spec, "strategy", StrategySpec(
+    "fedbuff", alpha=0.4))``)."""
+    head, _, rest = path.partition(".")
+    if not hasattr(spec, head):
+        raise ValueError(
+            f"{type(spec).__name__} has no field {head!r} (path {path!r})")
+    if not rest:
+        return dataclasses.replace(spec, **{head: value})
+    return dataclasses.replace(
+        spec, **{head: replace_path(getattr(spec, head), rest, value)})
+
+
+# ---------------------------------------------------------------------------
+# dict codec: tagged encoding for the closed set of spec-carrying types
+# ---------------------------------------------------------------------------
+
+_SPEC_TYPES = {cls.__name__: cls for cls in (
+    ExperimentSpec, StrategySpec, RunBudget, TestbedConfig, SERDataConfig,
+    SERConfig, EngineConfig, DPConfig, FLStepConfig)}
+
+
+def _is_mesh(obj) -> bool:
+    return (obj.__class__.__module__.startswith("jax")
+            and obj.__class__.__name__ == "Mesh")
+
+
+def encode(obj):
+    """Recursively encode a spec object to JSON-able data.  Dataclasses
+    from the closed spec-type set become ``{"__type__": name, ...}``
+    dicts; a jax mesh is recorded as its axis sizes (``{"__mesh__":
+    {"data": 8, "model": 1}}`` — :func:`decode` rebuilds a host mesh of
+    that shape over the CURRENT process's devices, the only meaningful
+    cross-process reading of a device handle)."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, StrategySpec):
+        return {"__type__": "StrategySpec", "name": obj.name,
+                "params": {k: encode(v) for k, v in obj.params}}
+    if dataclasses.is_dataclass(obj) and type(obj).__name__ in _SPEC_TYPES:
+        out = {"__type__": type(obj).__name__}
+        for f in dataclasses.fields(obj):
+            out[f.name] = encode(getattr(obj, f.name))
+        return out
+    if _is_mesh(obj):
+        return {"__mesh__": {str(a): int(s)
+                             for a, s in dict(obj.shape).items()}}
+    if isinstance(obj, (tuple, list)):
+        return [encode(v) for v in obj]
+    if hasattr(obj, "item") and getattr(obj, "shape", None) == ():
+        return obj.item()          # numpy/jax scalar
+    raise ValueError(
+        f"cannot encode {type(obj).__name__!r} into a spec dict: {obj!r}")
+
+
+def decode(d):
+    """Inverse of :func:`encode`."""
+    if isinstance(d, list):
+        return [decode(v) for v in d]
+    if not isinstance(d, dict):
+        return d
+    if "__mesh__" in d:
+        from repro.launch.mesh import make_host_mesh
+        axes = d["__mesh__"]
+        extra = set(axes) - {"data", "model"}
+        if extra:
+            raise ValueError(
+                f"cannot rebuild a mesh with axes {sorted(extra)} — only "
+                "host meshes over (data, model) round-trip")
+        return make_host_mesh(data=int(axes.get("data", 1)),
+                              model=int(axes.get("model", 1)))
+    tag = d.get("__type__")
+    if tag is None:
+        return {k: decode(v) for k, v in d.items()}
+    if tag == "StrategySpec":
+        return StrategySpec(d["name"], **{k: decode(v)
+                                          for k, v in d["params"].items()})
+    cls = _SPEC_TYPES.get(tag)
+    if cls is None:
+        raise ValueError(f"unknown spec type tag {tag!r}")
+    kw = {}
+    for f in dataclasses.fields(cls):
+        if f.name in d:
+            v = decode(d[f.name])
+            # JSON turns tuples into lists; restore for tuple-typed fields
+            if isinstance(v, list) and isinstance(
+                    getattr(cls, f.name, None), tuple):
+                v = tuple(v)
+            kw[f.name] = v
+    return cls(**kw)

@@ -17,7 +17,8 @@ EXPERIMENTS.md):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
+from functools import partial
 from typing import Optional
 
 import jax.numpy as jnp
@@ -150,17 +151,67 @@ def apply_update(strategy, global_params, params_k, tau: int,
     return new_g, 1, w
 
 
+# ---------------------------------------------------------------------------
+# strategy registry: the ONE name -> (constructor, tunable params) table.
+# repro.api.StrategySpec validates against it at construction time and
+# make_strategy resolves through it, so a name/param can't be accepted by
+# one layer and rejected deep inside the other.
+# ---------------------------------------------------------------------------
+
+def _tunable_params(cls, exclude=()) -> tuple:
+    """The constructor params a user may set: init-able dataclass fields
+    minus the identity fields (name/is_async) and private state."""
+    skip = {"name", "is_async"} | set(exclude)
+    return tuple(f.name for f in fields(cls)
+                 if f.init and f.name not in skip
+                 and not f.name.startswith("_"))
+
+
+# name -> (zero-arg-or-kw constructor, allowed keyword params).
+# fedasync_nostale pins staleness_aware=False (the paper's Fig. 4
+# "without staleness control" variant), so that knob is not tunable there.
+STRATEGIES = {
+    "fedavg": (FedAvg, ()),
+    "fedasync": (FedAsync, _tunable_params(FedAsync)),
+    "fedasync_nostale": (
+        partial(FedAsync, staleness_aware=False),
+        _tunable_params(FedAsync, exclude=("staleness_aware",))),
+    "fedbuff": (FedBuff, _tunable_params(FedBuff)),
+    "adaptive_async": (AdaptiveAsync, _tunable_params(AdaptiveAsync)),
+}
+
+STRATEGY_NAMES = tuple(STRATEGIES)
+
+
+def strategy_params(name: str) -> tuple:
+    """Valid keyword params for ``name`` (raises on unknown names, listing
+    the registry)."""
+    try:
+        return STRATEGIES[name.lower()][1]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation strategy: {name!r} "
+            f"(valid: {', '.join(sorted(STRATEGIES))})") from None
+
+
+def validate_strategy_params(name: str, kw: dict) -> str:
+    """Check ``kw`` against the registry (raising with the valid options
+    listed) and return the normalized name — the ONE validation shared by
+    :func:`make_strategy` and ``repro.api.StrategySpec``, so a spec can
+    never accept what the constructor would reject (or vice versa)."""
+    name = str(name).lower()
+    allowed = strategy_params(name)
+    unknown = sorted(set(kw) - set(allowed))
+    if unknown:
+        raise ValueError(
+            f"unknown param(s) {', '.join(unknown)} for strategy "
+            f"{name!r} (valid: {', '.join(allowed) or 'none'})")
+    return name
+
+
 def make_strategy(name: str, **kw):
-    name = name.lower()
-    if name == "fedavg":
-        return FedAvg()
-    if name == "fedasync":
-        return FedAsync(**kw)
+    name = str(name).lower()
     if name == "fedasync_nostale":
-        kw.pop("staleness_aware", None)
-        return FedAsync(staleness_aware=False, **kw)
-    if name == "fedbuff":
-        return FedBuff(**kw)
-    if name == "adaptive_async":
-        return AdaptiveAsync(**kw)
-    raise ValueError(f"unknown aggregation strategy: {name}")
+        kw.pop("staleness_aware", None)  # historical frontend tolerance
+    name = validate_strategy_params(name, kw)
+    return STRATEGIES[name][0](**kw)

@@ -79,6 +79,20 @@ class Client:
         self.accountant = MomentsAccountant()
         self.rng = np.random.default_rng(self.seed * 131 + self.cid)
 
+    def reset(self):
+        """Restore construction-time state (clock/accountant/RNG chain,
+        optimizer state, version bookkeeping) so a long-lived testbed can
+        be reused across runs: ``repro.api.Session`` resets every client
+        between scenario runs, and a reset run is bit-identical to one on
+        a freshly built testbed (the session parity tests assert it).  The
+        dataset partition and training config are untouched."""
+        self.__post_init__()
+        self.opt_state = None
+        self.model_version = 0
+        self.update_count = 0
+        self.staleness_history = []
+        self._personal = None
+
     @property
     def n_train(self) -> int:
         return int(self.data["y"].shape[0])

@@ -58,9 +58,13 @@ def clip_tree(grads, clip_norm: float):
     return tree_scale(grads, scale), nrm
 
 
-def noise_tree(key, grads, stddev: float):
-    """Add iid Gaussian noise of the given stddev to every leaf."""
-    if stddev == 0.0:
+def noise_tree(key, grads, stddev):
+    """Add iid Gaussian noise of the given stddev to every leaf.
+
+    ``stddev`` may be a traced scalar (the cohort engine passes the noise
+    scale as a runtime argument so one compiled program serves a whole
+    sigma sweep); the zero short-circuit only applies to concrete floats."""
+    if isinstance(stddev, (int, float)) and stddev == 0.0:
         return grads
     noise = tree_gaussian_like(key, grads, stddev)
     return jax.tree_util.tree_map(jnp.add, grads, noise)
@@ -84,9 +88,16 @@ def dp_mean_gradient(
     key: jax.Array,
     cfg: DPConfig,
     use_kernel: bool = False,
+    noise_stddev=None,
 ):
     """Per-example DP-SGD gradient (Eq. 4-6): clip each sample's grad to C,
     average, add N(0, (sigma*C/B)^2) to the mean.
+
+    ``noise_stddev`` overrides the statically derived
+    ``sigma * C / B`` with a (possibly traced) runtime scalar: the cohort
+    engine computes the stddev on the host once per runner and feeds it as
+    a program ARGUMENT, so one compiled step serves every noise multiplier
+    of a sigma sweep instead of re-tracing per sigma.
 
     Returns (noised_mean_grad, aux) where aux carries the mean pre-clip
     norm (useful for calibrating C) and the fraction of clipped samples.
@@ -124,7 +135,8 @@ def dp_mean_gradient(
         nrm = jnp.mean(norms)
         frac = jnp.mean((norms > cfg.clip_norm).astype(jnp.float32))
 
-    stddev = cfg.noise_multiplier * cfg.clip_norm / bsz
+    stddev = (cfg.noise_multiplier * cfg.clip_norm / bsz
+              if noise_stddev is None else noise_stddev)
     noised = noise_tree(key, mean, stddev)
     return noised, {"mean_grad_norm": nrm, "clip_fraction": frac}
 

@@ -33,6 +33,16 @@ from repro.core.runlog import RunLog, eval_all
 _eval_all = eval_all
 
 
+def _normalize_eval_every(eval_every: int) -> int:
+    """Route the eval cadence through the ONE validation point
+    (``repro.api.spec.RunBudget``): ``eval_every=0`` used to reach the
+    fedavg loop raw and die on ``rnd % 0`` while the async frontend
+    clamped it — both frontends now share the RunBudget normalization.
+    Imported lazily: repro.api sits above this module."""
+    from repro.api.spec import RunBudget
+    return RunBudget(eval_every=eval_every).eval_every
+
+
 def run_fedavg(
     clients: list,
     global_params,
@@ -50,6 +60,7 @@ def run_fedavg(
 
     ``mesh`` (a ``launch.mesh`` mesh) partitions the cohort engine's
     client axis over the mesh's data axes — cohort-engine only."""
+    eval_every = _normalize_eval_every(eval_every)
     if engine == "cohort":
         from repro.engine import run_fedavg_engine
         return run_fedavg_engine(
@@ -91,6 +102,7 @@ def run_async(
     ``mesh`` partitions the cohort engine's client axis over the mesh's
     data axes — cohort-engine only.
     """
+    eval_every = _normalize_eval_every(eval_every)
     if engine == "cohort":
         from repro.engine import run_async_engine
         return run_async_engine(

@@ -1,23 +1,40 @@
-"""Wires the full paper testbed: synthetic CREMA-D + 5 heterogeneous
-clients (HW_T1..T5) + SER CNN + DP-SGD + server loops.
+"""Wires the full paper testbed: synthetic CREMA-D + heterogeneous
+clients (HW_T1..T5) + a registry-selected workload model + DP-SGD +
+server loops.
 
-This is the entry point the benchmarks and examples use; every paper
-figure/table is a function of (strategy, alpha, sigma, rounds, seed).
+Every paper figure/table is a function of (strategy, alpha, sigma,
+rounds, seed).  The preferred frontend is the declarative API in
+:mod:`repro.api` (``ExperimentSpec`` + ``Session`` — scenario sweeps
+reuse datasets, device arenas and compiled steps across runs);
+:func:`run_experiment` remains as a thin shim over it with its exact
+historical signature.
+
+The build is split into cache-friendly layers the Session keys on:
+
+  * :func:`build_partitions` — generate + partition + split the dataset
+    (pure numpy, the expensive host work; keyed by
+    :func:`partition_key`);
+  * :func:`build_clients`    — wrap partitions in ``Client`` objects
+    (cheap; depends on the full config: DP, optimizer, batch size);
+  * :func:`build_testbed`    — both plus the workload's initial params
+    and eval closure (the historical one-shot entry point).
+
+The model family is pluggable: ``TestbedConfig.workload`` names an entry
+in :mod:`repro.api.workloads` (``"ser_cnn"`` — the paper's CNN — by
+default), whose memoized loss/accuracy closures keep jitted steps shared
+across repeated builds.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from functools import lru_cache, partial
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import numpy as np
 
-from repro.core.aggregation import make_strategy
 from repro.core.client import Client
 from repro.core.dp import DPConfig
 from repro.core.heterogeneity import PROFILES, TIERS
-from repro.core.server import run_async, run_fedavg
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic_ser import SERDataConfig, generate, train_test_split
 from repro.models import ser_cnn
@@ -42,46 +59,56 @@ class TestbedConfig:
     seed: int = 0
     data: SERDataConfig = SERDataConfig()
     model: ser_cnn.SERConfig = ser_cnn.SERConfig()
+    workload: str = "ser_cnn"      # repro.api.workloads registry entry
 
 
-@lru_cache(maxsize=None)
-def _shared_loss_fn(model_cfg):
-    """One loss closure per model config: jitted steps key on the loss
-    object (static arg / engine step cache), so sharing it across
-    testbeds lets repeated runs reuse compiled programs instead of
-    re-tracing per build_testbed call."""
-    return partial(ser_cnn.loss_fn, cfg=model_cfg)
+def partition_key(cfg: TestbedConfig) -> tuple:
+    """The fields :func:`build_partitions` actually depends on — sweeps
+    that only touch anything else (sigma, strategy, engine, batch size,
+    workload) reuse the generated partitions."""
+    return (cfg.data, cfg.partition, cfg.dirichlet_alpha,
+            cfg.num_clients, cfg.seed)
 
 
-@lru_cache(maxsize=None)
-def _shared_accuracy_fn(model_cfg):
-    return ser_cnn.make_accuracy_fn(model_cfg)
-
-
-def build_testbed(cfg: TestbedConfig):
-    """Returns (clients, global_params, accuracy_fn, pooled_test)."""
+def build_partitions(cfg: TestbedConfig):
+    """Generate the synthetic corpus, partition it across clients and
+    train/test-split each share.  Returns ``(splits, pooled_test)`` where
+    ``splits[cid] = (train, test)`` dicts (speaker column dropped)."""
     raw = generate(cfg.data)
     if cfg.partition == "dirichlet":
         parts = dirichlet_partition(raw, cfg.num_clients,
                                     alpha=cfg.dirichlet_alpha, seed=cfg.seed)
     else:
         parts = iid_partition(raw, cfg.num_clients, seed=cfg.seed)
+    splits, test_pool = [], []
+    for cid, part in enumerate(parts):
+        tr, te = train_test_split(part, test_frac=0.2, seed=cfg.seed + cid)
+        tr = {k: v for k, v in tr.items() if k != "speaker"}
+        te = {k: v for k, v in te.items() if k != "speaker"}
+        splits.append((tr, te))
+        test_pool.append(te)
+    pooled_test = {
+        k: np.concatenate([t[k] for t in test_pool]) for k in test_pool[0]
+    }
+    return splits, pooled_test
 
-    loss = _shared_loss_fn(cfg.model)
-    acc_fn = _shared_accuracy_fn(cfg.model)
+
+def build_clients(cfg: TestbedConfig, splits) -> list:
+    """Wrap pre-built partitions in Client objects (tier cycling for >5
+    clients; the workload's shared loss closure keeps jitted steps
+    common across builds)."""
+    from repro.api.workloads import get_workload
+    wl = get_workload(cfg.workload)
+    loss = wl.shared_loss(cfg.model)
     opt = Adam(lr=cfg.lr)
     dp_cfg = DPConfig(
         clip_norm=cfg.clip_norm,
         noise_multiplier=cfg.sigma if cfg.use_dp else 0.0,
         granularity="per_example",
     )
-
-    clients, test_pool = [], []
-    for cid, part in enumerate(parts):
+    clients = []
+    for cid, (tr, te) in enumerate(splits):
         tier = TIERS[cid % len(TIERS)]  # >5 clients: cycle the tiers
-        tr, te = train_test_split(part, test_frac=0.2, seed=cfg.seed + cid)
-        tr = {k: v for k, v in tr.items() if k != "speaker"}
-        te = {k: v for k, v in te.items() if k != "speaker"}
         clients.append(
             Client(
                 cid=cid,
@@ -100,12 +127,17 @@ def build_testbed(cfg: TestbedConfig):
                 personal_keys=("out",) if cfg.personalized else (),
             )
         )
-        test_pool.append(te)
+    return clients
 
-    pooled_test = {
-        k: np.concatenate([t[k] for t in test_pool]) for k in test_pool[0]
-    }
-    params = ser_cnn.init(jax.random.PRNGKey(cfg.seed), cfg.model)
+
+def build_testbed(cfg: TestbedConfig):
+    """Returns (clients, global_params, accuracy_fn, pooled_test)."""
+    from repro.api.workloads import get_workload
+    wl = get_workload(cfg.workload)
+    splits, pooled_test = build_partitions(cfg)
+    clients = build_clients(cfg, splits)
+    acc_fn = wl.shared_accuracy(cfg.model)
+    params = wl.init(jax.random.PRNGKey(cfg.seed), cfg.model)
     return clients, params, acc_fn, pooled_test
 
 
@@ -125,34 +157,24 @@ def run_experiment(
 ):
     """One full FL run; returns (params, RunLog).
 
-    ``engine`` selects the execution path: "cohort" (the batched engine in
-    repro.engine, default) or "legacy" (the per-client reference loop).
-    ``mesh`` (cohort engine only) partitions the cohort client axis over
-    the mesh's data axes — pair it with
+    Thin shim over the declarative API: the arguments are folded into an
+    :class:`repro.api.ExperimentSpec` (strategy name/params validated at
+    construction) and executed by a fresh one-run
+    :class:`repro.api.Session` — bit-identical to calling the API
+    directly (the shim-parity tests assert it).  For scenario SWEEPS use
+    a shared Session, which keeps datasets, device arenas and compiled
+    steps warm across the points instead of rebuilding per call.
+
+    ``engine`` selects the execution path: "cohort" (the batched engine
+    in repro.engine, default) or "legacy" (the per-client reference
+    loop).  ``mesh`` (cohort engine only) partitions the cohort client
+    axis over the mesh's data axes — pair it with
     ``engine_cfg=EngineConfig(client_axis="vmap" or "fl_step", ...)``.
-    The cohort engine runs the device-resident arena data path by default
-    (datasets upload once, cohorts assemble on device from int32 index
-    plans, padded so they always partition on a mesh);
-    ``EngineConfig(device_arena=False)`` selects the host-fed baseline.
     """
-    clients, params, acc_fn, pooled_test = build_testbed(cfg)
-    if strategy_name == "fedavg":
-        return run_fedavg(
-            clients, params, acc_fn, pooled_test,
-            rounds=rounds, seed=cfg.seed, target_acc=target_acc,
-            eval_every=eval_every, engine=engine, engine_cfg=engine_cfg,
-            mesh=mesh,
-        )
-    if strategy_name in ("fedasync", "fedasync_nostale", "fedbuff", "adaptive_async"):
-        kw = dict(alpha=alpha)
-        if strategy_name == "fedasync":
-            kw["staleness_aware"] = staleness_aware
-        kw.update(strategy_kw)
-        strat = make_strategy(strategy_name, **kw)
-        return run_async(
-            clients, params, acc_fn, pooled_test, strat,
-            max_updates=max_updates, seed=cfg.seed, target_acc=target_acc,
-            eval_every=max(1, eval_every), engine=engine,
-            engine_cfg=engine_cfg, mesh=mesh,
-        )
-    raise ValueError(strategy_name)
+    from repro.api import ExperimentSpec, Session
+    spec = ExperimentSpec.from_legacy(
+        strategy_name, cfg, rounds=rounds, max_updates=max_updates,
+        alpha=alpha, staleness_aware=staleness_aware, target_acc=target_acc,
+        eval_every=eval_every, engine=engine, engine_cfg=engine_cfg,
+        mesh=mesh, **strategy_kw)
+    return Session().run(spec)

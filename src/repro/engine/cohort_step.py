@@ -62,6 +62,7 @@ per-step dispatch = 377 ms per local round):
 from __future__ import annotations
 
 import functools
+from dataclasses import replace
 from typing import Callable, Optional
 
 import jax
@@ -72,6 +73,19 @@ from repro.core.dp import DPConfig, dp_mean_gradient
 # flat-unroll the local-step loop up to this length; beyond it, fall back
 # to a rolled scan to keep compile times bounded
 _MAX_FULL_UNROLL = 16
+
+# programs built since process start (make_cohort_step invocations): the
+# observable cache-miss counter behind the Session sweep-amortization
+# acceptance test/bench — a warm sigma sweep must NOT grow it per point
+_STEP_BUILDS = 0
+
+
+def step_builds() -> int:
+    """How many cohort-step programs have been BUILT (cache misses at the
+    make_cohort_step level; each build implies a fresh XLA trace+compile
+    on first call).  ``benchmarks.fl_benchmarks.bench_sweep_amortization``
+    reports the cold-vs-warm delta of this counter."""
+    return _STEP_BUILDS
 
 # the one place the executor set is defined: make_cohort_step and
 # EngineConfig both validate against it (they used to disagree on the
@@ -112,7 +126,8 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                      use_dp: bool = True, use_kernel: bool = False,
                      client_axis: str = "unroll", client_shardings=None,
                      fl_cfg=None, arena: bool = False,
-                     donate_globals: bool = False, donate: bool = True):
+                     donate_globals: bool = False, donate: bool = True,
+                     add_noise: bool = True):
     """Build the jitted cohort program.
 
     Returns ``(cohort_step, merge_cohort)``.  With ``arena=False`` (the
@@ -171,6 +186,23 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     ``fl_cfg`` (an ``FLStepConfig``) is required by the ``"fl_step"``
     executor and ignored by the others.
 
+    Both data-path variants take a trailing ``noise_stddev`` argument — a
+    runtime float32 scalar carrying the DP noise scale ``sigma * C / B``
+    (computed ON THE HOST by the runner so it rounds to the same float32
+    the statically-folded legacy constant does).  ``dp_cfg``'s own
+    ``noise_multiplier`` is therefore IGNORED by the built program, and
+    :func:`cached_cohort_step` strips it from the cache key: every point
+    of a sigma sweep replays ONE compiled program instead of re-tracing
+    per sigma (the Session sweep-amortization win).  The ``"fl_step"``
+    executor is the exception — its noise is baked into ``fl_cfg.dp``
+    (the production mechanism), so ``fl_cfg`` stays in the key unstripped.
+    ``add_noise=False`` builds the STATICALLY noise-free variant for
+    sigma == 0 runs (clipping still applies): a traced zero scale would
+    defeat ``noise_tree``'s short-circuit and sample a full Gaussian tree
+    per step just to multiply it away — the runner picks the variant from
+    the clients' sigma, so only the noisy points of a sweep share the
+    runtime-scale program.
+
     ``donate=False`` disables EVERY buffer donation (the opt-arena
     scatter, the host path's stacked state, and ``donate_globals``).
     Donation is a throughput win on the strictly serial driver, but a
@@ -182,6 +214,13 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     in-place update for an async-dispatchable copy so host planning can
     overlap device compute.
     """
+    global _STEP_BUILDS
+    _STEP_BUILDS += 1
+    # the built program NEVER reads the static sigma (noise is the
+    # runtime argument, or statically off with add_noise=False) — strip
+    # it here too so direct callers get the same program the cache hands
+    # out for every sigma
+    dp_cfg = replace(dp_cfg, noise_multiplier=0.0)
     validate_client_axis(client_axis)
     if client_axis == "fl_step" and fl_cfg is None:
         raise ValueError(
@@ -197,25 +236,29 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     def constrain(tree):
         return constrain_tree(tree, client_shardings)
 
-    def one_step(params, opt_state, batch, key):
-        """Identical math to the legacy ``_dp_sgd_step`` / ``_sgd_step``."""
+    def one_step(params, opt_state, batch, key, noise_stddev):
+        """Identical math to the legacy ``_dp_sgd_step`` / ``_sgd_step``
+        (``noise_stddev`` carries the host-rounded sigma*C/B scalar)."""
         if use_dp:
+            # add_noise=False: fall back to the (sigma-stripped) static
+            # config — a concrete 0.0 stddev short-circuits noise_tree
             grad, _aux = dp_mean_gradient(
-                loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel)
+                loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel,
+                noise_stddev=noise_stddev if add_noise else None)
         else:
             grad = jax.grad(
                 lambda p: jnp.mean(
                     jax.vmap(lambda ex: loss_fn(p, ex))(batch)))(params)
         return opt.update(grad, opt_state, params)
 
-    def local_phase(params, opt_state, key, batches, n_steps):
+    def local_phase(params, opt_state, key, batches, n_steps, noise_stddev):
         """One member's whole local round, fused across minibatch steps."""
         s_max = jax.tree_util.tree_leaves(batches)[0].shape[0]
 
         def apply_masked(p, o, k, step_i, batch):
             live = step_i < n_steps
             k_next, sub = jax.random.split(k)
-            p_new, o_new = one_step(p, o, batch, sub)
+            p_new, o_new = one_step(p, o, batch, sub, noise_stddev)
             return (_tree_where(live, p_new, p),
                     _tree_where(live, o_new, o),
                     jnp.where(live, k_next, k))
@@ -263,17 +306,23 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             # server-side merge is the engine's weights-vector reduction)
             return fl_local(params, micro, key, n_steps=steps), opt_state
 
-    def run_members(stacked_params, stacked_opt, keys, batches, n_steps):
-        """The client-axis executor switch over one stacked cohort."""
+    def run_members(stacked_params, stacked_opt, keys, batches, n_steps,
+                    noise_stddev):
+        """The client-axis executor switch over one stacked cohort
+        (``noise_stddev`` is shared across members — broadcast, never
+        stacked; the fl_step executor ignores it, its noise lives in
+        ``fl_cfg.dp``)."""
         if client_axis == "vmap":
-            return jax.vmap(local_phase)(
-                stacked_params, stacked_opt, keys, batches, n_steps)
+            return jax.vmap(local_phase,
+                            in_axes=(0, 0, 0, 0, 0, None))(
+                stacked_params, stacked_opt, keys, batches, n_steps,
+                noise_stddev)
         if client_axis == "fl_step":
             return jax.vmap(fl_member_phase)(
                 stacked_params, stacked_opt, keys, batches, n_steps)
         if client_axis == "map":
             return jax.lax.map(
-                lambda t: local_phase(*t),
+                lambda t: local_phase(*t, noise_stddev),
                 (stacked_params, stacked_opt, keys, batches, n_steps))
         # unroll: flat program over the K members
         K = keys.shape[0]
@@ -282,7 +331,8 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                         unstack_tree(stacked_opt, i),
                         keys[i],
                         unstack_tree(batches, i),
-                        n_steps[i])
+                        n_steps[i],
+                        noise_stddev)
             for i in range(K)
         ]
         return (stack_trees([p for p, _ in outs]),
@@ -296,7 +346,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
         @functools.partial(
             jax.jit, **({"donate_argnums": (1,)} if donate else {}))
         def cohort_step(arena_params, arena_opt, arena_data, slots,
-                        batch_idx, keys, n_steps):
+                        batch_idx, keys, n_steps, noise_stddev):
             def take(tree):
                 return jax.tree_util.tree_map(
                     lambda l: jnp.take(l, slots, axis=0), tree)
@@ -309,7 +359,8 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             batches = constrain(jax.tree_util.tree_map(
                 lambda l: l[slots[:, None, None], batch_idx], arena_data))
             new_params, new_opt = run_members(
-                stacked_params, stacked_opt, keys, batches, n_steps)
+                stacked_params, stacked_opt, keys, batches, n_steps,
+                noise_stddev)
             # write-back scatter: pad members target the spare slot with
             # their (masked, unchanged) gathered state, so duplicate
             # indices only ever carry identical values
@@ -324,13 +375,15 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                   else {"donate_argnums": (0, 1)})
 
         @functools.partial(jax.jit, **jit_kw)
-        def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps):
+        def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps,
+                        noise_stddev):
             stacked_params = constrain(stacked_params)
             if callable(client_shardings):
                 stacked_opt = constrain(stacked_opt)
                 batches = constrain(batches)
             new_params, new_opt = run_members(
-                stacked_params, stacked_opt, keys, batches, n_steps)
+                stacked_params, stacked_opt, keys, batches, n_steps,
+                noise_stddev)
             return constrain(new_params), new_opt
 
     # every merge replaces the globals, so donating kills the one
@@ -400,7 +453,7 @@ def _shardings_key(client_shardings):
 def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
                        client_axis="unroll", client_shardings=None,
                        fl_cfg=None, arena=False, donate_globals=False,
-                       donate=True):
+                       donate=True, add_noise=True):
     """Memoized :func:`make_cohort_step`, keyed per (training config,
     executor, data path, shardings/mesh): scenario sweeps over the same
     testbed AND mesh reuse the compiled programs instead of re-tracing
@@ -408,20 +461,28 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
     mesh-lifetime entries are dropped explicitly with
     :func:`invalidate_step_cache`.  The cache only ever holds the compiled
     step FUNCTIONS; arenas are per-runner arguments, never closed over, so
-    dropping a runner frees its device buffers regardless of the cache."""
+    dropping a runner frees its device buffers regardless of the cache.
+
+    ``dp_cfg.noise_multiplier`` is STRIPPED from both the key and the
+    built program: the noise scale is a runtime argument of the compiled
+    step, so every sigma of a noise sweep shares one entry (the
+    ``"fl_step"`` executor's noise lives in ``fl_cfg``, which stays in
+    the key)."""
+    dp_cfg = replace(dp_cfg, noise_multiplier=0.0)
 
     def build():
         return make_cohort_step(
             loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
             client_axis=client_axis, client_shardings=client_shardings,
             fl_cfg=fl_cfg, arena=arena, donate_globals=donate_globals,
-            donate=donate)
+            donate=donate, add_noise=add_noise)
 
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:
         return build()
     key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
-           client_axis, fl_cfg, sh_key, arena, donate_globals, donate)
+           client_axis, fl_cfg, sh_key, arena, donate_globals, donate,
+           add_noise)
     try:
         hash(key)
     except TypeError:

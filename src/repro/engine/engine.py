@@ -261,12 +261,20 @@ class CohortRunner:
         self.donates_globals = (self.use_arena and not self.pipelined
                                 and not any(
                                     c.personal_keys for c in clients))
+        add_noise = bool(c0.use_dp and c0.dp_cfg.noise_multiplier > 0)
         self.cohort_step, self.merge_cohort = cached_cohort_step(
             c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
             use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
             client_shardings=client_shardings, fl_cfg=cfg.fl_cfg,
             arena=self.use_arena, donate_globals=self.donates_globals,
-            donate=not self.pipelined)
+            donate=not self.pipelined, add_noise=add_noise)
+        # the compiled step's runtime noise scale: sigma * C / B computed
+        # on the HOST (float64) then rounded once to float32 — the same
+        # constant the statically-folded legacy path multiplies by, so
+        # sharing one program across a sigma sweep costs zero ulps
+        self._noise_std = jnp.float32(
+            c0.dp_cfg.noise_multiplier * c0.dp_cfg.clip_norm
+            / c0.batch_size if c0.use_dp else 0.0)
         # data-axis product: arena cohorts pad to a multiple of it so the
         # compiled leading dim always partitions on the mesh (resolved
         # from cfg.mesh when set, else from the CohortSharding's mesh; a
@@ -304,6 +312,28 @@ class CohortRunner:
         self._eps_sched = {}
         if self.use_arena:
             self._build_data_arena()
+
+    # -- cross-run reuse ---------------------------------------------------
+    def reset_for_run(self):
+        """Restore the runner to a fresh-construction state WITHOUT paying
+        construction again: the once-uploaded dataset arena, the compiled
+        step/merge/helper functions and the per-client epsilon schedules
+        (all pure functions of the config) survive; the per-run state —
+        params/opt arenas (stale trained state from the previous run),
+        queued writes and the RunLog counters — is dropped.  The state
+        arenas lazily re-init at the next dispatch exactly like a fresh
+        runner's would.  ``repro.api.Session`` calls this between runs of
+        a sweep so consecutive scenarios skip the testbed upload."""
+        self._arena_params = None
+        self._arena_opt = None
+        self._writeq = []
+        self.cohorts_run = 0
+        self.h2d_bytes_total = 0
+        self._in_eval = False
+        self.host_syncs_at_eval = 0
+        self.host_syncs_between_evals = 0
+        self.drain_waits = 0
+        self.blocking_submits = 0
 
     # -- host-sync accounting ---------------------------------------------
     def note_host_sync(self):
@@ -553,7 +583,7 @@ class CohortRunner:
                 return stack_trees([p.params0 for p in plans])
             new_stacked, new_opt = self.cohort_step(
                 staged.stacked_params, staged.stacked_opt, staged.batches,
-                staged.keys, staged.n_steps)
+                staged.keys, staged.n_steps, self._noise_std)
             for i, p in enumerate(plans):
                 self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
             return new_stacked
@@ -561,7 +591,8 @@ class CohortRunner:
             return self._gather(self._arena_params, staged.slots)
         new_stacked, self._arena_opt = self.cohort_step(
             self._arena_params, self._arena_opt, self._arena_data,
-            staged.slots, staged.batch_idx, staged.keys, staged.n_steps)
+            staged.slots, staged.batch_idx, staged.keys, staged.n_steps,
+            self._noise_std)
         return new_stacked
 
     # -- upload ------------------------------------------------------------
@@ -622,13 +653,20 @@ def run_fedavg_engine(
     target_acc: Optional[float] = None,
     engine_cfg: Optional[EngineConfig] = None,
     mesh=None,
+    runner: Optional[CohortRunner] = None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9): each round is one full-population
     barrier, executed as ceil(N / max_cohort) compiled cohort chunks whose
     dataset-size-weighted partial sums accumulate into the new globals.
-    ``mesh`` partitions the cohort axis (see CohortRunner)."""
-    cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
-    runner = CohortRunner(clients, cfg)
+    ``mesh`` partitions the cohort axis (see CohortRunner).  ``runner``
+    injects a prebuilt (and already reset) CohortRunner — the Session
+    sweep path, which keeps the dataset arena uploaded across runs; its
+    config wins over ``engine_cfg``/``mesh``."""
+    if runner is None:
+        cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
+        runner = CohortRunner(clients, cfg)
+    else:
+        cfg = runner.cfg
     log = RunLog(strategy="fedavg")
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
@@ -721,14 +759,20 @@ def run_async_engine(
     target_acc: Optional[float] = None,
     engine_cfg: Optional[EngineConfig] = None,
     mesh=None,
+    runner: Optional[CohortRunner] = None,
 ) -> tuple:
     """Event-driven async FL (Eq. 10-11) over cohorts popped from the
     virtual-clock heap.  ``staleness_window=0`` reproduces the legacy loop
     update-for-update; a positive window batches near-simultaneous
     completions into one compiled step.  ``mesh`` partitions the cohort
-    axis (see CohortRunner)."""
-    cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
-    runner = CohortRunner(clients, cfg)
+    axis (see CohortRunner).  ``runner`` injects a prebuilt (and already
+    reset) CohortRunner — the Session sweep path; its config wins over
+    ``engine_cfg``/``mesh``."""
+    if runner is None:
+        cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
+        runner = CohortRunner(clients, cfg)
+    else:
+        cfg = runner.cfg
     if runner.donates_globals:
         # the fused merge donates its globals argument; copy ONCE so the
         # first merge consumes our copy, not the caller's buffers (which

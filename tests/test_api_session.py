@@ -1,0 +1,248 @@
+"""Session execution: shim parity (the legacy frontends must be
+bit-identical to Session.run), warm-session determinism (client reset),
+and cache-reusing sweeps (partitions generated once, compiled steps
+shared across a sigma-only grid)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExperimentSpec, RunBudget, Session, StrategySpec)
+from repro.core.testbed import TestbedConfig, build_testbed, run_experiment
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import EngineConfig
+from repro.models.ser_cnn import SERConfig
+
+
+def _assert_bit_identical(p_a, log_a, p_b, log_b):
+    la, lb = jax.tree_util.tree_leaves(p_a), jax.tree_util.tree_leaves(p_b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    for fld in ("strategy", "times", "global_acc", "server_version",
+                "update_counts", "influence", "staleness", "eps_trajectory",
+                "local_acc", "cohort_sizes"):
+        assert getattr(log_a, fld) == getattr(log_b, fld), fld
+
+
+@pytest.fixture(scope="module")
+def sweep_cfg():
+    """Tiny-dims testbed unique to this module so compile-count assertions
+    see a cold step cache for this config."""
+    dims = dict(time_frames=12, n_mels=12)
+    return TestbedConfig(
+        use_dp=True, sigma=0.5, batch_size=16, num_clients=4,
+        data=SERDataConfig(n_total=144, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=16, **dims),
+        seed=7)
+
+
+# ---------------------------------------------------------------------------
+# shim parity (acceptance criterion): legacy signatures == Session.run
+# ---------------------------------------------------------------------------
+
+def test_shim_parity_fedavg(micro_cfg):
+    p_shim, log_shim = run_experiment("fedavg", micro_cfg, rounds=2)
+    p_api, log_api = Session().run(ExperimentSpec(
+        testbed=micro_cfg, strategy=StrategySpec("fedavg"),
+        run=RunBudget(rounds=2)))
+    _assert_bit_identical(p_shim, log_shim, p_api, log_api)
+
+
+def test_shim_parity_fedasync_window0(micro_cfg):
+    p_shim, log_shim = run_experiment("fedasync", micro_cfg, max_updates=8,
+                                      eval_every=4, alpha=0.4)
+    p_api, log_api = Session().run(ExperimentSpec(
+        testbed=micro_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(max_updates=8, eval_every=4)))
+    _assert_bit_identical(p_shim, log_shim, p_api, log_api)
+
+
+def test_shim_parity_fedasync_windowed(micro_cfg):
+    ec = EngineConfig(staleness_window=1e9, max_cohort=2)
+    p_shim, log_shim = run_experiment("fedasync", micro_cfg, max_updates=8,
+                                      eval_every=4, alpha=0.4,
+                                      engine_cfg=ec)
+    p_api, log_api = Session().run(ExperimentSpec(
+        testbed=micro_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(max_updates=8, eval_every=4), engine=ec))
+    _assert_bit_identical(p_shim, log_shim, p_api, log_api)
+    assert max(log_api.cohort_sizes) == 2        # the window actually batched
+
+
+def test_shim_parity_legacy_backend(micro_cfg):
+    p_shim, log_shim = run_experiment("fedasync", micro_cfg, max_updates=6,
+                                      eval_every=3, alpha=0.4,
+                                      engine="legacy")
+    p_api, log_api = Session().run(ExperimentSpec(
+        testbed=micro_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(max_updates=6, eval_every=3), backend="legacy"))
+    _assert_bit_identical(p_shim, log_shim, p_api, log_api)
+
+
+def test_sigma_zero_clipping_only_parity(micro_cfg):
+    """use_dp=True with sigma=0 (clip, no noise) selects the statically
+    noise-free program variant — it must still match the legacy loop
+    exactly (a traced zero scale would have perturbed -0.0 bits and
+    burned RNG for nothing)."""
+    cfg = dataclasses.replace(micro_cfg, sigma=0.0)
+    kw = dict(max_updates=6, eval_every=3, alpha=0.4)
+    p_eng, log_eng = run_experiment("fedasync", cfg, **kw)
+    p_leg, log_leg = run_experiment("fedasync", cfg, engine="legacy", **kw)
+    for x, y in zip(jax.tree_util.tree_leaves(p_eng),
+                    jax.tree_util.tree_leaves(p_leg)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+    assert log_eng.eps_trajectory == log_leg.eps_trajectory
+    assert log_eng.update_counts == log_leg.update_counts
+
+
+def test_legacy_backend_rejects_mesh(micro_cfg):
+    from repro.launch.mesh import make_host_mesh
+    spec = ExperimentSpec(testbed=micro_cfg, backend="legacy",
+                          engine=EngineConfig(mesh=make_host_mesh(data=1)))
+    with pytest.raises(ValueError, match="cohort"):
+        Session().run(spec)
+
+
+# ---------------------------------------------------------------------------
+# warm-session determinism: reuse must not leak state between runs
+# ---------------------------------------------------------------------------
+
+def test_warm_rerun_is_bit_identical(micro_cfg):
+    """Second run of the same spec in one session: clients reset to their
+    construction-time RNG/clock/accountant chains, the runner's state
+    arenas re-init — the RunLog and params must be bit-identical."""
+    spec = ExperimentSpec(
+        testbed=micro_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(max_updates=8, eval_every=4))
+    s = Session()
+    p1, log1 = s.run(spec)
+    p2, log2 = s.run(spec)
+    _assert_bit_identical(p1, log1, p2, log2)
+    st = s.stats()
+    assert st["testbed_builds"] == 1 and st["testbed_reuses"] == 1
+    assert st["runner_builds"] == 1 and st["runner_reuses"] == 1
+
+
+def test_warm_strategy_switch_matches_fresh(micro_cfg):
+    """Strategy-only change reuses testbed AND runner; result must match
+    a fresh session's."""
+    s = Session()
+    base = ExperimentSpec(
+        testbed=micro_cfg, strategy=StrategySpec("fedasync", alpha=0.4,
+                                                 staleness_aware=True),
+        run=RunBudget(max_updates=6, eval_every=3))
+    s.run(base)
+    spec_b = dataclasses.replace(
+        base, strategy=StrategySpec("fedbuff", alpha=0.4, buffer_size=2))
+    p_warm, log_warm = s.run(spec_b)
+    p_fresh, log_fresh = Session().run(spec_b)
+    _assert_bit_identical(p_warm, log_warm, p_fresh, log_fresh)
+    assert s.stats()["runner_reuses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cache-reusing sweeps (the tentpole win)
+# ---------------------------------------------------------------------------
+
+def test_sigma_sweep_keeps_step_cache_warm(sweep_cfg, monkeypatch):
+    """A sigma-only sweep must NOT invalidate/re-trace the compiled step:
+    the noise scale is a runtime argument, so the 4-point grid shares one
+    program (monkeypatch-counted make_cohort_step builds), datasets are
+    generated once, and every per-scenario RunLog matches a fresh
+    session's."""
+    from repro.engine import cohort_step
+
+    builds = []
+    real = cohort_step.make_cohort_step
+
+    def counting(*a, **kw):
+        builds.append((kw.get("client_axis"), kw.get("arena")))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(cohort_step, "make_cohort_step", counting)
+
+    sigmas = [0.5, 1.0, 1.5, 2.0]
+    spec = ExperimentSpec(
+        testbed=sweep_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(max_updates=4, eval_every=2))
+    s = Session()
+    result = s.sweep(spec, axes={"testbed.sigma": sigmas})
+    assert len(result) == 4
+    assert len(builds) <= 1                      # ONE program for the grid
+    assert s.stats()["partition_builds"] == 1    # dataset generated once
+    n_after_first = len(builds)
+    s.sweep(spec, axes={"testbed.sigma": sigmas})
+    assert len(builds) == n_after_first          # repeat sweep: zero builds
+
+    for sg, log in zip(sigmas, result.logs):
+        _, fresh = Session().run(
+            dataclasses.replace(
+                spec, testbed=dataclasses.replace(sweep_cfg, sigma=sg)))
+        assert fresh.global_acc == log.global_acc
+        assert fresh.eps_trajectory == log.eps_trajectory
+        assert fresh.update_counts == log.update_counts
+
+
+def test_sweep_table_and_points(sweep_cfg):
+    spec = ExperimentSpec(
+        testbed=sweep_cfg,
+        strategy=StrategySpec("fedasync", alpha=0.4, staleness_aware=True),
+        run=RunBudget(rounds=1, max_updates=4, eval_every=2))
+    res = Session().sweep(spec, axes={
+        "strategy": [StrategySpec("fedavg"),
+                     StrategySpec("fedasync", alpha=0.4)],
+        "testbed.sigma": [0.5, 2.0],
+    })
+    assert len(res) == 4
+    # last axis fastest: fedavg s0.5, fedavg s2, fedasync s0.5, fedasync s2
+    # — and the axis column keeps the FULL label (params included), so
+    # two points of the same strategy name stay distinguishable
+    assert [r["strategy"] for r in res.table()] == [
+        "fedavg", "fedavg", "fedasync(alpha=0.4)", "fedasync(alpha=0.4)"]
+    assert [r["sigma"] for r in res.table()] == [0.5, 2.0, 0.5, 2.0]
+    assert [r["testbed.sigma"] for r in res.table()] == [0.5, 2.0, 0.5, 2.0]
+    for row in res.table():
+        for key in ("final_acc", "max_eps", "jain_participation",
+                    "privacy_disparity", "wall_s", "updates"):
+            assert key in row
+        assert row["final_acc"] is not None
+
+
+def test_sweep_validates_axes(sweep_cfg):
+    spec = ExperimentSpec(testbed=sweep_cfg)
+    s = Session()
+    with pytest.raises(ValueError, match="at least one axis"):
+        s.sweep(spec, axes={})
+    with pytest.raises(ValueError, match="no values"):
+        s.sweep(spec, axes={"testbed.sigma": []})
+    with pytest.raises(ValueError, match="no field"):
+        s.sweep(spec, axes={"testbed.sigmo": [1.0]})
+    assert s.stats().get("runs", 0) == 0         # fail fast, nothing ran
+
+
+# ---------------------------------------------------------------------------
+# server-level shims: eval cadence normalized there too
+# ---------------------------------------------------------------------------
+
+def test_run_fedavg_run_async_normalize_eval_every(micro_cfg):
+    from repro.core.server import run_async, run_fedavg
+
+    clients, params, acc_fn, pooled = build_testbed(micro_cfg)
+    _, log = run_fedavg(clients, params, acc_fn, pooled, rounds=1,
+                        eval_every=0)
+    assert log.global_acc
+    for c in clients:
+        c.reset()
+    _, log = run_async(clients, params, acc_fn, pooled,
+                       StrategySpec("fedasync", alpha=0.4).make(),
+                       max_updates=4, eval_every=0)
+    assert log.global_acc

@@ -1,0 +1,229 @@
+"""ExperimentSpec/StrategySpec/RunBudget: construction-time validation,
+dict/JSON round-trips, the legacy-signature bridge, and the workload
+registry."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import (
+    ExperimentSpec, RunBudget, StrategySpec, get_workload, register_workload,
+    replace_path, workload_names)
+from repro.api.spec import decode, encode
+from repro.core.dp import DPConfig
+from repro.core.fl_step import FLStepConfig
+from repro.core.testbed import TestbedConfig, build_testbed, run_experiment
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import EngineConfig
+from repro.models.ser_cnn import SERConfig
+
+
+# ---------------------------------------------------------------------------
+# StrategySpec: registry validation at construction (satellite bugfix —
+# bad names/params used to surface deep inside make_strategy mid-run)
+# ---------------------------------------------------------------------------
+
+def test_strategy_spec_rejects_unknown_name_listing_options():
+    with pytest.raises(ValueError, match="fedasync.*fedavg|fedavg.*fedasync"):
+        StrategySpec("fedsync")
+
+
+def test_strategy_spec_rejects_unknown_param_listing_valid():
+    with pytest.raises(ValueError, match="alpha"):
+        StrategySpec("fedasync", aplha=0.4)          # the classic typo
+    with pytest.raises(ValueError, match="buffer_size"):
+        StrategySpec("fedbuff", window=3)
+
+
+def test_strategy_spec_fedavg_takes_no_params():
+    with pytest.raises(ValueError, match="none"):
+        StrategySpec("fedavg", alpha=0.4)
+
+
+def test_strategy_spec_nostale_pins_staleness():
+    # the variant exists to pin staleness_aware=False; offering the knob
+    # anyway would silently contradict the name
+    with pytest.raises(ValueError, match="staleness_aware"):
+        StrategySpec("fedasync_nostale", staleness_aware=True)
+    strat = StrategySpec("fedasync_nostale", alpha=0.3).make()
+    assert strat.staleness_aware is False and strat.alpha == 0.3
+
+
+def test_strategy_spec_value_semantics():
+    a = StrategySpec("fedasync", alpha=0.4, staleness_aware=True)
+    b = StrategySpec("fedasync", staleness_aware=True, alpha=0.4)
+    assert a == b and hash(a) == hash(b)             # canonical param order
+    assert a.replace(alpha=0.2) == StrategySpec(
+        "fedasync", alpha=0.2, staleness_aware=True)
+    made = a.make()
+    assert made.alpha == 0.4 and made.staleness_aware is True
+
+
+def test_run_experiment_shim_validates_strategy_kwargs_up_front():
+    # never reaches the testbed build — no training cost
+    with pytest.raises(ValueError, match="eps_target"):
+        run_experiment("fedasync", eps_target=8.0)
+    with pytest.raises(ValueError, match="unknown aggregation strategy"):
+        run_experiment("fedsync")
+
+
+# ---------------------------------------------------------------------------
+# RunBudget: the one eval-cadence validation point (satellite bugfix —
+# eval_every=0 used to die on `rnd % 0` in the fedavg loop only)
+# ---------------------------------------------------------------------------
+
+def test_run_budget_normalizes_eval_every():
+    assert RunBudget(eval_every=0).eval_every == 1
+    assert RunBudget(eval_every=-3).eval_every == 1
+    assert RunBudget(eval_every=7).eval_every == 7
+
+
+def test_run_budget_rejects_negative_budgets():
+    with pytest.raises(ValueError, match="rounds"):
+        RunBudget(rounds=-1)
+
+
+def test_eval_every_zero_fedavg_regression(micro_cfg):
+    """eval_every=0 on the FEDAVG path: ZeroDivisionError before PR 5."""
+    _, log = run_experiment("fedavg", micro_cfg, rounds=1, eval_every=0)
+    assert log.global_acc                       # evaluated at round 1
+    # the legacy engine path flows through the same normalization
+    _, log = run_experiment("fedavg", micro_cfg, rounds=1, eval_every=0,
+                            engine="legacy")
+    assert log.global_acc
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip_default():
+    spec = ExperimentSpec()
+    d = spec.to_dict()
+    json.dumps(d)                                # genuinely JSON-able
+    assert ExperimentSpec.from_dict(d) == spec
+
+
+def test_spec_roundtrip_nested_engine_and_dp():
+    """The full nesting: custom testbed (data + model sub-configs),
+    strategy params, run budget, and an EngineConfig carrying an
+    FLStepConfig with its own DPConfig."""
+    spec = ExperimentSpec(
+        testbed=TestbedConfig(
+            num_clients=7, batch_size=32, sigma=1.5, partition="dirichlet",
+            dirichlet_alpha=0.3, seed=11,
+            data=SERDataConfig(n_total=480, time_frames=32),
+            model=SERConfig(channels1=8, fc_dim=32),
+            workload="ser_cnn"),
+        strategy=StrategySpec("adaptive_async", alpha=0.2, eps_target=4.0),
+        run=RunBudget(rounds=3, max_updates=17, max_time=900.0,
+                      eval_every=5, target_acc=0.6),
+        engine=EngineConfig(
+            staleness_window=45.0, max_cohort=4, pipeline_depth=2,
+            client_axis="fl_step",
+            fl_cfg=FLStepConfig(
+                num_clients=4, n_micro=1,
+                dp=DPConfig(clip_norm=1.0, noise_multiplier=1.5,
+                            granularity="per_microbatch"))),
+        backend="cohort")
+    d = json.loads(json.dumps(spec.to_dict()))   # through real JSON
+    back = ExperimentSpec.from_dict(d)
+    assert back == spec
+    assert back.engine.fl_cfg.dp == spec.engine.fl_cfg.dp
+    assert back.strategy.kwargs == {"alpha": 0.2, "eps_target": 4.0}
+
+
+def test_spec_roundtrip_mesh_by_axis_shape():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=1)
+    spec = ExperimentSpec(engine=EngineConfig(mesh=mesh))
+    d = json.loads(json.dumps(spec.to_dict()))
+    assert d["engine"]["mesh"] == {"__mesh__": {"data": 1, "model": 1}}
+    assert ExperimentSpec.from_dict(d) == spec   # same process: same devices
+
+
+def test_encode_rejects_unserializable():
+    with pytest.raises(ValueError, match="cannot encode"):
+        encode(object())
+    with pytest.raises(ValueError, match="unknown spec type"):
+        decode({"__type__": "NotASpec"})
+
+
+def test_spec_backend_and_types_validated():
+    with pytest.raises(ValueError, match="backend"):
+        ExperimentSpec(backend="turbo")
+    with pytest.raises(TypeError, match="strategy"):
+        ExperimentSpec(strategy="fedasync")
+
+
+def test_from_legacy_maps_the_old_signature():
+    cfg = TestbedConfig(sigma=2.0)
+    ec = EngineConfig(staleness_window=9.0)
+    spec = ExperimentSpec.from_legacy(
+        "fedasync", cfg, rounds=5, max_updates=42, alpha=0.6,
+        staleness_aware=False, target_acc=0.7, eval_every=0,
+        engine="legacy", engine_cfg=ec)
+    assert spec.testbed == cfg and spec.backend == "legacy"
+    assert spec.engine == ec
+    assert spec.strategy == StrategySpec("fedasync", alpha=0.6,
+                                         staleness_aware=False)
+    assert spec.run == RunBudget(rounds=5, max_updates=42, eval_every=0,
+                                 target_acc=0.7)
+    assert spec.run.eval_every == 1
+    # fedasync_nostale historical tolerance: staleness_aware dropped
+    spec = ExperimentSpec.from_legacy("fedasync_nostale", cfg, alpha=0.3,
+                                      staleness_aware=True)
+    assert spec.strategy == StrategySpec("fedasync_nostale", alpha=0.3)
+
+
+def test_replace_path():
+    spec = ExperimentSpec()
+    assert replace_path(spec, "testbed.sigma", 2.0).testbed.sigma == 2.0
+    assert replace_path(spec, "testbed.data.n_total",
+                        480).testbed.data.n_total == 480
+    s2 = replace_path(spec, "strategy", StrategySpec("fedavg"))
+    assert s2.strategy.name == "fedavg"
+    assert spec.testbed.sigma == 1.0             # original untouched
+    with pytest.raises(ValueError, match="no field"):
+        replace_path(spec, "testbed.bogus", 1)
+
+
+# ---------------------------------------------------------------------------
+# workload registry
+# ---------------------------------------------------------------------------
+
+def test_workload_registry_lists_names_on_unknown():
+    with pytest.raises(ValueError, match="ser_cnn"):
+        get_workload("resnet50")
+    assert {"ser_cnn", "ser_linear"} <= set(workload_names())
+
+
+def test_workload_duplicate_registration_rejected():
+    wl = get_workload("ser_cnn")
+    with pytest.raises(ValueError, match="already registered"):
+        register_workload("ser_cnn", init=wl.init, loss=wl.loss,
+                          accuracy=wl.accuracy)
+
+
+def test_workload_shared_closures_are_identity_stable():
+    wl = get_workload("ser_cnn")
+    cfg = SERConfig(channels1=8)
+    assert wl.shared_loss(cfg) is wl.shared_loss(cfg)
+    assert wl.shared_accuracy(cfg) is wl.shared_accuracy(cfg)
+
+
+def test_unknown_workload_fails_at_build(micro_cfg):
+    cfg = dataclasses.replace(micro_cfg, workload="nope")
+    with pytest.raises(ValueError, match="unknown workload"):
+        build_testbed(cfg)
+
+
+def test_ser_linear_workload_backs_a_testbed(micro_cfg):
+    """The registry decouples the testbed from ser_cnn: a different model
+    family trains end to end through the same spec machinery."""
+    cfg = dataclasses.replace(micro_cfg, workload="ser_linear")
+    params, log = run_experiment("fedasync", cfg, max_updates=4,
+                                 eval_every=2, alpha=0.4)
+    assert set(params) == {"w", "b"}             # the linear model trained
+    assert sum(log.update_counts.values()) == 4
+    assert log.global_acc
