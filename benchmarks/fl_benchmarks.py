@@ -349,7 +349,8 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
         })
     pipeline_rows = bench_engine_pipeline(tiny=tiny)
     sweep_section = bench_sweep_amortization(tiny=tiny)
-    _write_bench_engine(rows, pipeline_rows, sweep_section)
+    dp_rows = bench_dp_path(tiny=tiny)
+    _write_bench_engine(rows, pipeline_rows, sweep_section, dp_rows)
     return _write("engine_throughput", rows)
 
 
@@ -559,13 +560,95 @@ def bench_sweep_amortization(sigmas=(0.5, 1.0, 1.5, 2.0), num_clients=8,
     return section
 
 
-def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None):
+# ---------------------------------------------------------------------------
+# DP hot-path: jnp reference vs the fused Pallas clip+noise kernel
+# ---------------------------------------------------------------------------
+
+def bench_dp_path(num_clients=8, updates=24, seed=0, window=45.0, tiny=False):
+    """The dp_path acceptance pair: the SAME DP FedAsync workload under
+
+      * jnp    — per-example clip + noise composed from jnp ops (vmap'd
+        grads, tree clip, Gaussian tree noise) — the reference path;
+      * pallas — ONE fused kernel launch per cohort step over the stacked
+        (K*B, D) per-example gradient matrix: two-pass sqnorm/clip-scale
+        sweep with the noise add fused into the final-tile epilogue
+        (kernels/dp_clip).
+
+    Each row records the backend and — for the pallas row — whether the
+    kernel ran compiled or in interpret mode and which policy source
+    decided that (``repro.kernels.common.interpret_info``); a pallas row
+    silently interpreting on a compiled-capable backend fails
+    ``summarize.py --check-engine``.  Rows carry full ExperimentSpec
+    provenance like every other BENCH_engine section.
+
+    Returns the ``dp_path`` section rows for BENCH_engine.json."""
+    import time as _time
+
+    import jax
+
+    from repro.api import ExperimentSpec
+    from repro.engine import EngineConfig
+    from repro.models.ser_cnn import SERConfig
+
+    if tiny:
+        num_clients = min(num_clients, 4)
+        updates = min(updates, 8)
+    dims = dict(time_frames=12, n_mels=12)
+    base = TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=16, num_clients=num_clients,
+        data=SERDataConfig(n_total=36 * num_clients, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims),
+        seed=seed)
+    ec = EngineConfig(staleness_window=window)
+
+    def run(cfg, n=updates):
+        t0 = _time.perf_counter()
+        _, log = run_experiment("fedasync", cfg, max_updates=n, alpha=0.4,
+                                eval_every=10 ** 9, engine="cohort",
+                                engine_cfg=ec)
+        return _time.perf_counter() - t0, log
+
+    rows, t_jnp = [], None
+    for path in ("jnp", "pallas"):
+        cfg = replace(base, dp_path=path)
+        run(cfg, n=max(8, 2 * ec.max_cohort))       # warmup compiles
+        t, log = run(cfg)
+        if t_jnp is None:
+            t_jnp = t
+        stats = log.engine_stats
+        info = stats.get("pallas_interpret") or {}
+        n_cohorts = len(log.cohort_sizes)
+        rows.append({
+            "dp_path": path,
+            "backend": jax.default_backend(),
+            "interpret": info.get("interpret"),       # None on the jnp row
+            "interpret_source": info.get("source"),
+            "num_clients": num_clients,
+            "updates": updates,
+            "wall_s": round(t, 3),
+            "warm_step_ms": (round(1e3 * t / n_cohorts, 2)
+                             if n_cohorts else None),
+            "updates_per_s": round(updates / t, 2),
+            "speedup_vs_jnp": round(t_jnp / t, 2),
+            "spec": ExperimentSpec.from_legacy(
+                "fedasync", cfg, max_updates=updates, alpha=0.4,
+                eval_every=10 ** 9, engine="cohort",
+                engine_cfg=ec).to_dict(),
+        })
+    _write("dp_path", rows)
+    return rows
+
+
+def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
+                        dp_rows=None):
     """The machine-readable perf trajectory: BENCH_engine.json at the repo
     root (schema checked by ``benchmarks/summarize.py --check-engine``).
     ``pipeline_rows`` (multi-device runs) land under the ``pipeline``
-    section — the serial-vs-pipelined scheduler comparison — and
+    section — the serial-vs-pipelined scheduler comparison —
     ``sweep_section`` (bench_sweep_amortization) under ``sweep`` — the
-    cold-per-run vs warm-Session comparison."""
+    cold-per-run vs warm-Session comparison — and ``dp_rows``
+    (bench_dp_path) under ``dp_path`` — the jnp-vs-fused-kernel DP
+    hot-path comparison."""
     import jax
 
     out = {
@@ -577,6 +660,8 @@ def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None):
         out["pipeline"] = {"rows": pipeline_rows}
     if sweep_section:
         out["sweep"] = sweep_section
+    if dp_rows:
+        out["dp_path"] = {"rows": dp_rows}
     fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(fn, "w") as f:
         json.dump(out, f, indent=1, default=float)

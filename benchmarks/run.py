@@ -118,6 +118,11 @@ def main() -> None:
                     help="tiny bench_engine_throughput pass only: emits "
                          "BENCH_engine.json for summarize.py --check-engine "
                          "(CI's engine-mesh bench-smoke step)")
+    ap.add_argument("--dp-smoke", action="store_true",
+                    help="tiny bench_dp_path pass only: jnp vs the fused "
+                         "Pallas clip+noise kernel on the cohort hot path "
+                         "(CI's engine-mesh dp-smoke step; does NOT rewrite "
+                         "BENCH_engine.json)")
     ap.add_argument("--sweep-smoke", action="store_true",
                     help="tiny 2x2 Session.sweep (strategy x sigma) — "
                          "exercises the declarative API end to end on "
@@ -130,6 +135,17 @@ def main() -> None:
 
     if args.sweep_smoke:
         sweep_smoke()
+        return
+
+    if args.dp_smoke:
+        t0 = time.time()
+        rows = flb.bench_dp_path(tiny=True)
+        pallas = next(r for r in rows if r["dp_path"] == "pallas")
+        _line("engine.dp.smoke", round((time.time() - t0) * 1e6),
+              ";".join(f"{r['dp_path']}:{r['speedup_vs_jnp']}x"
+                       for r in rows)
+              + f";interpret={pallas['interpret']}"
+              + f"({pallas['interpret_source']})")
         return
 
     if args.engine_smoke:
@@ -160,6 +176,11 @@ def main() -> None:
             _line("engine.sweep.smoke", None,
                   f"warm:{sw['speedup']}x;builds:{sw['warm_step_builds']}"
                   f"/{sw['cold_step_builds']}")
+        dp = bench.get("dp_path", {}).get("rows", [])
+        if dp:
+            _line("engine.dp.smoke", None,
+                  ";".join(f"{r['dp_path']}:{r['speedup_vs_jnp']}x"
+                           for r in dp))
         return
 
     def run_or_cache(name, fn):

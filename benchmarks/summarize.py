@@ -40,6 +40,19 @@ _SWEEP_KEYS = {
     "warm_step_builds", "spec", "axes",
 }
 
+# the DP hot-path section (bench_dp_path): jnp reference vs the fused
+# Pallas clip+noise kernel, with the interpret-mode provenance that keeps
+# a silently-interpreted "kernel" number from passing as a perf row
+_DP_ROW_KEYS = {
+    "dp_path", "backend", "interpret", "interpret_source", "wall_s",
+    "warm_step_ms", "updates_per_s", "speedup_vs_jnp", "spec",
+}
+
+# backends whose Pallas lowering compiles for real: a pallas bench row
+# reporting interpret=True on one of these is a misconfiguration, not a
+# measurement (mirror of kernels/common._COMPILED_BACKENDS)
+_COMPILED_BACKENDS = {"tpu", "gpu", "cuda", "rocm"}
+
 # an ExperimentSpec provenance dict must at least nest these sub-configs
 _SPEC_KEYS = {"testbed", "strategy", "run", "engine"}
 
@@ -135,6 +148,39 @@ def load_engine_bench(path=None):
         raise ValueError(
             f"{fn}: warm Session sweep is not faster than cold per-run "
             f"rebuilds (speedup {sweep['speedup']}x must be > 1)")
+    dp = data.get("dp_path")
+    if dp is None:
+        raise ValueError(
+            f"{fn}: missing the 'dp_path' section (jnp vs fused Pallas "
+            "clip+noise kernel on the cohort hot path — run "
+            "benchmarks.fl_benchmarks.bench_dp_path)")
+    drows = dp.get("rows")
+    if not isinstance(drows, list) or not drows:
+        raise ValueError(f"{fn}: dp_path section has no rows")
+    for i, r in enumerate(drows):
+        missing = _DP_ROW_KEYS - set(r)
+        if missing:
+            raise ValueError(
+                f"{fn}: dp_path row {i} missing keys {sorted(missing)}")
+        _check_spec(fn, f"dp_path row {i}", r["spec"])
+    names = {r["dp_path"] for r in drows}
+    if not {"jnp", "pallas"} <= names:
+        raise ValueError(
+            f"{fn}: dp_path section must compare 'jnp' and 'pallas' rows "
+            f"(got {sorted(names)})")
+    for r in drows:
+        if r["dp_path"] != "pallas":
+            continue
+        if r["interpret"] is None:
+            raise ValueError(
+                f"{fn}: pallas dp_path row carries no interpret-mode "
+                "provenance (RunLog.engine_stats['pallas_interpret'])")
+        if r["interpret"] and r["backend"] in _COMPILED_BACKENDS:
+            raise ValueError(
+                f"{fn}: pallas dp_path row ran in INTERPRET mode on "
+                f"backend {r['backend']!r} (compiled-capable) — the "
+                "number is not a kernel measurement; fix the interpret "
+                "policy (kernels/common) or unset REPRO_PALLAS_INTERPRET")
     return data
 
 
@@ -166,6 +212,15 @@ def summarize_engine(out):
             f"warm Session {sw['warm_wall_s']}s vs cold per-run "
             f"{sw['cold_wall_s']}s ({sw['speedup']}x), step builds "
             f"{sw['warm_step_builds']} vs {sw['cold_step_builds']}")
+    for r in data.get("dp_path", {}).get("rows", []):
+        mode = ("" if r["dp_path"] != "pallas" else
+                (", interpret" if r["interpret"] else ", compiled")
+                + f" [{r['interpret_source']}]")
+        out.append(
+            f"dp_path[{r['backend']}] {r['dp_path']}: "
+            f"{r['speedup_vs_jnp']}x vs jnp, "
+            f"warm step {r['warm_step_ms']}ms, "
+            f"{r['updates_per_s']} updates/s{mode}")
 
 
 def main():
@@ -257,9 +312,10 @@ if __name__ == "__main__":
             sys.exit(1)
         n_pipe = len(data.get("pipeline", {}).get("rows", []))
         sw = data["sweep"]
+        n_dp = len(data["dp_path"]["rows"])
         print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
               f"{n_pipe} pipeline rows, sweep {sw['speedup']}x "
               f"({sw['warm_step_builds']}/{sw['cold_step_builds']} builds), "
-              f"{data['devices']} device(s)")
+              f"{n_dp} dp_path rows, {data['devices']} device(s)")
         sys.exit(0)
     main()

@@ -249,6 +249,11 @@ def decode(d):
     cls = _SPEC_TYPES.get(tag)
     if cls is None:
         raise ValueError(f"unknown spec type tag {tag!r}")
+    if tag == "TestbedConfig" and "use_kernel" in d and "dp_path" not in d:
+        # pre-dp_path specs carried a `use_kernel` bool; map it onto the
+        # selector so archived JSON keeps meaning what it meant
+        d = dict(d)
+        d["dp_path"] = "pallas" if d.pop("use_kernel") else "jnp"
     kw = {}
     for f in dataclasses.fields(cls):
         if f.name in d:

@@ -25,10 +25,10 @@ from repro.core.heterogeneity import DeviceProfile, VirtualClock
 from repro.optim.optimizers import Adam
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "dp_cfg", "opt", "use_kernel"))
-def _dp_sgd_step(params, opt_state, batch, key, *, loss_fn, dp_cfg, opt, use_kernel=False):
+@partial(jax.jit, static_argnames=("loss_fn", "dp_cfg", "opt", "dp_path"))
+def _dp_sgd_step(params, opt_state, batch, key, *, loss_fn, dp_cfg, opt, dp_path="jnp"):
     """One DP-SGD mini-batch step (Eq. 4-6 + Adam)."""
-    grad, aux = dp_mean_gradient(loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel)
+    grad, aux = dp_mean_gradient(loss_fn, params, batch, key, dp_cfg, dp_path=dp_path)
     new_params, new_opt_state = opt.update(grad, opt_state, params)
     return new_params, new_opt_state, aux
 
@@ -57,7 +57,7 @@ class Client:
     local_epochs: int = 1
     seed: int = 0
     use_dp: bool = True
-    use_kernel: bool = False
+    dp_path: str = "jnp"            # "jnp" | "pallas" (fused clip+noise kernel)
     # personalized FL (beyond-paper; paper Sec. 5 'Personalized FL with
     # Privacy Guarantees'): these TOP-LEVEL param subtrees stay on-device —
     # they are restored over the received globals before local training and
@@ -132,7 +132,7 @@ class Client:
                     params, opt_state, aux = _dp_sgd_step(
                         params, opt_state, batch, sub,
                         loss_fn=self.loss_fn, dp_cfg=self.dp_cfg, opt=self.opt,
-                        use_kernel=self.use_kernel,
+                        dp_path=self.dp_path,
                     )
                 else:
                     params, opt_state, loss = _sgd_step(

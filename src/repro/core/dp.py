@@ -23,6 +23,19 @@ DP-SGD mechanism (Abadi et al.) noises the sum and then divides everything
 by |b|.  We follow Abadi et al. (noise stddev sigma*C on the sum, i.e.
 sigma*C/|b| on the mean) — this is also what Opacus implements, so it is
 what the paper actually ran.
+
+The per-example mechanism ships two interchangeable implementations,
+selected by ``dp_path``:
+
+  * ``"jnp"``    — reference: per-leaf norms/scales + ``noise_tree``.
+  * ``"pallas"`` — the fused ``repro.kernels.dp_clip`` two-pass kernel
+                   (clip + mean + Gaussian noise in the final-tile
+                   epilogue), the cohort engine's production hot path.
+                   Noise draws replay ``noise_tree``'s exact per-leaf
+                   split order (``tree_gaussian_vector_like``) so both
+                   paths agree to float tolerance; the noise stddev stays
+                   a RUNTIME scalar, preserving the one-program-per-sigma-
+                   sweep invariant.
 """
 from __future__ import annotations
 
@@ -38,6 +51,16 @@ from repro.pytree import (
     tree_global_norm,
     tree_scale,
 )
+
+
+DP_PATHS = ("jnp", "pallas")
+
+
+def validate_dp_path(dp_path: str) -> str:
+    if dp_path not in DP_PATHS:
+        raise ValueError(
+            f"dp_path must be one of {DP_PATHS}, got {dp_path!r}")
+    return dp_path
 
 
 @dataclass(frozen=True)
@@ -87,11 +110,14 @@ def dp_mean_gradient(
     batch,
     key: jax.Array,
     cfg: DPConfig,
-    use_kernel: bool = False,
+    dp_path: str = "jnp",
     noise_stddev=None,
 ):
     """Per-example DP-SGD gradient (Eq. 4-6): clip each sample's grad to C,
     average, add N(0, (sigma*C/B)^2) to the mean.
+
+    ``dp_path`` selects the implementation: ``"jnp"`` (reference) or
+    ``"pallas"`` (fused clip+mean+noise kernel, see module docstring).
 
     ``noise_stddev`` overrides the statically derived
     ``sigma * C / B`` with a (possibly traced) runtime scalar: the cohort
@@ -102,22 +128,39 @@ def dp_mean_gradient(
     Returns (noised_mean_grad, aux) where aux carries the mean pre-clip
     norm (useful for calibrating C) and the fraction of clipped samples.
     """
+    validate_dp_path(dp_path)
     g_per = per_example_grads(loss_fn, params, batch)
     bsz = jax.tree_util.tree_leaves(g_per)[0].shape[0]
+    stddev = (cfg.noise_multiplier * cfg.clip_norm / bsz
+              if noise_stddev is None else noise_stddev)
+    # mirror noise_tree's short-circuit: a CONCRETE zero stddev means no
+    # noise; a traced scalar always takes the noised program.
+    add_noise = not (isinstance(stddev, (int, float)) and stddev == 0.0)
 
-    if use_kernel:
-        # fused Pallas path: flatten per-example grads to (B, D) and run the
-        # two-pass clip+accumulate kernel (see repro.kernels.dp_clip).
-        from repro.kernels.dp_clip.ops import dp_clip_mean_flat
-        from repro.pytree import tree_unflatten_from_vector
+    if dp_path == "pallas":
+        # fused Pallas path: flatten per-example grads to (1, B, D) and run
+        # the two-pass cohort clip+mean(+noise) kernel with K=1 (see
+        # repro.kernels.dp_clip).  Noise draws replay noise_tree's split
+        # order so both paths agree to float tolerance.
+        from repro.kernels.dp_clip.ops import dp_clip_mean_noise_cohort
+        from repro.pytree import (
+            tree_gaussian_vector_like, tree_unflatten_from_vector)
 
         leaves = jax.tree_util.tree_leaves(g_per)
         flat = jnp.concatenate(
             [l.reshape(bsz, -1).astype(jnp.float32) for l in leaves], axis=1
         )
-        mean_flat, nrm, frac = dp_clip_mean_flat(flat, cfg.clip_norm)
         template = jax.tree_util.tree_map(lambda l: l[0], g_per)
-        mean = tree_unflatten_from_vector(mean_flat, template)
+        if add_noise:
+            z = tree_gaussian_vector_like(key, template)
+            mean_flat, nrm, frac = dp_clip_mean_noise_cohort(
+                flat[None], cfg.clip_norm,
+                jnp.asarray(stddev, jnp.float32), z[None])
+        else:
+            mean_flat, nrm, frac = dp_clip_mean_noise_cohort(
+                flat[None], cfg.clip_norm)
+        noised = tree_unflatten_from_vector(mean_flat[0], template)
+        return noised, {"mean_grad_norm": nrm[0], "clip_fraction": frac[0]}
     else:
         # per-sample norms over ALL leaves (flatten the non-batch dims)
         sq = sum(
@@ -135,9 +178,7 @@ def dp_mean_gradient(
         nrm = jnp.mean(norms)
         frac = jnp.mean((norms > cfg.clip_norm).astype(jnp.float32))
 
-    stddev = (cfg.noise_multiplier * cfg.clip_norm / bsz
-              if noise_stddev is None else noise_stddev)
-    noised = noise_tree(key, mean, stddev)
+    noised = noise_tree(key, mean, stddev) if add_noise else mean
     return noised, {"mean_grad_norm": nrm, "clip_fraction": frac}
 
 

@@ -104,7 +104,14 @@ def make_local_phase(loss_fn: Callable, fl: FLStepConfig):
 
         def one_local_step(params, inp):
             step_i, step_key, micro_batch = inp
-            # scan over microbatches: clip each microbatch grad (Eq. 4)
+            # scan over microbatches: clip each microbatch grad (Eq. 4).
+            # The microbatch count comes from the BATCH, not fl.n_micro: the
+            # scan below already iterates the batch's actual microbatch dim,
+            # so the accumulator mean and the noise stddev must divide by
+            # the same count — the old static fl.n_micro silently mis-scaled
+            # both whenever the batch layout disagreed with the config.
+            n_micro = jax.tree_util.tree_leaves(micro_batch)[0].shape[0]
+
             def micro(acc, mb):
                 g = jax.grad(lambda p: loss_fn(p, mb))(params)
                 if fl.dp.granularity == "per_microbatch":
@@ -115,10 +122,10 @@ def make_local_phase(loss_fn: Callable, fl: FLStepConfig):
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
             acc, _ = jax.lax.scan(micro, zeros, micro_batch)
-            mean_g = jax.tree_util.tree_map(lambda a: a / fl.n_micro, acc)
+            mean_g = jax.tree_util.tree_map(lambda a: a / n_micro, acc)
             if (fl.dp.granularity == "per_microbatch"
                     and fl.dp.noise_multiplier > 0):
-                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm / fl.n_micro
+                stddev = fl.dp.noise_multiplier * fl.dp.clip_norm / n_micro
                 leaves, treedef = jax.tree_util.tree_flatten(mean_g)
                 keys = jax.random.split(step_key, len(leaves))
                 mean_g = jax.tree_util.tree_unflatten(

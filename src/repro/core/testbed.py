@@ -52,7 +52,8 @@ class TestbedConfig:
     clip_norm: float = 1.0         # paper: C = 1
     sigma: float = 1.0             # paper sweeps {0.5, 1, 1.5, 2}
     use_dp: bool = True
-    use_kernel: bool = False       # route clipping through the Pallas kernel
+    dp_path: str = "jnp"           # "jnp" | "pallas": per-example clip+noise
+                                   # via the fused Pallas kernel hot path
     personalized: bool = False     # per-client local output head (beyond-paper)
     partition: str = "iid"         # iid (paper) | dirichlet (beyond-paper)
     dirichlet_alpha: float = 0.5
@@ -98,6 +99,8 @@ def build_clients(cfg: TestbedConfig, splits) -> list:
     clients; the workload's shared loss closure keeps jitted steps
     common across builds)."""
     from repro.api.workloads import get_workload
+    from repro.core.dp import validate_dp_path
+    validate_dp_path(cfg.dp_path)
     wl = get_workload(cfg.workload)
     loss = wl.shared_loss(cfg.model)
     opt = Adam(lr=cfg.lr)
@@ -123,7 +126,7 @@ def build_clients(cfg: TestbedConfig, splits) -> list:
                 local_epochs=cfg.local_epochs,
                 seed=cfg.seed,
                 use_dp=cfg.use_dp,
-                use_kernel=cfg.use_kernel,
+                dp_path=cfg.dp_path,
                 personal_keys=("out",) if cfg.personalized else (),
             )
         )

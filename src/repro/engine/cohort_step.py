@@ -58,6 +58,21 @@ per-step dispatch = 377 ms per local round):
   computes exactly the simulation math (the tier-1 parity test asserts
   it), with DP on it is the per-microbatch granularity the large
   architectures train under rather than the paper's per-example Eq. 4.
+
+DP implementation (``dp_path``): with ``dp_path="pallas"`` (and DP on)
+the member-major executors above are replaced by a STEP-MAJOR fused
+executor — all K members advance one local step together, so each DP-SGD
+step launches the fused ``repro.kernels.dp_clip`` clip+mean+noise kernel
+ONCE over the whole cohort's stacked (K*B, D) per-example grad matrix
+(not vmap-of-pallas_call per member), with the Gaussian noise added in
+the kernel's final-tile epilogue.  The noise stddev stays the runtime
+scalar argument and the noise draws replay ``noise_tree``'s per-leaf
+split order, so the pallas path keeps both the one-program-per-sigma-
+sweep invariant and float-tolerance parity with ``dp_path="jnp"`` and
+the legacy loop (asserted by tests/test_dp_path_engine.py).  Padded
+mask members ride along exactly like every other masked step: their
+kernel row is computed and discarded (``n_steps=0`` masks the update,
+the merge gives them coefficient 0).
 """
 from __future__ import annotations
 
@@ -68,7 +83,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.dp import DPConfig, dp_mean_gradient
+from repro.core.dp import (
+    DPConfig, dp_mean_gradient, per_example_grads, validate_dp_path)
 
 # flat-unroll the local-step loop up to this length; beyond it, fall back
 # to a rolled scan to keep compile times bounded
@@ -106,6 +122,25 @@ def _tree_where(mask, new, old):
         lambda n, o: jnp.where(mask, n, o), new, old)
 
 
+def _tree_where_members(live, new, old):
+    """Per-member select over stacked (K, ...) trees: ``live`` is (K,)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(live.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o), new, old)
+
+
+def _unflatten_members(mat, template):
+    """(K, D) flat member vectors -> stacked tree with leaves (K, ...)
+    shaped/typed like ``template`` (a single member's tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        out.append(mat[:, off:off + l.size]
+                   .reshape((mat.shape[0],) + l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def constrain_tree(tree, client_shardings):
     """Apply the shardings to every leaf: a callable rule (CohortSharding)
     maps each leaf's shape to its sharding; a raw pytree of shardings is
@@ -123,7 +158,7 @@ def constrain_tree(tree, client_shardings):
 
 
 def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
-                     use_dp: bool = True, use_kernel: bool = False,
+                     use_dp: bool = True, dp_path: str = "jnp",
                      client_axis: str = "unroll", client_shardings=None,
                      fl_cfg=None, arena: bool = False,
                      donate_globals: bool = False, donate: bool = True,
@@ -186,6 +221,13 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     ``fl_cfg`` (an ``FLStepConfig``) is required by the ``"fl_step"``
     executor and ignored by the others.
 
+    ``dp_path`` selects the per-example DP implementation: ``"jnp"``
+    (reference) or ``"pallas"`` — the fused clip+mean+noise kernel run
+    STEP-MAJOR, one launch over the whole cohort's stacked (K*B, D)
+    per-example grad matrix per local step (see the module docstring).
+    Incompatible with ``client_axis="fl_step"`` (per-microbatch
+    mechanism); ignored when ``use_dp=False``.
+
     Both data-path variants take a trailing ``noise_stddev`` argument — a
     runtime float32 scalar carrying the DP noise scale ``sigma * C / B``
     (computed ON THE HOST by the runner so it rounds to the same float32
@@ -222,10 +264,17 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     # out for every sigma
     dp_cfg = replace(dp_cfg, noise_multiplier=0.0)
     validate_client_axis(client_axis)
+    validate_dp_path(dp_path)
     if client_axis == "fl_step" and fl_cfg is None:
         raise ValueError(
             "client_axis='fl_step' drives the production local round and "
             "needs an FLStepConfig (EngineConfig.fl_cfg / fl_cfg=)")
+    if client_axis == "fl_step" and dp_path == "pallas":
+        raise ValueError(
+            "dp_path='pallas' fuses the PER-EXAMPLE clip+noise mechanism "
+            "(paper Eq. 4-6); client_axis='fl_step' runs the per-microbatch "
+            "production mechanism from fl_cfg.dp — use dp_path='jnp' there")
+    fused_dp = bool(use_dp and dp_path == "pallas")
     if arena and client_shardings is not None and not callable(client_shardings):
         raise ValueError(
             "the arena data path needs a shape-aware callable shardings "
@@ -243,7 +292,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             # add_noise=False: fall back to the (sigma-stripped) static
             # config — a concrete 0.0 stddev short-circuits noise_tree
             grad, _aux = dp_mean_gradient(
-                loss_fn, params, batch, key, dp_cfg, use_kernel=use_kernel,
+                loss_fn, params, batch, key, dp_cfg,
                 noise_stddev=noise_stddev if add_noise else None)
         else:
             grad = jax.grad(
@@ -306,12 +355,83 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             # server-side merge is the engine's weights-vector reduction)
             return fl_local(params, micro, key, n_steps=steps), opt_state
 
+    if fused_dp:
+        from repro.kernels.dp_clip.ops import dp_clip_mean_noise_cohort
+        from repro.pytree import tree_gaussian_vector_like
+
+        def fused_one_step(stacked_params, stacked_opt, ks, batch_s,
+                           step_i, n_steps, noise_stddev):
+            """All K members' DP-SGD step s, ONE fused kernel launch over
+            the stacked (K*B, D) per-example grad matrix.  Per-member math
+            (clip scales, mean, noise draws keyed off the same
+            ``split(key)`` chain) is identical to ``one_step``'s
+            ``dp_mean_gradient`` — only the launch granularity changes."""
+            live = step_i < n_steps                       # (K,)
+            splits = jax.vmap(jax.random.split)(ks)       # (K, 2, key)
+            k_next, subs = splits[:, 0], splits[:, 1]
+            g_per = jax.vmap(
+                lambda p, b: per_example_grads(loss_fn, p, b))(
+                    stacked_params, batch_s)              # leaves (K, B, ...)
+            leaves = jax.tree_util.tree_leaves(g_per)
+            K, bsz = leaves[0].shape[0], leaves[0].shape[1]
+            flat = jnp.concatenate(
+                [l.reshape(K, bsz, -1).astype(jnp.float32) for l in leaves],
+                axis=2)                                   # (K, B, D)
+            template = jax.tree_util.tree_map(lambda l: l[0, 0], g_per)
+            if add_noise:
+                z = jax.vmap(
+                    lambda k: tree_gaussian_vector_like(k, template))(subs)
+                means, _, _ = dp_clip_mean_noise_cohort(
+                    flat, dp_cfg.clip_norm, noise_stddev, z)
+            else:
+                means, _, _ = dp_clip_mean_noise_cohort(flat, dp_cfg.clip_norm)
+            grads = _unflatten_members(means, template)
+            p_new, o_new = jax.vmap(opt.update)(
+                grads, stacked_opt, stacked_params)
+            return (_tree_where_members(live, p_new, stacked_params),
+                    _tree_where_members(live, o_new, stacked_opt),
+                    jnp.where(live[:, None], k_next, ks))
+
+        def run_members_fused(stacked_params, stacked_opt, keys, batches,
+                              n_steps, noise_stddev):
+            """Step-major executor for the pallas DP path: the local-step
+            loop is OUTSIDE the member axis so every iteration is one
+            cohort-wide kernel launch (batches leaves are (K, S_max, B,
+            ...))."""
+            s_max = jax.tree_util.tree_leaves(batches)[0].shape[1]
+            if s_max <= _MAX_FULL_UNROLL:
+                p, o, k = stacked_params, stacked_opt, keys
+                for s in range(s_max):
+                    batch_s = jax.tree_util.tree_map(
+                        lambda l: l[:, s], batches)
+                    p, o, k = fused_one_step(
+                        p, o, k, batch_s, s, n_steps, noise_stddev)
+                return p, o
+
+            step_major = jax.tree_util.tree_map(
+                lambda l: jnp.moveaxis(l, 1, 0), batches)  # (S_max, K, B, ..)
+
+            def body(carry, inp):
+                step_i, batch_s = inp
+                p, o, k = carry
+                return fused_one_step(p, o, k, batch_s, step_i, n_steps,
+                                      noise_stddev), None
+
+            (p, o, _), _ = jax.lax.scan(
+                body, (stacked_params, stacked_opt, keys),
+                (jnp.arange(s_max), step_major))
+            return p, o
+
     def run_members(stacked_params, stacked_opt, keys, batches, n_steps,
                     noise_stddev):
         """The client-axis executor switch over one stacked cohort
         (``noise_stddev`` is shared across members — broadcast, never
         stacked; the fl_step executor ignores it, its noise lives in
-        ``fl_cfg.dp``)."""
+        ``fl_cfg.dp``).  ``dp_path="pallas"`` overrides the member-major
+        executors with the step-major fused-kernel executor above."""
+        if fused_dp:
+            return run_members_fused(stacked_params, stacked_opt, keys,
+                                     batches, n_steps, noise_stddev)
         if client_axis == "vmap":
             return jax.vmap(local_phase,
                             in_axes=(0, 0, 0, 0, 0, None))(
@@ -450,7 +570,7 @@ def _shardings_key(client_shardings):
         return _UNCACHEABLE
 
 
-def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
+def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, dp_path="jnp",
                        client_axis="unroll", client_shardings=None,
                        fl_cfg=None, arena=False, donate_globals=False,
                        donate=True, add_noise=True):
@@ -472,7 +592,7 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
 
     def build():
         return make_cohort_step(
-            loss_fn, dp_cfg, opt, use_dp=use_dp, use_kernel=use_kernel,
+            loss_fn, dp_cfg, opt, use_dp=use_dp, dp_path=dp_path,
             client_axis=client_axis, client_shardings=client_shardings,
             fl_cfg=fl_cfg, arena=arena, donate_globals=donate_globals,
             donate=donate, add_noise=add_noise)
@@ -480,7 +600,7 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, use_kernel=False,
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:
         return build()
-    key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, use_kernel,
+    key = (_hashable_loss(loss_fn), dp_cfg, opt, use_dp, dp_path,
            client_axis, fl_cfg, sh_key, arena, donate_globals, donate,
            add_noise)
     try:

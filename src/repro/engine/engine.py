@@ -207,7 +207,7 @@ class CohortRunner:
         c0 = clients[0]
         for c in clients:
             if (c.dp_cfg != c0.dp_cfg or c.use_dp != c0.use_dp
-                    or c.use_kernel != c0.use_kernel or c.opt != c0.opt
+                    or c.dp_path != c0.dp_path or c.opt != c0.opt
                     or c.batch_size != c0.batch_size
                     or not (c.loss_fn is c0.loss_fn
                             or c.loss_fn == c0.loss_fn)):
@@ -262,9 +262,17 @@ class CohortRunner:
                                 and not any(
                                     c.personal_keys for c in clients))
         add_noise = bool(c0.use_dp and c0.dp_cfg.noise_multiplier > 0)
+        self.dp_path = c0.dp_path if c0.use_dp else "jnp"
+        # record the resolved Pallas interpret decision (backend + mode +
+        # source) whenever the kernel path is in play: a silent
+        # interpreted fallback on a compiled-capable backend must be
+        # visible in RunLog.engine_stats and the bench rows
+        from repro.kernels.common import interpret_info
+        self.interpret_info = (interpret_info()
+                               if self.dp_path == "pallas" else None)
         self.cohort_step, self.merge_cohort = cached_cohort_step(
             c0.loss_fn, c0.dp_cfg, c0.opt, use_dp=c0.use_dp,
-            use_kernel=c0.use_kernel, client_axis=cfg.client_axis,
+            dp_path=self.dp_path, client_axis=cfg.client_axis,
             client_shardings=client_shardings, fl_cfg=cfg.fl_cfg,
             arena=self.use_arena, donate_globals=self.donates_globals,
             donate=not self.pipelined, add_noise=add_noise)
@@ -420,6 +428,8 @@ class CohortRunner:
         no device->host transfer)."""
         return {
             "data_path": "arena" if self.use_arena else "host",
+            "dp_path": self.dp_path,
+            "pallas_interpret": self.interpret_info,
             "cohorts": self.cohorts_run,
             "h2d_bytes_total": int(self.h2d_bytes_total),
             "h2d_bytes_per_cohort": (

@@ -1,11 +1,85 @@
-"""Shared kernel plumbing: interpret-mode selection.
+"""Shared kernel-layer policy: when do Pallas bodies run interpreted?
 
-Kernels TARGET TPU (pl.pallas_call + BlockSpec VMEM tiling); on this
-CPU-only container they are validated in interpret=True mode, which
-executes the kernel body in Python for correctness (assignment: 'VALIDATE
-them in interpret=True mode').
+Pallas kernels compile to real accelerator programs on TPU and GPU
+(Mosaic / Triton lowering).  On CPU-only hosts the bodies must run under
+``interpret=True`` (pure-Python emulation) or ``pallas_call`` fails to
+lower.  The old policy here was ``backend != "tpu"`` — which silently
+ran the *interpreted* body on GPU, orders of magnitude slower than the
+jnp path the kernels are meant to beat.
+
+Resolution order for :func:`interpret_mode`:
+
+1. process-level override set via :func:`set_interpret_override`
+   (tests, benchmarks),
+2. the ``REPRO_PALLAS_INTERPRET`` environment variable (``1/true/yes``
+   forces interpreted, ``0/false/no`` forces compiled),
+3. backend capability: compiled on TPU and GPU (``tpu``/``gpu``/
+   ``cuda``/``rocm``), interpreted elsewhere (CPU).
+
+:func:`interpret_info` reports the resolved mode *and* which of the
+three sources decided it — benchmark rows and ``RunLog.engine_stats``
+record this so a silent interpreted fallback on a compiled-capable
+backend is visible (``summarize.py --check-engine`` fails on it).
 """
+from __future__ import annotations
+
+import os
+from typing import Optional
+
 import jax
 
+# Backends whose Pallas lowering produces a real compiled kernel.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+# Process-level override (None = defer to env / backend capability).
+_override: Optional[bool] = None
+
+
+def set_interpret_override(mode: Optional[bool]) -> Optional[bool]:
+    """Force interpret mode for this process (``None`` clears the
+    override).  Returns the previous override so tests can restore it."""
+    global _override
+    prev = _override
+    _override = mode
+    return prev
+
+
+def _env_override() -> Optional[bool]:
+    raw = os.environ.get(_ENV_VAR)
+    if raw is None:
+        return None
+    v = raw.strip().lower()
+    if v in _TRUE:
+        return True
+    if v in _FALSE:
+        return False
+    raise ValueError(
+        f"{_ENV_VAR}={raw!r}: expected one of {_TRUE + _FALSE}")
+
+
 def interpret_mode() -> bool:
-    return jax.default_backend() != "tpu"
+    """True when Pallas bodies should run interpreted on this host."""
+    return interpret_info()["interpret"]
+
+
+def interpret_info() -> dict:
+    """Resolved interpret decision with provenance.
+
+    Returns ``{"backend": str, "interpret": bool, "source": str}`` where
+    ``source`` is ``"override"``, ``"env"``, or ``"auto"`` (backend
+    capability).
+    """
+    backend = jax.default_backend()
+    if _override is not None:
+        return {"backend": backend, "interpret": _override,
+                "source": "override"}
+    env = _env_override()
+    if env is not None:
+        return {"backend": backend, "interpret": env, "source": "env"}
+    return {"backend": backend,
+            "interpret": backend not in _COMPILED_BACKENDS,
+            "source": "auto"}

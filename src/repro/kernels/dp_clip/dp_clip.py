@@ -1,16 +1,28 @@
-"""Fused per-sample gradient clip + accumulate — the DP-SGD hot spot
-(what Opacus spends its time on), as two tiled Pallas TPU kernels.
+"""Fused per-sample gradient clip + accumulate (+ noise) — the DP-SGD
+hot spot (what Opacus spends its time on), as two tiled Pallas TPU
+kernels, cohort-aware so the engine launches ONE program per cohort step.
 
 TPU adaptation (DESIGN.md sec 3): instead of Opacus' hook-based per-layer
-GPU pass, the flattened per-example grad matrix (B, D) is swept twice with
+GPU pass, the flattened per-example grad matrix — (B, D) for a single
+client, (K*B, D) for a whole stacked cohort — is swept twice with
 MXU/VPU-aligned VMEM tiles:
 
   pass 1 (sqnorm):  grid (nB, nD); each step reduces a (TB, TD) tile to a
-                    (TB,) partial sum accumulated into the (B,) norms.
-  pass 2 (scale+mean): grid (nD, nB); each step loads a (TB, TD) tile,
-                    multiplies by the per-sample scale min(1, C/||g_i||)
-                    broadcast from a (TB,) slice, and accumulates the
-                    batch-mean into the (TD,) output.
+                    (TB,) partial sum accumulated into the row norms.
+  pass 2 (scale+mean+noise): grid (K, nD, nB); each step loads member
+                    m's i-th (TB, TD) row tile, multiplies by the
+                    per-sample scale min(1, C/||g_i||) broadcast from a
+                    (TB,) slice, and accumulates the batch-mean into the
+                    member's (1, TD) output row.  On the LAST row tile an
+                    epilogue fuses the Gaussian-mechanism noise add:
+                    out += stddev * z, with the stddev a (1, 1) runtime
+                    scalar — sigma stays out of the compiled program so
+                    one program serves the whole sigma sweep (PR-5
+                    invariant).
+
+Cohort padding composes with the engine's pow2 cohort padding: mask
+members carry zero grads, so their rows clip to scale 1 and contribute
+zero to their own (discarded) output row.
 
 Tiles default to (128, 512) f32 = 256 KiB live VMEM per step — far under
 the ~16 MiB/core budget, leaving room for double buffering.
@@ -42,8 +54,8 @@ def _sqnorm_kernel(flat_ref, out_ref):
 
 
 def _scale_mean_kernel(flat_ref, scale_ref, out_ref, *, inv_b: float):
-    """grid (nD, nB): out[d] += sum_b scale[b] * flat[b, d] * (1/B)."""
-    i = pl.program_id(1)
+    """grid (K, nD, nB): out[m, d] += sum_b scale[m*B+b] * flat[m*B+b, d] / B."""
+    i = pl.program_id(2)
     tile = flat_ref[...].astype(jnp.float32)          # (TB, TD)
     scales = scale_ref[...]                           # (TB,)
 
@@ -51,11 +63,31 @@ def _scale_mean_kernel(flat_ref, scale_ref, out_ref, *, inv_b: float):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += jnp.sum(tile * scales[:, None], axis=0) * inv_b
+    out_ref[...] += (jnp.sum(tile * scales[:, None], axis=0) * inv_b)[None, :]
+
+
+def _scale_mean_noise_kernel(flat_ref, scale_ref, z_ref, std_ref, out_ref,
+                             *, inv_b: float, n_b: int):
+    """_scale_mean_kernel + fused Gaussian epilogue on the last row tile:
+    out[m] += std * z[m], with std a runtime (1, 1) scalar."""
+    i = pl.program_id(2)
+    tile = flat_ref[...].astype(jnp.float32)          # (TB, TD)
+    scales = scale_ref[...]                           # (TB,)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += (jnp.sum(tile * scales[:, None], axis=0) * inv_b)[None, :]
+
+    @pl.when(i == n_b - 1)
+    def _noise_epilogue():
+        out_ref[...] += std_ref[0, 0] * z_ref[...].astype(jnp.float32)
 
 
 def sqnorms(flat, *, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
             interpret: bool = True):
+    """Per-row squared norms of a tile-aligned (R, D) matrix."""
     B, D = flat.shape
     tb, td = min(tb, B), min(td, D)
     grid = (pl.cdiv(B, tb), pl.cdiv(D, td))
@@ -69,20 +101,57 @@ def sqnorms(flat, *, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
     )(flat)
 
 
+def cohort_scale_mean(flat, scales, *, k: int, inv_b: float,
+                      z=None, stddev=None,
+                      tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
+                      interpret: bool = True):
+    """Per-member clipped batch mean over a stacked cohort, one launch.
+
+    flat:   (K*Bp, Dp) member-major per-example grads, Bp % tb == 0.
+    scales: (K*Bp,) per-sample clip scales.
+    z:      optional (K, Dp) standard-normal draws; when given, ``stddev``
+            (a (1, 1) float32 array, runtime-valued) scales them and the
+            kernel adds the noise in the final-tile epilogue.
+    inv_b:  1 / B_real — padded rows are zero so they add nothing and no
+            post-hoc rescale is needed.
+
+    Returns (K, Dp) float32 means (noised when z is given).
+    """
+    kb, Dp = flat.shape
+    bp = kb // k
+    tb, td = min(tb, bp), min(td, Dp)
+    n_b = pl.cdiv(bp, tb)
+    grid = (k, pl.cdiv(Dp, td), n_b)
+    flat_spec = pl.BlockSpec((tb, td), lambda m, j, i: (m * n_b + i, j))
+    scale_spec = pl.BlockSpec((tb,), lambda m, j, i: (m * n_b + i,))
+    out_spec = pl.BlockSpec((1, td), lambda m, j, i: (m, j))
+    out_shape = jax.ShapeDtypeStruct((k, Dp), jnp.float32)
+    if z is None:
+        kern = functools.partial(_scale_mean_kernel, inv_b=inv_b)
+        return pl.pallas_call(
+            kern, grid=grid,
+            in_specs=[flat_spec, scale_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(flat, scales)
+    kern = functools.partial(_scale_mean_noise_kernel, inv_b=inv_b, n_b=n_b)
+    return pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[
+            flat_spec, scale_spec,
+            pl.BlockSpec((1, td), lambda m, j, i: (m, j)),
+            pl.BlockSpec((1, 1), lambda m, j, i: (0, 0)),
+        ],
+        out_specs=out_spec, out_shape=out_shape,
+        interpret=interpret,
+    )(flat, scales, z, stddev)
+
+
 def scale_mean(flat, scales, *, tb: int = DEFAULT_TB, td: int = DEFAULT_TD,
                interpret: bool = True):
+    """Single-member (K=1) clipped batch mean — thin cohort wrapper kept
+    for the unit-level kernel tests."""
     B, D = flat.shape
-    tb, td = min(tb, B), min(td, D)
-    grid = (pl.cdiv(D, td), pl.cdiv(B, tb))
-    kern = functools.partial(_scale_mean_kernel, inv_b=1.0 / B)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tb, td), lambda j, i: (i, j)),
-            pl.BlockSpec((tb,), lambda j, i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((td,), lambda j, i: (j,)),
-        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
-        interpret=interpret,
-    )(flat, scales)
+    out = cohort_scale_mean(flat, scales, k=1, inv_b=1.0 / B,
+                            tb=tb, td=td, interpret=interpret)
+    return out[0]

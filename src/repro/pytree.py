@@ -51,6 +51,19 @@ def tree_gaussian_like(key, tree, stddev):
     return jax.tree_util.tree_unflatten(treedef, noised)
 
 
+def tree_gaussian_vector_like(key, tree) -> jax.Array:
+    """Standard-normal draws matching :func:`tree_gaussian_like`'s exact
+    per-leaf split/sample order, flattened to one f32 vector (the fused
+    DP kernel's noise input: kernel adds ``stddev * z`` so the noised
+    result matches the jnp path's ``noise_tree`` draw for draw)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jnp.concatenate([
+        jax.random.normal(k, l.shape, jnp.float32).reshape(-1)
+        for k, l in zip(keys, leaves)
+    ])
+
+
 def tree_size(tree) -> int:
     return sum(l.size for l in jax.tree_util.tree_leaves(tree))
 

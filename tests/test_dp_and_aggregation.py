@@ -80,11 +80,42 @@ def test_dp_kernel_path_matches_jnp_path():
     batch = {"x": jax.random.normal(key, (32, 16)), "y": jnp.zeros((32, 16))}
     cfg = DPConfig(clip_norm=0.7, noise_multiplier=0.0)
     g_jnp, _ = dp_mean_gradient(_quad_loss, params, batch, key, cfg,
-                                use_kernel=False)
+                                dp_path="jnp")
     g_ker, _ = dp_mean_gradient(_quad_loss, params, batch, key, cfg,
-                                use_kernel=True)
+                                dp_path="pallas")
     np.testing.assert_allclose(np.asarray(g_jnp["w"]), np.asarray(g_ker["w"]),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_dp_kernel_path_fused_noise_matches_noise_tree():
+    """The pallas path's in-kernel noise epilogue replays noise_tree's
+    exact per-leaf draws: with sigma > 0 both paths agree to float
+    tolerance (a 2-leaf tree exercises the split order)."""
+    key = jax.random.PRNGKey(4)
+    params = {"w": jnp.ones((16,)), "b": {"c": jnp.ones((4, 3))}}
+
+    def loss(p, ex):
+        return (jnp.sum((p["w"] * ex["x"] - ex["y"]) ** 2)
+                + jnp.sum(p["b"]["c"] ** 2) * jnp.sum(ex["x"]))
+
+    batch = {"x": jax.random.normal(key, (32, 16)), "y": jnp.zeros((32, 16))}
+    cfg = DPConfig(clip_norm=0.7, noise_multiplier=1.5)
+    for nkey in (jax.random.PRNGKey(7), jax.random.PRNGKey(8)):
+        g_jnp, _ = dp_mean_gradient(loss, params, batch, nkey, cfg,
+                                    dp_path="jnp")
+        g_ker, _ = dp_mean_gradient(loss, params, batch, nkey, cfg,
+                                    dp_path="pallas")
+        for a, b in zip(jax.tree_util.tree_leaves(g_jnp),
+                        jax.tree_util.tree_leaves(g_ker)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_dp_mean_gradient_rejects_unknown_dp_path():
+    with pytest.raises(ValueError, match="dp_path"):
+        dp_mean_gradient(_quad_loss, {"w": jnp.ones((4,))},
+                         {"x": jnp.ones((2, 4)), "y": jnp.zeros((2, 4))},
+                         jax.random.PRNGKey(0), DPConfig(), dp_path="tpu")
 
 
 # ---------------------------------------------------------------------------

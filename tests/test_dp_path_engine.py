@@ -1,0 +1,174 @@
+"""dp_path engine parity: the fused Pallas clip+noise hot path must be a
+pure implementation swap — params allclose vs the jnp path and the legacy
+per-client loop with IDENTICAL privacy/update bookkeeping, on both the
+single-device unroll executor and the forced-8-device sharded mesh, and
+one compiled program across the paper's whole sigma grid (the runtime
+noise-stddev argument)."""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.testbed import TestbedConfig, run_experiment
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import EngineConfig, cohort_step
+from repro.models.ser_cnn import SERConfig
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs multiple devices (CI: XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+# Tiny model on purpose: interpret-mode pallas unrolls the whole kernel
+# grid into the traced program, so compile time scales with param count —
+# the small CNN keeps the grid a handful of tiles while exercising the
+# identical multi-leaf conv/dense tree structure.
+_DIMS = dict(time_frames=12, n_mels=12)
+
+
+def _dp_cfg(dp_path, num_clients=5, seed=3):
+    return TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=16, num_clients=num_clients,
+        data=SERDataConfig(n_total=72 * num_clients, **_DIMS),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **_DIMS),
+        seed=seed, dp_path=dp_path)
+
+
+def _assert_params_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_books_match(log_a, log_b):
+    assert log_a.update_counts == log_b.update_counts
+    assert log_a.eps_trajectory == log_b.eps_trajectory
+    assert log_a.staleness == log_b.staleness
+    assert log_a.times == log_b.times
+
+
+# ---------------------------------------------------------------------------
+# unroll executor: pallas vs jnp vs legacy (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def test_engine_pallas_matches_jnp_and_legacy():
+    """Three executions of the same DP FedAsync run — engine/jnp,
+    engine/pallas (ONE fused kernel launch per cohort step), and the
+    legacy loop routed through the pallas dp_path — must agree: the noise
+    epilogue replays ``noise_tree``'s exact Gaussian draws, so this is a
+    tight comparison, not a statistical one."""
+    kw = dict(max_updates=10, eval_every=5, alpha=0.4)
+    cfg_j = _dp_cfg("jnp")
+    cfg_p = _dp_cfg("pallas")
+    p_j, log_j = run_experiment("fedasync", cfg_j, engine="cohort", **kw)
+    p_p, log_p = run_experiment("fedasync", cfg_p, engine="cohort", **kw)
+    p_l, log_l = run_experiment("fedasync", cfg_p, engine="legacy", **kw)
+    _assert_params_close(p_j, p_p)
+    _assert_params_close(p_l, p_p)
+    _assert_books_match(log_j, log_p)
+    _assert_books_match(log_l, log_p)
+    # provenance: the run must record which DP path executed and, for the
+    # kernel path, the resolved interpret decision + its source
+    assert log_j.engine_stats["dp_path"] == "jnp"
+    assert log_j.engine_stats["pallas_interpret"] is None
+    assert log_p.engine_stats["dp_path"] == "pallas"
+    info = log_p.engine_stats["pallas_interpret"]
+    assert info["backend"] == jax.default_backend()
+    assert info["source"] in ("override", "env", "auto")
+
+
+def test_engine_pallas_windowed_cohorts_match_jnp():
+    """Multi-member cohorts through the step-major fused executor: one
+    kernel launch per local step over the stacked (K*B, D) matrix."""
+    kw = dict(max_updates=8, eval_every=4, alpha=0.4, engine="cohort")
+    ec = EngineConfig(staleness_window=1e9, max_cohort=4)
+    p_j, log_j = run_experiment("fedasync", _dp_cfg("jnp"),
+                                engine_cfg=ec, **kw)
+    p_p, log_p = run_experiment("fedasync", _dp_cfg("pallas"),
+                                engine_cfg=ec, **kw)
+    _assert_params_close(p_j, p_p)
+    _assert_books_match(log_j, log_p)
+    assert log_j.cohort_sizes == log_p.cohort_sizes
+    assert max(log_p.cohort_sizes) > 1     # the window actually batched
+
+
+def test_engine_rejects_pallas_with_fl_step_axis():
+    """client_axis='fl_step' runs the production per-microbatch DP
+    mechanism — the per-example kernel cannot substitute for it."""
+    with pytest.raises(ValueError, match="fl_step"):
+        run_experiment(
+            "fedasync", _dp_cfg("pallas"),
+            max_updates=2, eval_every=2, alpha=0.4, engine="cohort",
+            engine_cfg=EngineConfig(client_axis="fl_step"))
+
+
+def test_engine_rejects_unknown_dp_path():
+    with pytest.raises(ValueError, match="dp_path"):
+        run_experiment("fedasync", _dp_cfg("triton"),
+                       max_updates=2, eval_every=2, alpha=0.4,
+                       engine="cohort")
+
+
+# ---------------------------------------------------------------------------
+# sigma grid: one compiled program (the PR-5 runtime-noise invariant)
+# ---------------------------------------------------------------------------
+
+def test_pallas_sigma_sweep_shares_one_compiled_step():
+    """The fused kernel takes noise_stddev as a RUNTIME scalar: after the
+    first sigma compiles, the rest of the paper's grid must replay the
+    same program (step_builds delta == 0), each agreeing with the jnp
+    path at its own sigma."""
+    sigmas = (0.5, 1.0, 1.5, 2.0)
+    kw = dict(max_updates=6, eval_every=6, alpha=0.4, engine="cohort")
+
+    def run(path, sigma):
+        return run_experiment(
+            "fedasync", replace(_dp_cfg(path), sigma=sigma), **kw)
+
+    run("pallas", sigmas[0])               # compile both paths once
+    run("jnp", sigmas[0])
+    b0 = cohort_step.step_builds()
+    for sg in sigmas:
+        p_p, log_p = run("pallas", sg)
+        p_j, log_j = run("jnp", sg)
+        _assert_params_close(p_j, p_p)
+        _assert_books_match(log_j, log_p)
+    assert cohort_step.step_builds() == b0
+
+
+# ---------------------------------------------------------------------------
+# sharded mesh: padded uneven cohorts through the fused kernel
+# ---------------------------------------------------------------------------
+
+def _mesh_dp_cfg(dp_path):
+    return _dp_cfg(dp_path, num_clients=len(jax.devices()), seed=0)
+
+
+@multi_device
+def test_sharded_padded_cohorts_pallas_matches_jnp():
+    """UNEVEN cohorts (max_cohort not dividing the data axis) on the
+    forced-8-device mesh: the arena path pads them to the bucket size —
+    padded members must contribute nothing through the kernel (their
+    zero gradients clip to zero and their updates are masked out)."""
+    from repro.engine import cohort_mesh
+    mesh = cohort_mesh()
+    n = mesh.shape["data"]
+    k = max(2, (3 * n) // 4)
+    if k % n == 0:
+        pytest.skip(f"{n} devices admit no uneven max_cohort")
+    ec = EngineConfig(staleness_window=1e9, max_cohort=k,
+                      client_axis="vmap", mesh=mesh, pow2_cohorts=False)
+    kw = dict(max_updates=2 * k, eval_every=k, alpha=0.4, engine="cohort")
+    p_j, log_j = run_experiment("fedasync", _mesh_dp_cfg("jnp"),
+                                engine_cfg=ec, **kw)
+    p_p, log_p = run_experiment("fedasync", _mesh_dp_cfg("pallas"),
+                                engine_cfg=ec, **kw)
+    _assert_params_close(p_j, p_p)
+    _assert_books_match(log_j, log_p)
+    assert log_j.cohort_sizes == log_p.cohort_sizes
+    assert log_p.engine_stats["dp_path"] == "pallas"
+    for leaf in jax.tree_util.tree_leaves(p_p):
+        assert bool(np.isfinite(np.asarray(leaf)).all())

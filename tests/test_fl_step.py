@@ -66,3 +66,43 @@ def test_local_phase_step_count_from_batch_and_mask():
     np.testing.assert_allclose(np.asarray(masked["w"]), np.asarray(ref2["w"]),
                                rtol=1e-6)
     assert not np.allclose(np.asarray(full["w"]), np.asarray(masked["w"]))
+
+
+def test_local_phase_micro_divisor_from_batch():
+    """Regression: ``one_local_step`` divided the accumulated microbatch
+    grads — and the Eq. 5 noise stddev — by the STATIC ``fl.n_micro``
+    while scanning the batch's ACTUAL microbatch dim, silently mis-
+    scaling both whenever the batch layout disagreed with the config.
+    Both divisors now derive from the batch, so two configs differing
+    only in ``n_micro`` must produce identical updates from the same
+    batch (noise on: the stddev divisor is exercised too)."""
+    def loss(p, b):
+        return jnp.mean((p["w"] - b["x"]) ** 2)
+
+    params = {"w": jnp.zeros((3,))}
+    key = jax.random.PRNGKey(1)
+    # batch laid out with 2 microbatches per local step
+    batch = {"x": jnp.linspace(-1.0, 1.0, 1 * 2 * 2 * 3).reshape(1, 2, 2, 3)}
+    dp = DPConfig(clip_norm=0.5, noise_multiplier=1.3,
+                  granularity="per_microbatch")
+    out = {}
+    for n_micro in (2, 8):       # 8 disagrees with the batch's 2
+        fl = FLStepConfig(num_clients=1, n_local=1, n_micro=n_micro,
+                          local_lr=0.1, dp=dp)
+        out[n_micro] = make_local_phase(loss, fl)(params, batch, key)
+    np.testing.assert_allclose(np.asarray(out[2]["w"]),
+                               np.asarray(out[8]["w"]), rtol=1e-6)
+    # and the batch-derived scaling is the CORRECT one: with noise off,
+    # the update equals local_lr * mean of the 2 clipped microbatch grads
+    fl0 = FLStepConfig(num_clients=1, n_local=1, n_micro=8, local_lr=0.1,
+                       dp=DPConfig(clip_norm=0.5, noise_multiplier=0.0,
+                                   granularity="per_microbatch"))
+    got = make_local_phase(loss, fl0)(params, batch, key)
+    from repro.core.dp import clip_tree
+    acc = jnp.zeros((3,))
+    for m in range(2):
+        g = jax.grad(lambda p: loss(p, {"x": batch["x"][0, m]}))(params)
+        acc = acc + clip_tree(g, 0.5)[0]["w"]
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               np.asarray(-0.1 * acc / 2), rtol=1e-5,
+                               atol=1e-7)

@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.kernels.dp_clip.ops import dp_clip_mean_flat
+from repro.kernels.dp_clip.ops import dp_clip_mean_flat, dp_clip_mean_noise_cohort
 from repro.kernels.dp_clip.ref import dp_clip_mean_flat_ref
 from repro.kernels.flash_attn.ops import flash_decode
 from repro.kernels.flash_attn.ref import flash_decode_ref
@@ -38,6 +39,122 @@ def test_dp_clip_bounds_norms():
     scales = 1.0 / jnp.maximum(1.0, norms / C)
     clipped_norms = norms * scales
     assert float(clipped_norms.max()) <= C * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("B,D", [
+    (1, 64),       # single example: tb clamps to 1
+    (1, 1),        # degenerate both axes
+    (13, 257),     # prime B and D — every axis pads
+    (8, 100),      # D below the default tile width
+    (3, 700),      # B below tile, D above one tile
+])
+def test_dp_clip_awkward_shapes_match_ref(B, D):
+    """The tile-size selection must handle every residue class, not just
+    tile-divisible shapes (the old ``min(128, B) if B % ... else 128``
+    logic was dead — tb is now clamped then padded unconditionally)."""
+    key = jax.random.PRNGKey(B * 1000 + D)
+    flat = jax.random.normal(key, (B, D), jnp.float32)
+    mean, nrm, frac = dp_clip_mean_flat(flat, 1.0)
+    mean_r, nrm_r, frac_r = dp_clip_mean_flat_ref(flat, 1.0)
+    np.testing.assert_allclose(mean, mean_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(nrm, nrm_r, rtol=1e-5)
+    np.testing.assert_allclose(frac, frac_r, rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 48), D=st.integers(1, 200),
+       clip=st.floats(0.2, 4.0), seed=st.integers(0, 2**16))
+def test_dp_clip_shape_property(B, D, clip, seed):
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(key, (B, D), jnp.float32) * 0.8
+    mean, nrm, frac = dp_clip_mean_flat(flat, clip)
+    mean_r, nrm_r, frac_r = dp_clip_mean_flat_ref(flat, clip)
+    np.testing.assert_allclose(mean, mean_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(nrm, nrm_r, rtol=1e-5)
+    np.testing.assert_allclose(frac, frac_r, rtol=1e-6)
+
+
+def test_dp_clip_cohort_matches_per_member_ref():
+    """One launch over the stacked (K*B, D) matrix == K independent
+    per-member clip+means; an all-zero member (the padded-mask case)
+    contributes an exactly-zero mean row."""
+    K, B, D = 4, 16, 70
+    key = jax.random.PRNGKey(5)
+    g = jax.random.normal(key, (K, B, D), jnp.float32)
+    g = g.at[2].set(0.0)                       # a padded / masked member
+    means, nrm, frac = dp_clip_mean_noise_cohort(g, 1.0)
+    assert means.shape == (K, D)
+    for m in range(K):
+        mean_r, nrm_r, frac_r = dp_clip_mean_flat_ref(g[m], 1.0)
+        np.testing.assert_allclose(means[m], mean_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(nrm[m], nrm_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(frac[m], frac_r, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(means[2]), 0.0)
+
+
+def test_dp_clip_cohort_fused_noise_epilogue():
+    """The fused epilogue adds exactly stddev * z on the final batch tile
+    — for a runtime stddev value, so one compiled program serves a whole
+    sigma sweep."""
+    K, B, D = 3, 8, 130
+    key = jax.random.PRNGKey(9)
+    g = jax.random.normal(key, (K, B, D), jnp.float32)
+    z = jax.random.normal(jax.random.PRNGKey(10), (K, D), jnp.float32)
+    base, _, _ = dp_clip_mean_noise_cohort(g, 1.0)
+    for std in (0.5, 1.0, 1.5, 2.0):
+        noised, _, _ = dp_clip_mean_noise_cohort(g, 1.0, std, z)
+        np.testing.assert_allclose(noised, base + std * z,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode policy (kernels/common)
+# ---------------------------------------------------------------------------
+
+def test_interpret_policy_sources(monkeypatch):
+    from repro.kernels import common
+    prev = common.set_interpret_override(None)
+    try:
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        info = common.interpret_info()
+        assert info["source"] == "auto"
+        assert info["backend"] == jax.default_backend()
+        assert info["interpret"] == (
+            info["backend"] not in common._COMPILED_BACKENDS)
+
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        assert common.interpret_info() == {
+            "backend": info["backend"], "interpret": False, "source": "env"}
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "yes")
+        assert common.interpret_mode() is True
+
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "junk")
+        with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+            common.interpret_mode()
+
+        # override wins over env
+        common.set_interpret_override(False)
+        assert common.interpret_info() == {
+            "backend": info["backend"], "interpret": False,
+            "source": "override"}
+    finally:
+        common.set_interpret_override(prev)
+
+
+def test_interpret_auto_compiles_on_accelerators(monkeypatch):
+    from repro.kernels import common
+    prev = common.set_interpret_override(None)
+    try:
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        for backend, interp in (("tpu", False), ("gpu", False),
+                                ("cuda", False), ("rocm", False),
+                                ("cpu", True), ("metal", True)):
+            monkeypatch.setattr(common.jax, "default_backend",
+                                lambda b=backend: b)
+            assert common.interpret_info() == {
+                "backend": backend, "interpret": interp, "source": "auto"}
+    finally:
+        common.set_interpret_override(prev)
 
 
 # ---------------------------------------------------------------------------
