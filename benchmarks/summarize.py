@@ -13,8 +13,27 @@ import sys
 
 import numpy as np
 
+from repro.core.runlog import ENGINE_STATS_KEYS
+
 BENCH = os.path.join(os.path.dirname(__file__), "../results/bench")
 BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "../BENCH_engine.json")
+
+# bench-row fields lifted verbatim from RunLog.engine_stats.  The stats
+# schema is frozen in repro.core.runlog.ENGINE_STATS_KEYS (the same list
+# the engine and repro.analysis.audits validate against); if a key is
+# renamed there, --check-engine must fail loudly here instead of letting
+# the benches silently emit nulls for the old name.
+_STATS_ROW_FIELDS = {
+    "data_path", "pipeline_depth", "host_syncs_between_evals",
+    "blocking_submits", "drain_waits", "h2d_bytes_per_cohort",
+}
+_stats_drift = _STATS_ROW_FIELDS - set(ENGINE_STATS_KEYS)
+if _stats_drift:
+    raise RuntimeError(
+        f"summarize.py expects bench rows to carry engine-stats fields "
+        f"{sorted(_stats_drift)} that no longer exist in "
+        "repro.core.runlog.ENGINE_STATS_KEYS — update _STATS_ROW_FIELDS "
+        "and the row builders in benchmarks/fl_benchmarks.py together")
 
 # every row bench_engine_throughput emits must carry these keys (values
 # may be null for the legacy row).  "spec" is the full

@@ -1,0 +1,30 @@
+"""repro.analysis — static analysis & program audits for the engine.
+
+Two layers, one goal: the invariants that used to be found by hand
+(replicated cohort axes, dropped donations, half-plumbed config fields,
+static-vs-runtime divisors, stray host syncs, recompile leaks) are
+checked mechanically.
+
+* **Lint time** — :mod:`repro.analysis.lint` + :mod:`repro.analysis.
+  rules`: ``python -m repro.analysis.lint src/`` runs the REP rule set
+  over the source (CI gates on it; see ``ANALYSIS.md``).
+* **Compile time** — :mod:`repro.analysis.audits` checks REAL compiled
+  programs (sharding, donation aliases, collective budgets, engine-stats
+  schema) on top of the HLO walker in :mod:`repro.analysis.hlo`, and
+  :mod:`repro.analysis.guard` makes the sweep compile-budget structural
+  (``Session.sweep`` runs under :func:`compile_guard`).
+"""
+from repro.analysis.audits import (
+    AuditFailure, audit_collectives, audit_donation, audit_engine_stats,
+    audit_sharding)
+from repro.analysis.guard import (
+    CompileBudgetExceeded, compile_guard, step_signature, sweep_max_builds)
+from repro.analysis.hlo import analyze, donation_aliases, parse_module
+
+__all__ = [
+    "AuditFailure", "CompileBudgetExceeded",
+    "analyze", "donation_aliases", "parse_module",
+    "audit_collectives", "audit_donation", "audit_engine_stats",
+    "audit_sharding",
+    "compile_guard", "step_signature", "sweep_max_builds",
+]

@@ -1,0 +1,194 @@
+"""Compiled-program audits for the cohort engine.
+
+Each checker here machine-verifies an invariant that was once a hand-won
+debugging session:
+
+* :func:`audit_sharding` — PR 2: GSPMD silently REPLICATES an uneven
+  stacked-client axis instead of partitioning it (no error, just 8x the
+  memory and compute per device).  The audit inspects the loaded
+  executable's ``output_shardings`` and fails if any leaf carrying the
+  client axis has a full-size shard on a multi-device mesh.
+* :func:`audit_donation` — PR 4: ``donate_argnums`` is a *request*; XLA
+  silently degrades it to a copy when it can't alias (sharding/dtype
+  mismatch, buffer still live).  The audit parses the compiled module's
+  ``input_output_alias`` header table — the ground truth for whether
+  donation materialized.
+* :func:`audit_collectives` — the cohort step legitimately gathers the
+  sharded arena (all-gathers ARE expected); what must not drift is the
+  *budget*.  The audit fails on forbidden collective kinds or counts
+  above an explicit per-kind budget.
+* :func:`audit_engine_stats` — PR 6: bench provenance (which DP path, did
+  pallas interpret, did the pipeline sync) must not drift silently.  The
+  audit pins recorded ``RunLog.engine_stats`` to the frozen schema in
+  :data:`repro.core.runlog.ENGINE_STATS_KEYS`.
+
+All audits raise :class:`AuditFailure` with an actionable message; CI
+runs them against the REAL compiled cohort step on the forced-8-device
+mesh (``tests/test_analysis_audits.py``) next to seeded-violation
+fixtures that must each fire.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo import analyze, donation_aliases
+from repro.core.runlog import ENGINE_STATS_KEYS, validate_engine_stats
+
+
+class AuditFailure(AssertionError):
+    """A compiled-program invariant did not hold."""
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+def _leaf_shardings(compiled):
+    """Flatten a loaded executable's output shapes + shardings into
+    parallel leaf lists (shapes via the executable's own out_avals when
+    available, else the caller passes them explicitly)."""
+    import jax
+    shardings = jax.tree_util.tree_leaves(
+        compiled.output_shardings,
+        is_leaf=lambda x: hasattr(x, "shard_shape"))
+    return shardings
+
+
+def audit_sharding(compiled, out_shapes=None, *, client_dim,
+                   min_partition=2, label="cohort_step"):
+    """Fail if any output leaf carrying the stacked-client axis is
+    replicated instead of partitioned.
+
+    ``compiled`` is a lowered-and-compiled jax executable (``jax.jit(f)
+    .lower(...).compile()``); ``out_shapes`` is the matching flat list of
+    output shapes (e.g. ``[s.shape for s in jax.tree_util.tree_leaves(
+    jax.eval_shape(f, ...))]``) — if omitted it is read from the
+    executable's output avals.  A leaf participates in the audit when its
+    leading dim equals ``client_dim`` (the padded stacked-cohort size);
+    such a leaf must shard to at most ``client_dim // min_partition``
+    rows per device.  GSPMD replicating the axis (shard == full size) is
+    exactly the PR-2 silent failure this exists to catch.
+    """
+    import jax
+    shardings = _leaf_shardings(compiled)
+    if out_shapes is None:
+        out_shapes = [tuple(a.shape) for a in jax.tree_util.tree_leaves(
+            compiled.out_avals)]
+    if len(out_shapes) != len(shardings):
+        raise ValueError(
+            f"audit_sharding: {len(out_shapes)} shapes vs "
+            f"{len(shardings)} shardings — pass the flat eval_shape list "
+            "matching the compiled outputs")
+    audited = 0
+    for i, (shape, sh) in enumerate(zip(out_shapes, shardings)):
+        if not shape or shape[0] != client_dim:
+            continue
+        audited += 1
+        shard = sh.shard_shape(tuple(shape))
+        if shard[0] * min_partition > shape[0]:
+            raise AuditFailure(
+                f"{label}: output leaf {i} shape={tuple(shape)} carries "
+                f"the client axis (dim0={client_dim}) but shards to "
+                f"{shard} — replicated/under-partitioned (expected "
+                f"<= {shape[0] // min_partition} rows per device). "
+                "GSPMD silently replicates uneven leading dims; pad the "
+                "cohort to a bucket that divides the data-axis product.")
+    if audited == 0:
+        raise AuditFailure(
+            f"{label}: no output leaf has leading dim {client_dim} — "
+            "the audit checked nothing (wrong client_dim?)")
+    return audited
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+def audit_donation(hlo_text: str, *, expect: bool, min_aliases: int = 1,
+                   label="cohort_step"):
+    """Verify the ``input_output_alias`` table matches the donation intent.
+
+    ``expect=True``: at least ``min_aliases`` aliased buffers must appear
+    (a ``donate=True`` build whose aliases vanished is the silent
+    donation-dropped regression).  ``expect=False``: the table must be
+    EMPTY — the pipelined scheduler builds donation-free programs
+    precisely so dispatch never blocks; an alias sneaking back in would
+    reintroduce the PR-4 stall.
+    """
+    aliases = donation_aliases(hlo_text)
+    if expect and len(aliases) < min_aliases:
+        raise AuditFailure(
+            f"{label}: donate=True but only {len(aliases)} input/output "
+            f"aliases materialized (expected >= {min_aliases}). XLA "
+            "silently copies when it cannot alias — check for sharding/"
+            "dtype mismatches between the donated input and any output.")
+    if not expect and aliases:
+        raise AuditFailure(
+            f"{label}: donation expected OFF (pipelined path) but "
+            f"{len(aliases)} input/output aliases present: {aliases[:4]}"
+            " — a donated-input dispatch blocks the host and breaks the "
+            "submit/drain overlap.")
+    return len(aliases)
+
+
+# ---------------------------------------------------------------------------
+# collectives
+# ---------------------------------------------------------------------------
+
+def audit_collectives(hlo_text: str, *, forbid=(), max_counts=None,
+                      entry_hint="", label="cohort_step"):
+    """Budget-check the compiled program's collectives.
+
+    The sharded-arena cohort step has a legitimate collective footprint
+    (the in-program cohort gather all-gathers arena rows), so "zero
+    all-gathers" is not the invariant — the *budget* is.  ``forbid``
+    names kinds that must not appear at all; ``max_counts`` maps kind ->
+    max trip-count-weighted occurrences.  Returns the analyzed counts
+    dict for reporting.
+    """
+    counts = analyze(hlo_text, entry_hint=entry_hint)["collective_counts"]
+    for kind in forbid:
+        if counts.get(kind, 0) > 0:
+            raise AuditFailure(
+                f"{label}: forbidden collective {kind!r} appears "
+                f"{counts[kind]}x (counts: {dict(counts)}). An unexpected "
+                f"{kind} on the client axis usually means a sharding "
+                "constraint was dropped and GSPMD is re-materializing "
+                "the full array per device.")
+    for kind, budget in (max_counts or {}).items():
+        if counts.get(kind, 0) > budget:
+            raise AuditFailure(
+                f"{label}: {kind} count {counts[kind]} exceeds budget "
+                f"{budget} (counts: {dict(counts)}) — the program's "
+                "collective footprint drifted; re-derive the budget or "
+                "fix the regression.")
+    return dict(counts)
+
+
+# ---------------------------------------------------------------------------
+# engine-stats provenance
+# ---------------------------------------------------------------------------
+
+def audit_engine_stats(stats: dict, *, label="engine_stats"):
+    """Pin a recorded ``RunLog.engine_stats`` dict to the frozen schema
+    (:data:`repro.core.runlog.ENGINE_STATS_KEYS`) and the cross-field
+    invariants the bench contract relies on."""
+    try:
+        validate_engine_stats(stats, context=label)
+    except (TypeError, ValueError) as e:
+        raise AuditFailure(str(e)) from e
+    if stats["pipeline_depth"] > 1 and stats["host_syncs_between_evals"]:
+        raise AuditFailure(
+            f"{label}: pipelined run (depth="
+            f"{stats['pipeline_depth']}) recorded "
+            f"{stats['host_syncs_between_evals']} host syncs between "
+            "evals — the submit/drain overlap is broken (a device value "
+            "is being fetched outside _host_fetch's eval boundary).")
+    if stats["dp_path"] == "pallas" and stats["pallas_interpret"] is None:
+        raise AuditFailure(
+            f"{label}: dp_path='pallas' but no interpret provenance was "
+            "recorded — interpret_info() must be captured so a silently "
+            "interpreting kernel on a compiled backend is visible.")
+    return stats
+
+
+__all__ = ["AuditFailure", "audit_sharding", "audit_donation",
+           "audit_collectives", "audit_engine_stats", "ENGINE_STATS_KEYS"]

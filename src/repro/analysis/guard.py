@@ -1,0 +1,97 @@
+"""Compile-budget guard: the "one compiled program per sigma sweep"
+invariant as a structural guarantee.
+
+PR 5 made sigma a RUNTIME argument of the compiled cohort step so a
+noise sweep replays one program; PR 6 extended that to the fused Pallas
+DP path.  Until now the invariant was enforced after the fact — a
+per-test assertion plus ``summarize.py --check-engine`` failing a bench
+row whose warm ``step_builds`` delta grew.  :func:`compile_guard` moves
+the check to the execution site: ``Session.sweep`` wraps its grid loop
+in a guard whose budget is derived from the grid itself
+(:func:`sweep_max_builds`), so an accidental recompile-per-point — a new
+config field that leaks into the step cache key, a sharding object that
+stops hashing, sigma read statically again — fails the sweep THERE, with
+the offending budget in the message, not a bench run later.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.analysis.audits import AuditFailure
+
+
+class CompileBudgetExceeded(AuditFailure):
+    """More cohort-step programs were built than the region's budget."""
+
+
+def step_signature(spec):
+    """The compile identity of a spec: two specs with equal signatures
+    share one cached cohort-step build (``cohort_step.cached_cohort_step``
+    keys on testbed-derived training config + engine config; sigma is a
+    runtime argument, so only the noise on/off distinction survives).
+    Returns ``None`` for specs that never touch the step cache (legacy
+    backend)."""
+    if spec.backend != "cohort":
+        return None
+    tb = spec.testbed
+    # the built program only distinguishes add_noise = use_dp and
+    # sigma > 0; the magnitude is a runtime arg (PR 5)
+    tb = dataclasses.replace(
+        tb, sigma=1.0 if (tb.use_dp and tb.sigma > 0) else 0.0)
+    return (tb, spec.engine)
+
+
+def sweep_max_builds(specs) -> int:
+    """Upper bound on cohort-step builds for running ``specs`` cold: the
+    number of DISTINCT compile signatures in the grid.  A warm session
+    builds fewer (possibly zero); building MORE means a recompile leak."""
+    return len({sig for sig in map(step_signature, specs)
+                if sig is not None})
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """Live view of a :func:`compile_guard` region (also returned from
+    it): ``delta`` is the number of cohort-step builds since entry."""
+
+    start: int
+    max_builds: int
+    label: str = "compile_guard"
+
+    @property
+    def delta(self) -> int:
+        from repro.engine.cohort_step import step_builds
+        return step_builds() - self.start
+
+
+@contextlib.contextmanager
+def compile_guard(max_builds: int, label: str = "compile_guard"):
+    """Fail if more than ``max_builds`` cohort-step programs are built
+    inside the ``with`` block.
+
+    Checks on clean exit only — an exception already propagating out of
+    the region is the real error and is never masked by the budget
+    check.  Yields a :class:`GuardReport` whose ``delta`` can be read
+    inside or after the region (``summarize.py`` reports it in the sweep
+    bench rows).
+    """
+    from repro.engine.cohort_step import step_builds
+    if max_builds < 0:
+        raise ValueError(f"max_builds must be >= 0: {max_builds}")
+    report = GuardReport(start=step_builds(), max_builds=max_builds,
+                         label=label)
+    yield report
+    delta = report.delta
+    if delta > max_builds:
+        raise CompileBudgetExceeded(
+            f"{label}: {delta} cohort-step programs built in a region "
+            f"budgeted for {max_builds}. A recompile is leaking — most "
+            "likely a config value that should be a runtime argument "
+            "(sigma was one) is being traced statically, or a new field "
+            "entered the cached_cohort_step key so consecutive grid "
+            "points stopped sharing a program.")
+
+
+__all__ = ["CompileBudgetExceeded", "GuardReport", "compile_guard",
+           "step_signature", "sweep_max_builds"]

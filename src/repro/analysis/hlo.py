@@ -1,0 +1,295 @@
+"""Static analyzer for compiled (scheduled) HLO text.
+
+XLA's HloCostAnalysis counts `while` bodies ONCE (trip counts are treated
+as unknown), which under-reports both FLOPs and collective bytes for
+scan-over-layers programs by ~n_layers x.  This walker fixes that:
+
+  * splits the module into computations,
+  * extracts while-loop trip counts from their condition computations
+    (JAX scans lower to `compare(iter, constant(N)), direction=LT`),
+  * walks the call graph from ENTRY multiplying per-computation totals by
+    the enclosing trip counts,
+  * per computation, accumulates
+      - dot FLOPs (2 x output elems x contraction size; >99% of model
+        FLOPs for transformer/SSM programs — elementwise ops are ignored
+        and noted in EXPERIMENTS.md),
+      - collective bytes by kind with replica-group size, converted to
+        per-chip link traffic with the standard ring multipliers:
+          all-gather        (g-1)/g * out_bytes
+          reduce-scatter    (g-1)/g * in_bytes
+          all-reduce        2 (g-1)/g * bytes
+          all-to-all        (g-1)/g * bytes
+          collective-permute  bytes
+
+Pure text parsing — no XLA internals — so it works on any backend's
+scheduled HLO dump.
+
+Promoted from ``benchmarks/hlo_analysis.py`` (which remains as a
+re-export shim) so the program-audit layer in
+:mod:`repro.analysis.audits` can build compiled-program checkers on top
+of it: :func:`donation_aliases` parses the module header's
+``input_output_alias`` table (the ground truth for whether a
+``donate_argnums`` request actually materialized), and :func:`analyze`'s
+collective counts/bytes feed the collective audit.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _shape_info(text):
+    """First array shape in text -> (elems, bytes) summed over all arrays."""
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _dims_of_first_shape(text):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0          # operand+output bytes at fusion boundary
+    collectives: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(int))
+    whiles: list = field(default_factory=list)      # (body, cond)
+    calls: list = field(default_factory=list)       # fusion/call targets
+    fusion_targets: set = field(default_factory=set)
+    trip_const: int = 1                              # if used as a while cond
+
+
+# ops that don't move HBM bytes themselves
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call"}
+
+
+def parse_module(hlo: str) -> dict:
+    comps: dict = {}
+    cur = None
+    shapes: dict = {}          # op name -> shape text (per computation scope is
+                               # fine to flatten: names are unique module-wide)
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation header: "%name (params...) -> type {"  or "ENTRY ..."
+        if (s.endswith("{") and ("(" in s) and ("=" not in s.split("(")[0])):
+            header = s
+            name = header.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            cur = Computation(name=name)
+            comps[name] = cur
+            # parameter shapes from the signature
+            sig = header[header.find("(") + 1: header.rfind("->")]
+            for pm in re.finditer(r"%?([\w.\-]+):\s*([\w\[\],\s()]+)", sig):
+                shapes[pm.group(1)] = pm.group(2)
+            continue
+        if s == "}" or cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op_name, out_text, kind, rest = m.groups()
+        shapes[op_name] = out_text
+
+        # HBM traffic at fusion boundary: output + operand bytes.  Ops
+        # inside fusion computations are NOT counted (they live in VMEM) —
+        # fusion targets are excluded from the call-graph byte walk below.
+        if kind not in _NO_TRAFFIC:
+            _, ob = _shape_info(out_text)
+            ib = 0
+            for opn in _OPERAND_RE.findall(rest.split("),")[0] + ")"):
+                _, b = _shape_info(shapes.get(opn, ""))
+                ib += b
+            cur.hbm_bytes += ob + ib
+
+        if kind == "constant" and "s32[]" in out_text:
+            cm = re.search(r"constant\((\d+)\)", s)
+            if cm:
+                cur.trip_const = max(cur.trip_const, int(cm.group(1)))
+
+        if kind == "dot":
+            out_elems, _ = _shape_info(out_text)
+            ops = _OPERAND_RE.findall(rest)
+            cdims = _CONTRACT_RE.search(s)
+            contract = 1
+            if ops and cdims is not None:
+                lhs_shape = _dims_of_first_shape(shapes.get(ops[0], ""))
+                if lhs_shape:
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(lhs_shape):
+                            contract *= lhs_shape[int(d)]
+            cur.dot_flops += 2.0 * out_elems * contract
+        elif kind == "while":
+            tgt = dict(
+                (k, v) for k, v in re.findall(
+                    r"(body|condition)=%?([\w.\-]+)", s))
+            if "body" in tgt:
+                cur.whiles.append((tgt["body"], tgt.get("condition")))
+        elif kind in ("fusion", "call", "conditional", "async-start"):
+            tgts = _CALLED_RE.findall(s)
+            cur.calls.extend(tgts)
+            if kind == "fusion":
+                cur.fusion_targets.update(tgts)
+        else:
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVE_KINDS and not kind.endswith("-done"):
+                _, out_bytes = _shape_info(out_text)
+                # operand bytes for reduce-scatter traffic
+                in_bytes = 0
+                for opn in _OPERAND_RE.findall(rest):
+                    _, b = _shape_info(shapes.get(opn, ""))
+                    in_bytes += b
+                gm = _GROUPS_RE.search(s)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    ge = _GROUPS_EXPL_RE.search(s)
+                    g = len(ge.group(1).split(",")) if ge else 2
+                g = max(g, 2)
+                ring = (g - 1) / g
+                if base == "all-gather":
+                    traffic = ring * out_bytes
+                elif base == "all-reduce":
+                    traffic = 2 * ring * out_bytes
+                elif base == "reduce-scatter":
+                    traffic = ring * in_bytes
+                elif base == "all-to-all":
+                    traffic = ring * out_bytes
+                else:  # collective-permute
+                    traffic = out_bytes
+                cur.collectives[base] += traffic
+                cur.coll_counts[base] += 1
+    return comps
+
+
+_ALIAS_HEADER = "input_output_alias={"
+_ALIAS_PAIR_RE = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+)")
+
+
+def donation_aliases(hlo: str) -> list:
+    """Parse the module header's ``input_output_alias`` table.
+
+    Returns ``[(output_index_path, parameter_number), ...]`` — one entry
+    per buffer the compiled program aliases between an input and an
+    output.  An empty list means NO donation materialized: a
+    ``donate_argnums`` request that XLA could not honor (sharding
+    mismatch, dtype change, buffer still live) silently degrades to a
+    copy, which is exactly the regression :func:`repro.analysis.audits.
+    audit_donation` exists to catch.
+    """
+    start = hlo.find(_ALIAS_HEADER)
+    if start < 0:
+        return []
+    # balanced-brace scan over the alias table (entries nest one level:
+    # "{ {0}: (23, {}, may-alias), ... }")
+    i = start + len(_ALIAS_HEADER) - 1
+    depth = 0
+    for j in range(i, len(hlo)):
+        if hlo[j] == "{":
+            depth += 1
+        elif hlo[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
+        return []
+    table = hlo[i: j + 1]
+    pairs = []
+    for m in _ALIAS_PAIR_RE.finditer(table):
+        out_path = tuple(int(d) for d in m.group(1).split(",") if d.strip())
+        pairs.append((out_path, int(m.group(2))))
+    return pairs
+
+
+def analyze(hlo: str, entry_hint: str = "") -> dict:
+    """Walk from ENTRY, multiplying by while trip counts."""
+    comps = parse_module(hlo)
+    entry = None
+    for name in comps:
+        if entry_hint and entry_hint in name:
+            entry = name
+    if entry is None:
+        # ENTRY is usually the computation named like the jit'd fn or 'main'
+        first_line = hlo.find("ENTRY")
+        if first_line >= 0:
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo[first_line:])
+            entry = m.group(1) if m else None
+    if entry is None or entry not in comps:
+        raise ValueError("could not locate ENTRY computation")
+
+    memo = {}
+
+    def walk(name, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return 0.0, 0.0, defaultdict(float), defaultdict(int)
+        c = comps[name]
+        flops = c.dot_flops
+        hbm = c.hbm_bytes
+        coll = defaultdict(float, c.collectives)
+        cnt = defaultdict(int, c.coll_counts)
+        for tgt in c.calls:
+            f, h, co, ct = walk(tgt, depth + 1)
+            flops += f
+            if tgt not in c.fusion_targets:
+                hbm += h          # fusion internals live in VMEM
+            for k, v in co.items():
+                coll[k] += v
+            for k, v in ct.items():
+                cnt[k] += v
+        for body, cond in c.whiles:
+            trips = comps[cond].trip_const if cond in comps else 1
+            fb, hb, cb, nb = walk(body, depth + 1)
+            fc, hc, cc, nc = (walk(cond, depth + 1) if cond in comps
+                              else (0, 0, {}, {}))
+            flops += trips * (fb + fc)
+            hbm += trips * (hb + hc)
+            for k, v in cb.items():
+                coll[k] += trips * v
+            for k, v in nb.items():
+                cnt[k] += trips * v
+        memo[name] = (flops, hbm, coll, cnt)
+        return memo[name]
+
+    flops, hbm, coll, cnt = walk(entry)
+    return {
+        "dot_flops": flops,
+        "hbm_bytes": hbm,
+        "collective_traffic_bytes": dict(coll),
+        "collective_counts": dict(cnt),
+        "total_collective_bytes": float(sum(coll.values())),
+    }

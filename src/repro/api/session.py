@@ -229,17 +229,30 @@ class Session:
             replace_path(spec, p, vs[0])   # fail fast on bad paths/values
         result = SweepResult(base=spec, axes={p: list(v) for p, v in
                                               zip(paths, values)})
+        grid = []
         for combo in itertools.product(*values):
             point = dict(zip(paths, combo))
             s = spec
             for p, v in point.items():
                 s = replace_path(s, p, v)
-            t0 = time.perf_counter()
-            _, log = self.run(s)
-            result.points.append(point)
-            result.specs.append(s)
-            result.logs.append(log)
-            result.wall_s.append(time.perf_counter() - t0)
+            grid.append((point, s))
+        # the whole grid is materialized up front so the sweep runs under
+        # a compile budget derived from it: at most one cohort-step build
+        # per DISTINCT compile signature (sigma is a runtime arg, so a
+        # sigma grid contributes ONE).  A recompile leaking per point —
+        # the regression PR 5/6 guarded with after-the-fact assertions —
+        # now fails structurally, inside the sweep itself.
+        from repro.analysis.guard import compile_guard, sweep_max_builds
+        budget = sweep_max_builds(s for _, s in grid)
+        with compile_guard(budget, label="Session.sweep") as guard:
+            for point, s in grid:
+                t0 = time.perf_counter()
+                _, log = self.run(s)
+                result.points.append(point)
+                result.specs.append(s)
+                result.logs.append(log)
+                result.wall_s.append(time.perf_counter() - t0)
+        self.events["sweep_step_builds"] += guard.delta
         return result
 
     def stats(self) -> dict:

@@ -13,6 +13,48 @@ from typing import Optional
 
 from repro.core.fairness import fairness_report
 
+# THE schema for ``RunLog.engine_stats`` — the exact keys
+# ``CohortRunner.stats()`` produces.  Frozen here (not derived at a use
+# site) so every consumer of engine provenance pulls from one place:
+# ``repro.analysis.audits.audit_engine_stats`` validates recorded logs
+# against it, ``benchmarks/summarize.py --check-engine`` validates bench
+# rows against it, and ``tests/test_engine_stats_schema.py`` pins
+# ``CohortRunner.stats()`` itself to it.  Adding a counter to the engine
+# without extending this tuple (and the docs below) fails CI instead of
+# silently drifting the bench/analysis contract.
+ENGINE_STATS_KEYS = (
+    "data_path",                 # "arena" | "host"
+    "dp_path",                   # "jnp" | "pallas"
+    "pallas_interpret",          # interpret_info() dict, or None off-pallas
+    "cohorts",                   # cohorts merged this run
+    "h2d_bytes_total",           # host->device staging traffic (bytes)
+    "h2d_bytes_per_cohort",      # h2d_bytes_total / cohorts
+    "pipeline_depth",            # EngineConfig.pipeline_depth
+    "host_syncs_at_eval",        # sanctioned _host_fetch blocking points
+    "host_syncs_between_evals",  # MUST be 0 on the pipelined path
+    "blocking_submits",          # serial path's donation-chained submits
+    "drain_waits",               # pipelined backpressure waits
+)
+
+
+def validate_engine_stats(stats: dict, context: str = "engine_stats"):
+    """Assert ``stats`` carries exactly :data:`ENGINE_STATS_KEYS`.
+
+    Called by the engine loops when they record ``RunLog.engine_stats``
+    and by the analysis/bench consumers when they read it back, so a
+    renamed or dropped counter fails at the producer AND the consumer.
+    """
+    if not isinstance(stats, dict):
+        raise TypeError(f"{context} must be a dict: {stats!r}")
+    got = set(stats)
+    want = set(ENGINE_STATS_KEYS)
+    missing, extra = sorted(want - got), sorted(got - want)
+    if missing or extra:
+        raise ValueError(
+            f"{context} keys drifted from RunLog.ENGINE_STATS_KEYS — "
+            f"missing: {missing or 'none'}, unexpected: {extra or 'none'}")
+    return stats
+
 
 @dataclass
 class RunLog:

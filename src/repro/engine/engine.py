@@ -86,7 +86,7 @@ import numpy as np
 from repro.core import accountant as _accountant
 from repro.core.aggregation import (
     AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
-from repro.core.runlog import RunLog, eval_all
+from repro.core.runlog import RunLog, eval_all, validate_engine_stats
 from repro.engine.cohort import (
     LocalRoundPlan, fedavg_weights, fold_cohort_weights, padded_cohort_size,
     plan_batches, pop_cohort, steps_per_round)
@@ -752,7 +752,7 @@ def run_fedavg_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    log.engine_stats = runner.stats()
+    log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log
 
 
@@ -898,5 +898,5 @@ def run_async_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    log.engine_stats = runner.stats()
+    log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log

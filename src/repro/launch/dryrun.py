@@ -25,15 +25,12 @@ import sys
 import time
 from functools import partial
 
-# the HLO walker lives with the roofline benchmarks (repo root)
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../../.."))
-from benchmarks.hlo_analysis import analyze as hlo_analyze  # noqa: E402
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.hlo import analyze as hlo_analyze
 from repro.configs import ARCH_IDS, LONG_CONTEXT_ARCHS, get_config
 from repro.core.dp import DPConfig
 from repro.core.fl_step import FLStepConfig, make_fl_train_step, make_server_optimizer

@@ -1,0 +1,11 @@
+"""Seeded REP001 violation: the cache key omits a parameter that changes
+the built value (the PR-6 ``dp_path`` plumbing gap, reduced)."""
+
+_CACHE = {}
+
+
+def cached_build(alpha, beta, gamma):
+    key = (alpha, beta)                 # gamma missing from the key
+    if key not in _CACHE:
+        _CACHE[key] = alpha + beta + gamma
+    return _CACHE[key]

@@ -1,0 +1,24 @@
+"""Clean twin of rep001_bad: every parameter reaches the key, either
+directly or through one level of local derivation (the
+``sh_key = _shardings_key(client_shardings)`` idiom)."""
+
+_CACHE = {}
+
+
+def _normalize(gamma):
+    return tuple(sorted(gamma))
+
+
+def cached_build(alpha, beta, gamma):
+    g_key = _normalize(gamma)
+    key = (alpha, beta, g_key)
+    if key not in _CACHE:
+        _CACHE[key] = (alpha, beta, sum(gamma))
+    return _CACHE[key]
+
+
+def not_a_cache_key(alpha, beta):
+    # a tuple that is merely compared/returned is NOT a cache key:
+    # omitting beta from it is fine
+    marker = (alpha, "tag")
+    return marker == ("x", "tag")

@@ -1,0 +1,20 @@
+"""Seeded REP002 violation: ``InnerConfig`` is reachable from the
+registered spec root but absent from ``_SPEC_TYPES`` — encode/decode
+would fail or silently drop the sub-config (the PR-6 ``use_kernel``
+gap, reduced)."""
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class InnerConfig:
+    depth: int = 1
+    width: int = 8
+
+
+@dataclass(frozen=True)
+class OuterSpec:
+    name: str = "run"
+    inner: InnerConfig = field(default_factory=InnerConfig)
+
+
+_SPEC_TYPES = {cls.__name__: cls for cls in (OuterSpec,)}

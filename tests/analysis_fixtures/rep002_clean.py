@@ -1,0 +1,24 @@
+"""Clean twin of rep002_bad: every dataclass reachable from the spec
+root is registered.  ``Unrelated`` is a dataclass too, but nothing in
+the registered set references it — unreachable types need no entry."""
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class InnerConfig:
+    depth: int = 1
+    width: int = 8
+
+
+@dataclass(frozen=True)
+class OuterSpec:
+    name: str = "run"
+    inner: InnerConfig = field(default_factory=InnerConfig)
+
+
+@dataclass
+class Unrelated:
+    note: str = ""
+
+
+_SPEC_TYPES = {cls.__name__: cls for cls in (OuterSpec, InnerConfig)}

@@ -1,0 +1,11 @@
+"""Seeded REP003 violation: a traced body with a batch-derived dimension
+in hand divides data by the STATIC config count (the PR-6 ``fl.n_micro``
+grad-mean/noise-stddev scaling bug, reduced)."""
+import jax.numpy as jnp
+
+
+def local_phase(batch, fl_cfg):
+    n_actual = batch.shape[0]
+    grads = jnp.sum(batch, axis=0)
+    mean = grads / fl_cfg.n_micro       # wrong when n_actual != n_micro
+    return mean, n_actual

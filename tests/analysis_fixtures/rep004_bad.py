@@ -1,0 +1,17 @@
+"""Seeded REP004 violation: a buffer passed to a ``donate_argnums``
+position is read again afterwards (the arena-donation use-after-free
+class the PR-3/PR-4 call sites must avoid)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(arena, delta):
+    return arena + delta
+
+
+def run_round(arena, delta):
+    out = step(arena, delta)
+    total = arena.sum()                 # arena was donated to step()
+    return out, total

@@ -1,0 +1,36 @@
+"""Clean twin of rep004_bad: donated references are rebound by the
+consuming statement (including the conditional-donation and
+``self._write`` attribute-call idioms the engine uses)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(arena, delta):
+    return arena + delta
+
+
+def make_write(donate):
+    jit_kw = {"donate_argnums": (0,)} if donate else {}
+
+    @functools.partial(jax.jit, **jit_kw)
+    def write(buf, value):
+        return buf.at[0].set(value)
+
+    return write
+
+
+def run_round(arena, delta):
+    arena = step(arena, delta)          # rebound in the same statement
+    return arena, arena.sum()
+
+
+class Runner:
+    def __init__(self, buf, donate):
+        self._buf = buf
+        self._write = make_write(donate)
+
+    def submit_cohort(self, value):
+        self._buf = self._write(self._buf, value)
+        return self._buf

@@ -1,0 +1,20 @@
+"""Seeded REP005 violation: raw device->host syncs inside an engine hot
+region (the pipelined submit/drain loop must only block through the
+``_host_fetch`` funnel at eval boundaries)."""
+import jax
+import numpy as np
+
+
+def run_async_engine(runner, cohorts):
+    acc = 0.0
+    for cohort in cohorts:
+        out = runner.step(cohort)
+        acc += float(runner.fetch(out))     # float(<call>) blocks the host
+        snapshot = np.asarray(out)          # so does np.asarray
+        runner.record(snapshot)
+    return acc
+
+
+def submit_cohort(runner, staged):
+    runner.inflight.append(runner.step(staged))
+    return jax.device_get(runner.inflight[-1])

@@ -1,0 +1,27 @@
+"""Clean twin of rep005_bad: hot regions block only through the
+``_host_fetch`` funnel (or the scheduling-only ``block_until_ready``);
+``float`` on an already-host value is fine, and helpers outside the hot
+regions may sync freely."""
+import jax
+import numpy as np
+
+
+def run_async_engine(runner, cohorts):
+    acc = 0.0
+    for cohort in cohorts:
+        out = runner.step(cohort)
+        jax.block_until_ready(out)          # barrier, not a transfer
+        acc += _host_fetch(runner, out)
+        weight = runner.plan_weight(cohort)
+        acc += float(weight)                # float on a host value
+    return acc
+
+
+def _host_fetch(runner, value):
+    runner.note_host_sync()
+    return float(value)
+
+
+def summarize_run(outputs):
+    # not a hot region: eval-side helpers may pull to host directly
+    return np.asarray(jax.device_get(outputs)).mean().item()

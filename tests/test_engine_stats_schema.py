@@ -1,0 +1,43 @@
+"""The frozen engine-stats schema: ``CohortRunner.stats()`` emits exactly
+``ENGINE_STATS_KEYS`` (order included), ``validate_engine_stats`` is the
+single drift detector shared by the engine, the analysis audits and
+``summarize.py --check-engine``, and a real runner's stats pass the
+cross-field audit."""
+import pytest
+
+from repro.core.runlog import ENGINE_STATS_KEYS, validate_engine_stats
+from repro.core.testbed import build_testbed
+from repro.engine import CohortRunner, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def runner_stats(micro_cfg):
+    clients, params, _, _ = build_testbed(micro_cfg)
+    return CohortRunner(clients, EngineConfig()).stats()
+
+
+def test_runner_stats_match_frozen_schema(runner_stats):
+    assert tuple(runner_stats.keys()) == ENGINE_STATS_KEYS
+
+
+def test_validate_returns_the_same_dict(runner_stats):
+    assert validate_engine_stats(runner_stats) is runner_stats
+
+
+def test_missing_key_is_named():
+    stats = {k: 0 for k in ENGINE_STATS_KEYS}
+    del stats["drain_waits"]
+    with pytest.raises(ValueError, match="drain_waits"):
+        validate_engine_stats(stats)
+
+
+def test_extra_key_is_named():
+    stats = {k: 0 for k in ENGINE_STATS_KEYS}
+    stats["surprise_counter"] = 9
+    with pytest.raises(ValueError, match="surprise_counter"):
+        validate_engine_stats(stats, context="test stats")
+
+
+def test_real_stats_pass_the_audit(runner_stats):
+    from repro.analysis.audits import audit_engine_stats
+    audit_engine_stats(runner_stats)

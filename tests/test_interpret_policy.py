@@ -1,0 +1,94 @@
+"""Exhaustive provenance matrix for ``kernels.common.interpret_info``:
+override beats env beats backend capability, every accepted env token
+resolves, invalid tokens raise (listing the accepted ones), and the
+override short-circuits even a malformed environment.  The benches and
+``RunLog.engine_stats`` trust this dict's ``source`` field verbatim."""
+import pytest
+
+from repro.kernels import common
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy(monkeypatch):
+    """Each case starts with no override and no env var, on a fake CPU
+    backend unless the test says otherwise."""
+    monkeypatch.delenv(common._ENV_VAR, raising=False)
+    monkeypatch.setattr(common, "_override", None)
+    monkeypatch.setattr(common.jax, "default_backend", lambda: "cpu")
+    yield
+
+
+# ---------------------------------------------------------------------------
+# source = auto: backend capability decides
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,interpret", [
+    ("cpu", True), ("METAL", True),            # unknown backends interpret
+    ("tpu", False), ("gpu", False), ("cuda", False), ("rocm", False),
+])
+def test_backend_capability_matrix(monkeypatch, backend, interpret):
+    monkeypatch.setattr(common.jax, "default_backend", lambda: backend)
+    info = common.interpret_info()
+    assert info == {"backend": backend, "interpret": interpret,
+                    "source": "auto"}
+    assert common.interpret_mode() is interpret
+
+
+# ---------------------------------------------------------------------------
+# source = env: every documented token, case/whitespace-insensitive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("raw,expected", (
+    [(t, True) for t in common._TRUE]
+    + [(t, False) for t in common._FALSE]
+    + [("  TRUE ", True), ("Off", False), ("YES", True), (" 0", False)]
+))
+def test_env_tokens(monkeypatch, raw, expected):
+    monkeypatch.setenv(common._ENV_VAR, raw)
+    info = common.interpret_info()
+    assert info["interpret"] is expected
+    assert info["source"] == "env"
+
+
+@pytest.mark.parametrize("backend", ["cpu", "tpu"])
+def test_env_beats_backend_both_ways(monkeypatch, backend):
+    monkeypatch.setattr(common.jax, "default_backend", lambda: backend)
+    monkeypatch.setenv(common._ENV_VAR, "1")
+    assert common.interpret_info() == {
+        "backend": backend, "interpret": True, "source": "env"}
+    monkeypatch.setenv(common._ENV_VAR, "0")
+    assert common.interpret_info() == {
+        "backend": backend, "interpret": False, "source": "env"}
+
+
+@pytest.mark.parametrize("raw", ["2", "maybe", "", "truthy", "None"])
+def test_invalid_env_raises_listing_tokens(monkeypatch, raw):
+    monkeypatch.setenv(common._ENV_VAR, raw)
+    with pytest.raises(ValueError) as exc:
+        common.interpret_info()
+    msg = str(exc.value)
+    assert common._ENV_VAR in msg and repr(raw) in msg
+    for token in common._TRUE + common._FALSE:
+        assert token in msg
+
+
+# ---------------------------------------------------------------------------
+# source = override: beats env (even a malformed one) and backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [True, False])
+@pytest.mark.parametrize("env", [None, "1", "0", "garbage"])
+def test_override_beats_everything(monkeypatch, mode, env):
+    if env is not None:
+        monkeypatch.setenv(common._ENV_VAR, env)
+    monkeypatch.setattr(common.jax, "default_backend", lambda: "tpu")
+    common.set_interpret_override(mode)
+    assert common.interpret_info() == {
+        "backend": "tpu", "interpret": mode, "source": "override"}
+
+
+def test_set_override_returns_previous():
+    assert common.set_interpret_override(True) is None
+    assert common.set_interpret_override(False) is True
+    assert common.set_interpret_override(None) is False
+    assert common.interpret_info()["source"] == "auto"

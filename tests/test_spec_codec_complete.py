@@ -1,0 +1,151 @@
+"""Introspective spec-codec completeness: EVERY dataclass in
+``_SPEC_TYPES`` round-trips an instance whose every field holds a
+NON-default value.  A field the codec drops (not encoded, not decoded,
+or decoded back to the default) is reported BY NAME — this is the test
+shape that would have caught the PR-6 ``use_kernel``/``dp_path``
+half-plumbing, and it fails automatically for fields added in future
+PRs without touching this file."""
+import dataclasses
+
+import pytest
+
+from repro.api.spec import _SPEC_TYPES, decode, encode
+
+# Fields whose values are constrained (validated enums, registry names,
+# live meshes) get explicit non-default values; everything else is
+# derived from the field's default by type.
+_SPECIAL = {
+    ("ExperimentSpec", "backend"): "legacy",
+    ("TestbedConfig", "dp_path"): "pallas",
+    ("TestbedConfig", "partition"): "dirichlet",
+    ("TestbedConfig", "workload"): "ser_linear",
+    ("EngineConfig", "client_axis"): "vmap",
+    ("EngineConfig", "mesh"): "__mesh__",          # built lazily (devices)
+    ("DPConfig", "granularity"): "per_microbatch",
+    ("FLStepConfig", "server_opt"): "sgd",
+    ("FLStepConfig", "compute_dtype"): "float32",
+}
+# granularity default differs between a bare DPConfig ("per_example")
+# and FLStepConfig's nested default ("per_microbatch") — flip per parent
+_SPECIAL_NESTED_DP = {"granularity": "per_example"}
+
+
+def _mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(data=1)
+
+
+def _bump(cls_name, field, value):
+    """A value for ``field`` guaranteed to differ from ``value``."""
+    special = _SPECIAL.get((cls_name, field.name))
+    if special == "__mesh__":
+        return _mesh()
+    if special is not None:
+        assert special != value, (cls_name, field.name)
+        return special
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 3
+    if isinstance(value, float):
+        return value + 0.25
+    if isinstance(value, str):
+        return value + "_x"
+    if value is None:                    # Optional[float] budget caps
+        return 123.5
+    if dataclasses.is_dataclass(value):
+        return _nondefault_instance(type(value), base=value)
+    raise AssertionError(
+        f"no bump strategy for {cls_name}.{field.name} = {value!r} — "
+        "teach this test about the new field type")
+
+
+def _nondefault_instance(cls, base=None):
+    """Instance of ``cls`` with every field changed from its default."""
+    name = cls.__name__
+    if name == "StrategySpec":
+        return cls("fedasync", alpha=0.7, staleness_aware=False)
+    if name == "FLStepConfig":
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if f.name == "num_clients":          # required, no default
+                kw[f.name] = 7
+            elif f.name == "dp":
+                kw[f.name] = dataclasses.replace(
+                    f.default_factory()
+                    if f.default is dataclasses.MISSING else f.default,
+                    clip_norm=2.5, noise_multiplier=0.75,
+                    **_SPECIAL_NESTED_DP)
+            else:
+                kw[f.name] = _bump(name, f, _default_of(f))
+        return cls(**kw)
+    kw = {}
+    for f in dataclasses.fields(cls):
+        kw[f.name] = _bump(name, f, _default_of(f))
+    return cls(**kw)
+
+
+def _default_of(f):
+    if f.default is not dataclasses.MISSING:
+        return f.default
+    if f.default_factory is not dataclasses.MISSING:
+        return f.default_factory()
+    return None
+
+
+def _diff(cls, a, b):
+    """Field names where two instances differ (mesh compared by axes)."""
+    out = []
+    for f in dataclasses.fields(cls):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if f.name == "mesh" and va is not None and vb is not None:
+            if dict(va.shape) != dict(vb.shape):
+                out.append(f.name)
+            continue
+        if va != vb:
+            out.append(f.name)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(_SPEC_TYPES))
+def test_roundtrip_preserves_every_field(name):
+    cls = _SPEC_TYPES[name]
+    inst = _nondefault_instance(cls)
+    if name == "EngineConfig":
+        inst = dataclasses.replace(inst, fl_cfg=_nondefault_instance(
+            _SPEC_TYPES["FLStepConfig"]))
+    decoded = decode(encode(inst))
+    assert type(decoded) is cls
+    dropped = _diff(cls, inst, decoded)
+    assert not dropped, (
+        f"{name} fields dropped/mutated by the spec codec: {dropped} — "
+        "register the field's type in _SPEC_TYPES / extend encode()")
+
+
+@pytest.mark.parametrize("name", sorted(_SPEC_TYPES))
+def test_instance_really_is_nondefault(name):
+    """Guard the generator itself: if a field comes out equal to its
+    default, the round-trip above can't detect the codec dropping it."""
+    cls = _SPEC_TYPES[name]
+    inst = _nondefault_instance(cls)
+    for f in dataclasses.fields(cls):
+        default = _default_of(f)
+        if default is None and f.name in ("mesh", "fl_cfg"):
+            # fl_cfg is exercised via the EngineConfig round-trip above
+            if f.name == "fl_cfg":
+                continue
+        got = getattr(inst, f.name)
+        if f.name == "mesh":
+            assert got is not None
+            continue
+        assert got != default, (
+            f"generator produced the DEFAULT for {name}.{f.name}; "
+            "add a _SPECIAL entry for it")
+
+
+def test_json_roundtrip_is_plain_data():
+    import json
+    spec = _nondefault_instance(_SPEC_TYPES["ExperimentSpec"])
+    d = encode(spec)
+    restored = decode(json.loads(json.dumps(d)))
+    assert _diff(type(spec), spec, restored) == []
