@@ -342,6 +342,15 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
             "h2d_bytes_per_cohort": (
                 round(stats["h2d_bytes_per_cohort"])
                 if "h2d_bytes_per_cohort" in stats else None),
+            # fault-resilience counters (repro.core.faults): the bench
+            # runs faultless, so non-null values must be 0 — a nonzero
+            # here means a FaultModel leaked into the perf scenario and
+            # the timing is not comparable (None on the legacy row,
+            # whose loop reports no engine_stats)
+            "degraded_cohorts": stats.get(
+                "degraded_cohorts", None if log is None else 0),
+            "fault_lost_updates": stats.get(
+                "fault_lost_updates", None if log is None else 0),
             # full reproduction provenance: the row's number can be
             # re-measured from this dict alone (ExperimentSpec.from_dict)
             "spec": spec_of("legacy" if ec is None else "cohort",

@@ -108,6 +108,92 @@ def sweep_smoke() -> None:
           f"points={len(result)};mesh={multi}")
 
 
+def fault_smoke() -> None:
+    """Kill/resume drill for the resilience layer (RESILIENCE.md): a tiny
+    chaotic run (failures, upload loss + retries, duplicates, late
+    deliveries, churn), then the same run killed in-process by
+    ``SimulatedCrash`` at its second published checkpoint and resumed from
+    disk — the resumed RunLog must equal the uninterrupted one BIT FOR
+    BIT (params, times, epsilon trajectories, fault events, engine
+    stats).  Runs sharded when more than one device exists (CI's
+    engine-mesh job forces 8 host devices)."""
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    from repro.core.faults import FaultModel
+    from repro.core.testbed import TestbedConfig
+    from repro.data.synthetic_ser import SERDataConfig
+    from repro.engine import EngineConfig, SimulatedCrash, cohort_mesh
+    from repro.models.ser_cnn import SERConfig
+
+    n_clients = 8
+    dims = dict(time_frames=12, n_mels=12)
+    multi = len(jax.devices()) > 1
+    if multi:
+        mesh = cohort_mesh(max_cohort=n_clients)
+        ec = EngineConfig(staleness_window=45.0,
+                          max_cohort=mesh.shape["data"],
+                          client_axis="vmap", mesh=mesh)
+    else:
+        ec = EngineConfig(staleness_window=45.0)
+    spec = ExperimentSpec(
+        testbed=TestbedConfig(
+            use_dp=True, sigma=0.5, batch_size=16, num_clients=n_clients,
+            data=SERDataConfig(n_total=36 * n_clients, **dims),
+            model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims),
+            faults=FaultModel(
+                seed=7, failure_prob=0.1, upload_loss_prob=0.15,
+                max_retries=1, retry_backoff_s=4.0, duplicate_prob=0.15,
+                late_prob=0.1, leave_prob=0.1, rejoin_delay_s=40.0)),
+        strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=24, eval_every=6),
+        engine=ec)
+
+    def logdict(log):
+        return dict(times=log.times, acc=log.global_acc,
+                    sv=log.server_version, uc=dict(log.update_counts),
+                    st=log.staleness, fe=list(log.fault_events),
+                    es=dict(log.engine_stats),
+                    eps={k: list(v) for k, v in log.eps_trajectory.items()})
+
+    t0 = time.time()
+    p_plain, log_plain = Session().run(spec)
+    if not log_plain.fault_events:
+        raise SystemExit("fault-smoke chaos model produced no faults")
+    ckdir = tempfile.mkdtemp(prefix="fault_smoke_ck_")
+    try:
+        try:
+            Session().run(spec, checkpoint_every=7, checkpoint_dir=ckdir,
+                          crash_after_saves=2)
+            raise SystemExit("fault-smoke run survived crash_after_saves=2")
+        except SimulatedCrash:
+            pass
+        p_res, log_res = Session().run(spec, checkpoint_every=7,
+                                       checkpoint_dir=ckdir,
+                                       resume_from=ckdir)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+    a, b = logdict(log_plain), logdict(log_res)
+    bad = [k for k in a if a[k] != b[k]]
+    bad += ["params"] if any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(p_plain),
+                        jax.tree_util.tree_leaves(p_res))) else []
+    if bad:
+        raise SystemExit(
+            f"fault-smoke resume is NOT bit-identical; diverged: {bad}")
+    s = log_res.engine_stats
+    _line("fault.smoke", round((time.time() - t0) * 1e6),
+          f"events={len(log_res.fault_events)}"
+          f";lost={s['fault_failures'] + s['fault_lost_updates']}"
+          f";retries={s['fault_retries']}"
+          f";degraded={s['degraded_cohorts']}"
+          f";mesh={multi};resume=bit-identical")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -129,9 +215,19 @@ def main() -> None:
                          "whatever devices exist (CI's engine-mesh "
                          "sweep-smoke step runs it on the forced-8-device "
                          "mesh)")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="tiny chaotic run + in-process SimulatedCrash at "
+                         "a published checkpoint + resume; the resumed "
+                         "RunLog must be bit-identical (CI's engine-mesh "
+                         "fault-smoke step runs it on the forced-8-device "
+                         "mesh)")
     args = ap.parse_args()
 
     from benchmarks import fl_benchmarks as flb
+
+    if args.fault_smoke:
+        fault_smoke()
+        return
 
     if args.sweep_smoke:
         sweep_smoke()

@@ -26,6 +26,7 @@ BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "../BENCH_engine.json")
 _STATS_ROW_FIELDS = {
     "data_path", "pipeline_depth", "host_syncs_between_evals",
     "blocking_submits", "drain_waits", "h2d_bytes_per_cohort",
+    "degraded_cohorts", "fault_lost_updates",
 }
 _stats_drift = _STATS_ROW_FIELDS - set(ENGINE_STATS_KEYS)
 if _stats_drift:
@@ -41,7 +42,8 @@ if _stats_drift:
 # from the JSON alone.
 _ENGINE_ROW_KEYS = {
     "engine", "executor", "data_path", "mesh", "wall_s", "warm_step_ms",
-    "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort", "spec",
+    "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort",
+    "degraded_cohorts", "fault_lost_updates", "spec",
 }
 
 # the pipelined-scheduler section (bench_engine_pipeline, multi-device
@@ -112,6 +114,14 @@ def load_engine_bench(path=None):
         if missing:
             raise ValueError(f"{fn}: row {i} missing keys {sorted(missing)}")
         _check_spec(fn, f"row {i}", r["spec"])
+        # the throughput scenarios run FAULTLESS: a nonzero resilience
+        # counter means a FaultModel leaked into the perf run and the
+        # timing mixes degraded cohorts with healthy ones
+        for k in ("degraded_cohorts", "fault_lost_updates"):
+            if r[k]:
+                raise ValueError(
+                    f"{fn}: row {i} ({r['engine']}) reports {k}={r[k]} — "
+                    "the throughput bench must run without a FaultModel")
     pipe = data.get("pipeline")
     if pipe is None:
         if data.get("devices", 1) > 1:

@@ -187,6 +187,17 @@ def audit_engine_stats(stats: dict, *, label="engine_stats"):
             f"{label}: dp_path='pallas' but no interpret provenance was "
             "recorded — interpret_info() must be captured so a silently "
             "interpreting kernel on a compiled backend is visible.")
+    # fault-ledger conservation (repro.core.faults): every lost upload
+    # either re-entered the heap as a retry or exhausted its budget and
+    # became a lost update — an imbalance means a loop dropped or
+    # double-counted a delivery attempt
+    if stats["fault_upload_losses"] != (
+            stats["fault_retries"] + stats["fault_lost_updates"]):
+        raise AuditFailure(
+            f"{label}: fault ledger imbalance — fault_upload_losses="
+            f"{stats['fault_upload_losses']} must equal fault_retries="
+            f"{stats['fault_retries']} + fault_lost_updates="
+            f"{stats['fault_lost_updates']}.")
     return stats
 
 

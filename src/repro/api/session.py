@@ -176,13 +176,38 @@ class Session:
         return self._runner
 
     # -- execution ---------------------------------------------------------
-    def run(self, spec: ExperimentSpec) -> tuple:
+    def run(self, spec: ExperimentSpec, *,
+            checkpoint_every: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            keep_last: int = 3,
+            crash_after_saves: Optional[int] = None,
+            resume_from: Optional[str] = None) -> tuple:
         """Execute one spec; returns ``(final_params, RunLog)`` — exactly
         what ``run_experiment`` returns (the legacy frontends are shims
-        over this)."""
+        over this).
+
+        ``spec.testbed.faults`` (a :class:`repro.core.faults.FaultModel`)
+        flows to either backend's loop.  ``checkpoint_every=N`` with
+        ``checkpoint_dir`` snapshots the run every N rounds (fedavg) /
+        merged updates (async) into the durable store, keeping the newest
+        ``keep_last`` steps; ``resume_from=<dir>`` resumes an aborted run
+        from its latest checkpoint bit-identically.  ``crash_after_saves``
+        raises :class:`repro.engine.resilience.SimulatedCrash` after that
+        many snapshots (deterministic mid-flight aborts for tests).
+        Checkpoint/resume is cohort-engine only."""
         if not isinstance(spec, ExperimentSpec):
             raise TypeError(f"Session.run takes an ExperimentSpec: {spec!r}")
         tb, b = spec.testbed, spec.run
+        checkpoint = None
+        if checkpoint_every is not None:
+            if checkpoint_dir is None:
+                raise ValueError(
+                    "checkpoint_every requires checkpoint_dir (where the "
+                    "step_*.npz snapshots go)")
+            from repro.engine.resilience import CheckpointPolicy
+            checkpoint = CheckpointPolicy(
+                directory=checkpoint_dir, every=checkpoint_every,
+                keep_last=keep_last, crash_after_saves=crash_after_saves)
         self._materialize(tb)
         clients, params0 = self._clients, self._params0
         acc_fn, pooled = self._acc_fn, self._pooled
@@ -190,28 +215,35 @@ class Session:
         if spec.backend == "legacy":
             if spec.engine.mesh is not None:
                 raise ValueError("mesh execution requires backend='cohort'")
+            if checkpoint is not None or resume_from is not None:
+                raise ValueError(
+                    "checkpoint/resume requires backend='cohort' — the "
+                    "legacy reference loop has no snapshot support")
             from repro.core.server import run_async, run_fedavg
             if spec.strategy.name == "fedavg":
                 return run_fedavg(
                     clients, params0, acc_fn, pooled, rounds=b.rounds,
                     seed=tb.seed, eval_every=b.eval_every,
-                    target_acc=b.target_acc, engine="legacy")
+                    target_acc=b.target_acc, engine="legacy",
+                    faults=tb.faults)
             return run_async(
                 clients, params0, acc_fn, pooled, spec.strategy.make(),
                 max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
                 eval_every=b.eval_every, target_acc=b.target_acc,
-                engine="legacy")
+                engine="legacy", faults=tb.faults)
         from repro.engine import run_async_engine, run_fedavg_engine
         runner = self._get_runner(tb, spec.engine)
         if spec.strategy.name == "fedavg":
             return run_fedavg_engine(
                 clients, params0, acc_fn, pooled, rounds=b.rounds,
                 seed=tb.seed, eval_every=b.eval_every,
-                target_acc=b.target_acc, runner=runner)
+                target_acc=b.target_acc, runner=runner, faults=tb.faults,
+                checkpoint=checkpoint, resume_from=resume_from)
         return run_async_engine(
             clients, params0, acc_fn, pooled, spec.strategy.make(),
             max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
-            eval_every=b.eval_every, target_acc=b.target_acc, runner=runner)
+            eval_every=b.eval_every, target_acc=b.target_acc, runner=runner,
+            faults=tb.faults, checkpoint=checkpoint, resume_from=resume_from)
 
     def sweep(self, spec: ExperimentSpec, axes: dict) -> SweepResult:
         """Run the cartesian grid of ``spec`` with ``axes`` mapping dotted

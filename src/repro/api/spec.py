@@ -31,6 +31,7 @@ from typing import Optional
 
 from repro.core.aggregation import make_strategy, validate_strategy_params
 from repro.core.dp import DPConfig
+from repro.core.faults import FaultModel
 from repro.core.fl_step import FLStepConfig
 from repro.core.testbed import TestbedConfig
 from repro.data.synthetic_ser import SERDataConfig
@@ -188,7 +189,7 @@ def replace_path(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
 
 _SPEC_TYPES = {cls.__name__: cls for cls in (
     ExperimentSpec, StrategySpec, RunBudget, TestbedConfig, SERDataConfig,
-    SERConfig, EngineConfig, DPConfig, FLStepConfig)}
+    SERConfig, EngineConfig, DPConfig, FLStepConfig, FaultModel)}
 
 
 def _is_mesh(obj) -> bool:

@@ -1,0 +1,6 @@
+"""Durable flat-npz checkpoint store (see checkpoint.py for the atomic
+publish / retention / key-escaping contract)."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, load_flat, restore, save)
+
+__all__ = ["save", "restore", "load_flat", "latest_step"]

@@ -6,6 +6,21 @@ On restore, arrays are reassembled into the template pytree and cast to
 the template's dtypes.  For sharded arrays the save path gathers to host
 (process 0) first — fine at simulation scale; a real deployment would
 swap in async per-shard writes behind the same interface.
+
+Durability contract (the engine's crash-resume path in
+:mod:`repro.engine.resilience` relies on all three):
+
+* **atomic publish** — the npz is written to a ``.tmp`` sibling, fsynced,
+  then ``os.replace``d into place and the directory entry fsynced; a
+  crash mid-save leaves at most a stale ``.tmp``, never a torn
+  ``step_*.npz`` (``latest_step`` only ever sees complete files);
+* **bounded retention** — ``keep_last=N`` prunes the oldest steps after
+  each successful publish, so a long checkpointed run cannot fill the
+  disk (pruning happens strictly AFTER the new step is durable);
+* **collision-free keys** — tree-path components are escaped before
+  joining with ``/`` (``{"a": {"b": x}}`` and ``{"a/b": x}`` flatten to
+  the distinct keys ``a/b`` and ``a\\/b``), so sibling names containing
+  a slash can no longer alias another leaf's entry.
 """
 from __future__ import annotations
 
@@ -18,17 +33,43 @@ import jax
 import numpy as np
 
 
+def _escape(component: str) -> str:
+    """Escape one tree-path component so ``/``-joined keys are injective
+    (a literal backslash escapes first, then the separator)."""
+    return component.replace("\\", "\\\\").replace("/", "\\/")
+
+
+def _path_key(path) -> str:
+    """The npz key for one jax tree path — escaped components joined
+    with ``/``.  Shared by save/restore/load so the escaping cannot
+    drift between the writer and the readers."""
+    return "/".join(
+        _escape(str(getattr(p, "key", getattr(p, "idx", p)))) for p in path)
+
+
 def _flatten(tree):
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
+        key = _path_key(path)
+        if key in flat:
+            raise ValueError(
+                f"checkpoint tree flattens two leaves to key {key!r}")
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
 
 
-def save(directory: str, step: int, tree, meta: Optional[dict] = None):
+def _fsync_dir(directory: str):
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(directory: str, step: int, tree, meta: Optional[dict] = None,
+         keep_last: Optional[int] = None):
+    """Write ``<directory>/step_<N>.npz`` atomically and durably; with
+    ``keep_last=N`` prune all but the newest N steps afterwards."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     flat["_meta"] = np.frombuffer(
@@ -38,8 +79,23 @@ def save(directory: str, step: int, tree, meta: Optional[dict] = None):
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    _fsync_dir(directory)
+    if keep_last is not None:
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1: {keep_last!r}")
+        for old in _step_files(directory)[:-keep_last]:
+            os.remove(os.path.join(directory, old))
     return path
+
+
+def _step_files(directory: str) -> list:
+    """Completed checkpoint filenames, oldest first (.tmp leftovers of a
+    crashed save never match)."""
+    return sorted(fn for fn in os.listdir(directory)
+                  if re.match(r"step_(\d+)\.npz$", fn))
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -53,20 +109,28 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(directory: str, template, step: Optional[int] = None):
-    """Returns (tree, meta).  ``template`` provides treedef + dtypes."""
+def load_flat(directory: str, step: Optional[int] = None):
+    """Template-free read: returns ``(flat, meta)`` where ``flat`` maps
+    escaped tree-path keys to host numpy arrays — the engine's resume
+    path reassembles its heterogeneous state from this (the live run
+    provides the templates)."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
-    data = np.load(os.path.join(directory, f"step_{step:08d}.npz"))
-    meta = json.loads(bytes(data["_meta"]).decode())
+    with np.load(os.path.join(directory, f"step_{step:08d}.npz")) as data:
+        meta = json.loads(bytes(data["_meta"]).decode())
+        flat = {k: data[k] for k in data.files if k != "_meta"}
+    return flat, meta
 
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+
+def restore(directory: str, template, step: Optional[int] = None):
+    """Returns (tree, meta).  ``template`` provides treedef + dtypes."""
+    flat, meta = load_flat(directory, step)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for path, leaf in leaves:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        arr = data[key]
+        arr = flat[_path_key(path)]
         out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), out

@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.fairness import fairness_report
+from repro.core.faults import FAULT_STATS_KEYS
 
 # THE schema for ``RunLog.engine_stats`` — the exact keys
 # ``CohortRunner.stats()`` produces.  Frozen here (not derived at a use
@@ -34,7 +35,10 @@ ENGINE_STATS_KEYS = (
     "host_syncs_between_evals",  # MUST be 0 on the pipelined path
     "blocking_submits",          # serial path's donation-chained submits
     "drain_waits",               # pipelined backpressure waits
-)
+    # fault/retry/degraded-round counters (repro.core.faults; all zero on
+    # a fault-free run — the schema is unconditional so --check-engine
+    # and the audits validate every row the same way)
+) + FAULT_STATS_KEYS
 
 
 def validate_engine_stats(stats: dict, context: str = "engine_stats"):
@@ -80,6 +84,10 @@ class RunLog:
     # pipelined path, blocking_submits — the serial path's per-cohort
     # donation syncs, drain_waits — overlapped backpressure waits)
     engine_stats: dict = field(default_factory=dict)
+    # ordered (kind, cid, virtual_time) fault events from the
+    # FaultInjector (empty without a FaultModel) — recorded by BOTH
+    # backends, so same-seed fault replay is asserted by list equality
+    fault_events: list = field(default_factory=list)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         for t, a in zip(self.times, self.global_acc):

@@ -55,25 +55,37 @@ def run_fedavg(
     engine: str = "cohort",
     engine_cfg=None,
     mesh=None,
+    faults=None,
+    checkpoint=None,
+    resume_from=None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog).
 
     ``mesh`` (a ``launch.mesh`` mesh) partitions the cohort engine's
-    client axis over the mesh's data axes — cohort-engine only."""
+    client axis over the mesh's data axes — cohort-engine only.
+    ``faults`` (a :class:`repro.core.faults.FaultModel`) injects the same
+    deterministic fault sequence on either execution path;
+    ``checkpoint``/``resume_from`` (cohort-engine only) snapshot and
+    resume the run — see :mod:`repro.engine.resilience`."""
     eval_every = _normalize_eval_every(eval_every)
     if engine == "cohort":
         from repro.engine import run_fedavg_engine
         return run_fedavg_engine(
             clients, global_params, accuracy_fn, test_data, rounds=rounds,
             seed=seed, eval_every=eval_every, target_acc=target_acc,
-            engine_cfg=engine_cfg, mesh=mesh)
+            engine_cfg=engine_cfg, mesh=mesh, faults=faults,
+            checkpoint=checkpoint, resume_from=resume_from)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
     if mesh is not None:
         raise ValueError("mesh execution requires engine='cohort'")
+    if checkpoint is not None or resume_from is not None:
+        raise ValueError("checkpoint/resume requires engine='cohort' — the "
+                         "legacy reference loop has no snapshot support")
     return _run_fedavg_legacy(
         clients, global_params, accuracy_fn, test_data, rounds=rounds,
-        seed=seed, eval_every=eval_every, target_acc=target_acc)
+        seed=seed, eval_every=eval_every, target_acc=target_acc,
+        faults=faults)
 
 
 def run_async(
@@ -90,6 +102,9 @@ def run_async(
     engine: str = "cohort",
     engine_cfg=None,
     mesh=None,
+    faults=None,
+    checkpoint=None,
+    resume_from=None,
 ) -> tuple:
     """Event-driven asynchronous FL (Eq. 10-11).
 
@@ -100,7 +115,10 @@ def run_async(
     skew emerges, it is not scripted).
 
     ``mesh`` partitions the cohort engine's client axis over the mesh's
-    data axes — cohort-engine only.
+    data axes — cohort-engine only.  ``faults`` injects the same
+    deterministic fault sequence on either execution path;
+    ``checkpoint``/``resume_from`` (cohort-engine only) snapshot and
+    resume the run — see :mod:`repro.engine.resilience`.
     """
     eval_every = _normalize_eval_every(eval_every)
     if engine == "cohort":
@@ -109,15 +127,19 @@ def run_async(
             clients, global_params, accuracy_fn, test_data, strategy,
             max_updates=max_updates, max_time=max_time, seed=seed,
             eval_every=eval_every, target_acc=target_acc,
-            engine_cfg=engine_cfg, mesh=mesh)
+            engine_cfg=engine_cfg, mesh=mesh, faults=faults,
+            checkpoint=checkpoint, resume_from=resume_from)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
     if mesh is not None:
         raise ValueError("mesh execution requires engine='cohort'")
+    if checkpoint is not None or resume_from is not None:
+        raise ValueError("checkpoint/resume requires engine='cohort' — the "
+                         "legacy reference loop has no snapshot support")
     return _run_async_legacy(
         clients, global_params, accuracy_fn, test_data, strategy,
         max_updates=max_updates, max_time=max_time, seed=seed,
-        eval_every=eval_every, target_acc=target_acc)
+        eval_every=eval_every, target_acc=target_acc, faults=faults)
 
 
 # ---------------------------------------------------------------------------
@@ -126,10 +148,13 @@ def run_async(
 
 def _run_fedavg_legacy(
     clients, global_params, accuracy_fn, test_data,
-    rounds=60, seed=0, eval_every=1, target_acc=None,
+    rounds=60, seed=0, eval_every=1, target_acc=None, faults=None,
 ) -> tuple:
     from repro.core.aggregation import FedAvg
+    from repro.core.faults import FaultInjector, apply_deadline
     strat = FedAvg()
+    injector = (FaultInjector(faults, len(clients))
+                if faults is not None else None)
     log = RunLog(strategy="fedavg")
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
@@ -139,18 +164,42 @@ def _run_fedavg_legacy(
         log.eps_trajectory.setdefault(c.tier, [])
 
     for rnd in range(1, rounds + 1):
-        updates, durations = [], []
+        updates, durations, infos = [], [], []
         for c in clients:
             key, sub = jax.random.split(key)
             params_k, info = c.local_train(global_params, sub)
+            if injector is not None and rnd > 1:
+                # leave/rejoin churn stretches the member's round (same
+                # draw point as the cohort engine's dispatch loop)
+                info["duration"] += injector.redispatch_delay(
+                    c.cid, t_virtual)
             updates.append((params_k, c.n_train))
             durations.append(info["duration"])
+            infos.append(info)
+        if injector is not None:
+            offsets = [injector.fedavg_fate(c.cid, t_virtual, d)[0]
+                       for c, d in zip(clients, durations)]
+            keep, round_time = apply_deadline(injector.model, offsets)
+            for c, off, kept in zip(clients, offsets, keep):
+                if off is not None and not kept:
+                    injector.note_deadline_drop(c.cid, t_virtual + off)
+            if not all(keep):
+                injector.note_degraded()
+            t_virtual += (round_time if round_time is not None
+                          else max(durations))
+            updates = [u for u, kept in zip(updates, keep) if kept]
+        else:
+            keep = [True] * len(clients)
+            # straggler effect: the barrier waits for the slowest client
+            t_virtual += max(durations)
+        for c, info, kept in zip(clients, infos, keep):
+            if not kept:
+                continue
             log.update_counts[c.tier] += 1
             log.staleness[c.tier].append(0)  # barrier => no staleness
             log.eps_trajectory[c.tier].append(info["epsilon"])
-        # straggler effect: the barrier waits for the slowest client
-        t_virtual += max(durations)
-        global_params = strat.aggregate(global_params, updates)
+        if updates:
+            global_params = strat.aggregate(global_params, updates)
 
         if rnd % eval_every == 0 or rnd == rounds:
             acc = float(accuracy_fn(global_params, test_data))
@@ -164,13 +213,19 @@ def _run_fedavg_legacy(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    if injector is not None:
+        log.fault_events = list(injector.events)
     return global_params, log
 
 
 def _run_async_legacy(
     clients, global_params, accuracy_fn, test_data, strategy,
     max_updates=300, max_time=None, seed=0, eval_every=5, target_acc=None,
+    faults=None,
 ) -> tuple:
+    from repro.core.faults import FaultInjector
+    injector = (FaultInjector(faults, len(clients))
+                if faults is not None else None)
     log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)
     for c in clients:
@@ -193,22 +248,41 @@ def _run_async_legacy(
     t_virtual = 0.0
     done = False
     while heap and not done:
-        t_virtual, cid = heapq.heappop(heap)
+        t, cid = heapq.heappop(heap)
         c = clients[cid]
+        dropped = False
+        if injector is not None:
+            # resolve the delivery attempt exactly like the cohort engine
+            # (same per-client RNG stream, same draw order): ghosts are
+            # deduped, retried/late uploads re-enter the heap, lost
+            # updates consume the pending round without merging
+            verdict, aux = injector.on_completion(cid, t)
+            if verdict == "duplicate":
+                continue
+            if verdict == "requeue":
+                heapq.heappush(heap, (aux, cid))
+                continue
+            if verdict == "drop":
+                dropped = True
+                injector.note_degraded()
+            elif aux is not None:           # deliver + a scheduled dup copy
+                heapq.heappush(heap, (aux, cid))
+        t_virtual = t
         params_k, info = pending.pop(cid)
-        tau = server_version - c.model_version
-        log.staleness[c.tier].append(tau)
-        log.update_counts[c.tier] += 1
-        log.eps_trajectory[c.tier].append(info["epsilon"])
+        if not dropped:
+            tau = server_version - c.model_version
+            log.staleness[c.tier].append(tau)
+            log.update_counts[c.tier] += 1
+            log.eps_trajectory[c.tier].append(info["epsilon"])
 
-        global_params, inc, _w = apply_update(
-            strategy, global_params, params_k, tau,
-            eps_spent=info["epsilon"])
-        server_version += inc
-        log.influence[c.tier] += float(_w)
+            global_params, inc, _w = apply_update(
+                strategy, global_params, params_k, tau,
+                eps_spent=info["epsilon"])
+            server_version += inc
+            log.influence[c.tier] += float(_w)
 
         total_updates = sum(log.update_counts.values())
-        if total_updates % eval_every == 0:
+        if not dropped and total_updates % eval_every == 0:
             acc = float(accuracy_fn(global_params, test_data))
             log.times.append(t_virtual)
             log.global_acc.append(acc)
@@ -234,9 +308,15 @@ def _run_async_legacy(
             new_params_k, new_info = c.local_train(global_params, sub)
             c.model_version = server_version
             pending[cid] = (new_params_k, new_info)
-            heapq.heappush(heap, (t_virtual + new_info["duration"], cid))
+            t_next = t_virtual + new_info["duration"]
+            if injector is not None:
+                # leave/rejoin churn delays the next local round
+                t_next += injector.redispatch_delay(cid, t_virtual)
+            heapq.heappush(heap, (t_next, cid))
 
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    if injector is not None:
+        log.fault_events = list(injector.events)
     return global_params, log

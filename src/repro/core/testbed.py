@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.client import Client
 from repro.core.dp import DPConfig
+from repro.core.faults import FaultModel
 from repro.core.heterogeneity import PROFILES, TIERS
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic_ser import SERDataConfig, generate, train_test_split
@@ -61,6 +62,8 @@ class TestbedConfig:
     data: SERDataConfig = SERDataConfig()
     model: ser_cnn.SERConfig = ser_cnn.SERConfig()
     workload: str = "ser_cnn"      # repro.api.workloads registry entry
+    faults: Optional[FaultModel] = None  # deterministic fault injection
+                                   # (core.faults; None = fault-free run)
 
 
 def partition_key(cfg: TestbedConfig) -> tuple:

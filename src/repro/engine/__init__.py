@@ -82,13 +82,16 @@ from repro.engine.mesh_backend import (
     cohort_mesh,
     cohort_spec,
 )
+from repro.engine.resilience import CheckpointPolicy, SimulatedCrash
 
 __all__ = [
     "CLIENT_AXES",
+    "CheckpointPolicy",
     "CohortRunner",
     "CohortSharding",
     "EngineConfig",
     "LocalRoundPlan",
+    "SimulatedCrash",
     "assert_cohort_partitioned",
     "cached_cohort_step",
     "cohort_mesh",

@@ -47,6 +47,9 @@ class LocalRoundPlan:
     model_version: int       # server version the client pulled from
     t_complete: float = 0.0
     personal_snapshot: Optional[dict] = None  # received globals at personal keys
+    dropped: bool = False    # update lost to a fault (core.faults): the member
+                             # stays in the compiled cohort as a zero-weight
+                             # mask slot and is never logged as an update
 
 
 def steps_per_round(n: int, batch_size: int, local_epochs: int) -> int:

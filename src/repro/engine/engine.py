@@ -86,6 +86,7 @@ import numpy as np
 from repro.core import accountant as _accountant
 from repro.core.aggregation import (
     AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
+from repro.core.faults import FaultInjector, apply_deadline, zero_fault_stats
 from repro.core.runlog import RunLog, eval_all, validate_engine_stats
 from repro.engine.cohort import (
     LocalRoundPlan, fedavg_weights, fold_cohort_weights, padded_cohort_size,
@@ -309,6 +310,10 @@ class CohortRunner:
         self.host_syncs_between_evals = 0
         self.drain_waits = 0
         self.blocking_submits = 0
+        # fault oracle for the current run — set by the engine loops when
+        # the spec carries a FaultModel; stats() folds its counters into
+        # the ENGINE_STATS_KEYS schema (zeros on a fault-free run)
+        self.fault_injector = None
         # a donated-input dispatch blocks the host (see cohort_step):
         # every serial-path submit on the arena path (and the donating
         # host path) is therefore a per-cohort host sync, counted at the
@@ -342,6 +347,7 @@ class CohortRunner:
         self.host_syncs_between_evals = 0
         self.drain_waits = 0
         self.blocking_submits = 0
+        self.fault_injector = None
 
     # -- host-sync accounting ---------------------------------------------
     def note_host_sync(self):
@@ -426,7 +432,7 @@ class CohortRunner:
         for the cohort's full device time); ``drain_waits`` counts the
         pipelined path's backpressure waits on OLDER cohorts (overlapped,
         no device->host transfer)."""
-        return {
+        out = {
             "data_path": "arena" if self.use_arena else "host",
             "dp_path": self.dp_path,
             "pallas_interpret": self.interpret_info,
@@ -441,6 +447,9 @@ class CohortRunner:
             "blocking_submits": self.blocking_submits,
             "drain_waits": self.drain_waits,
         }
+        inj = self.fault_injector
+        out.update(inj.stats() if inj is not None else zero_fault_stats())
+        return out
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, c, global_params, key, server_version: int
@@ -664,6 +673,9 @@ def run_fedavg_engine(
     engine_cfg: Optional[EngineConfig] = None,
     mesh=None,
     runner: Optional[CohortRunner] = None,
+    faults=None,
+    checkpoint=None,
+    resume_from: Optional[str] = None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9): each round is one full-population
     barrier, executed as ceil(N / max_cohort) compiled cohort chunks whose
@@ -671,12 +683,25 @@ def run_fedavg_engine(
     ``mesh`` partitions the cohort axis (see CohortRunner).  ``runner``
     injects a prebuilt (and already reset) CohortRunner — the Session
     sweep path, which keeps the dataset arena uploaded across runs; its
-    config wins over ``engine_cfg``/``mesh``."""
+    config wins over ``engine_cfg``/``mesh``.
+
+    ``faults`` (a :class:`repro.core.faults.FaultModel`) makes updates
+    lossy: members whose upload is lost stay in the compiled cohort as
+    zero-weight mask slots (no recompile), the barrier honors
+    ``round_deadline_s``/``min_quorum`` partial aggregation with
+    survivor-renormalized Eq. 9 weights, and leave/rejoin churn stretches
+    the member's round.  ``checkpoint`` (a
+    :class:`repro.engine.resilience.CheckpointPolicy`) snapshots the full
+    run state every ``checkpoint.every`` rounds; ``resume_from`` (a
+    checkpoint directory) resumes an aborted run bit-identically."""
     if runner is None:
         cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
         runner = CohortRunner(clients, cfg)
     else:
         cfg = runner.cfg
+    injector = (FaultInjector(faults, len(clients))
+                if faults is not None else None)
+    runner.fault_injector = injector
     log = RunLog(strategy="fedavg")
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
@@ -685,48 +710,89 @@ def run_fedavg_engine(
         log.staleness.setdefault(c.tier, [])
         log.eps_trajectory.setdefault(c.tier, [])
 
+    start_rnd = 1
+    if resume_from is not None:
+        from repro.engine import resilience as _rez
+        global_params, key, t_virtual, rnd0 = _rez.restore_fedavg(
+            resume_from, runner, clients, log, injector, global_params)
+        start_rnd = rnd0 + 1
+        if checkpoint is not None:
+            checkpoint.mark(rnd0)
+
     # pipelined submit/drain across rounds: the barrier is algorithmic
     # (round r+1 trains from round r's merged globals) but not a host
     # sync — the merge output is a device future the next round's
     # dispatch writes reference, so up to cfg.pipeline_depth rounds of
     # compiled work stay in flight between eval boundaries
     inflight = deque()
-    for rnd in range(1, rounds + 1):
+    for rnd in range(start_rnd, rounds + 1):
         plans = []
         for c in clients:
             key, sub = jax.random.split(key)
-            plans.append(runner.dispatch(c, global_params, sub, rnd - 1))
+            p = runner.dispatch(c, global_params, sub, rnd - 1)
+            if injector is not None and rnd > 1:
+                # leave/rejoin churn: the member rejoins late, stretching
+                # its whole barrier round (the initial round never draws)
+                p.duration += injector.redispatch_delay(c.cid, t_virtual)
+            plans.append(p)
         chunks = [plans[i:i + cfg.max_cohort]
                   for i in range(0, len(plans), cfg.max_cohort)]
         stacked_chunks = [
             runner.submit_cohort(runner.stage_cohort(ch)) for ch in chunks]
         log.cohort_sizes.extend(len(ch) for ch in chunks)
-        t_virtual += max(p.duration for p in plans)
+        if injector is not None:
+            fates = [injector.fedavg_fate(p.cid, t_virtual, p.duration)
+                     for p in plans]
+            offsets = [off for off, _ in fates]
+            keep, round_time = apply_deadline(injector.model, offsets)
+            for p, off, kept in zip(plans, offsets, keep):
+                p.dropped = not kept
+                if off is not None and not kept:
+                    injector.note_deadline_drop(p.cid, t_virtual + off)
+            if any(p.dropped for p in plans):
+                injector.note_degraded()
+            # the barrier waits for the effective deadline when it cut
+            # anyone off, else the slowest surviving delivery; a round
+            # that lost EVERY update still burns the full barrier wait
+            t_virtual += (round_time if round_time is not None
+                          else max(p.duration for p in plans))
+        else:
+            t_virtual += max(p.duration for p in plans)
 
         if _fused_ok(FedAvg(), clients, plans, cfg):
             # Eq. 9 as chunked weights-vector reductions: the new globals
-            # accumulate sum_k (n_k / sum n) p_k across the chunks.
+            # accumulate sum_k (n_k / sum n) p_k across the chunks, the
+            # sum running over SURVIVING members only (dropped members
+            # keep their compiled slot with coefficient exactly 0, so a
+            # degraded round re-uses the very same program).
             # (`merged`, not `acc`: the eval scalar below is `acc` — the
             # accumulator pytree must never share its name)
-            _, coeffs = fedavg_weights([clients[p.cid].n_train for p in plans])
-            merged = jax.tree_util.tree_map(jnp.zeros_like, global_params)
-            off = 0
-            for ch, st in zip(chunks, stacked_chunks):
-                merged = runner.merge_cohort(
-                    merged, st, _pad_coeffs(coeffs[off:off + len(ch)], st),
-                    1.0)
-                off += len(ch)
-            global_params = merged
+            if any(not p.dropped for p in plans):
+                _, kept_coeffs = fedavg_weights(
+                    [clients[p.cid].n_train for p in plans if not p.dropped])
+                it = iter(kept_coeffs)
+                coeffs = [0.0 if p.dropped else next(it) for p in plans]
+                merged = jax.tree_util.tree_map(jnp.zeros_like, global_params)
+                off = 0
+                for ch, st in zip(chunks, stacked_chunks):
+                    merged = runner.merge_cohort(
+                        merged, st,
+                        _pad_coeffs(coeffs[off:off + len(ch)], st), 1.0)
+                    off += len(ch)
+                global_params = merged
         else:
             updates = []
             for ch, st in zip(chunks, stacked_chunks):
                 updates.extend(
                     (runner.upload(p, unstack_tree(st, i)),
                      clients[p.cid].n_train)
-                    for i, p in enumerate(ch))
-            global_params = FedAvg().aggregate(global_params, updates)
+                    for i, p in enumerate(ch) if not p.dropped)
+            if updates:
+                global_params = FedAvg().aggregate(global_params, updates)
 
         for p in plans:
+            if p.dropped:
+                continue
             c = clients[p.cid]
             log.update_counts[c.tier] += 1
             log.staleness[c.tier].append(0)  # barrier => no staleness
@@ -749,9 +815,16 @@ def run_fedavg_engine(
                 runner.drain_waits += 1
                 jax.block_until_ready(inflight.popleft())
 
+        if checkpoint is not None and rnd < rounds and checkpoint.due(rnd):
+            from repro.engine import resilience as _rez
+            _rez.save_fedavg(checkpoint, runner, clients, log, injector,
+                             global_params, key, t_virtual, rnd)
+
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    if injector is not None:
+        log.fault_events = list(injector.events)
     log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log
 
@@ -770,6 +843,9 @@ def run_async_engine(
     engine_cfg: Optional[EngineConfig] = None,
     mesh=None,
     runner: Optional[CohortRunner] = None,
+    faults=None,
+    checkpoint=None,
+    resume_from: Optional[str] = None,
 ) -> tuple:
     """Event-driven async FL (Eq. 10-11) over cohorts popped from the
     virtual-clock heap.  ``staleness_window=0`` reproduces the legacy loop
@@ -777,12 +853,31 @@ def run_async_engine(
     completions into one compiled step.  ``mesh`` partitions the cohort
     axis (see CohortRunner).  ``runner`` injects a prebuilt (and already
     reset) CohortRunner — the Session sweep path; its config wins over
-    ``engine_cfg``/``mesh``."""
+    ``engine_cfg``/``mesh``.
+
+    ``faults`` (a :class:`repro.core.faults.FaultModel`) resolves every
+    popped completion event through the seeded
+    :class:`~repro.core.faults.FaultInjector`: retried/late deliveries
+    re-enter the heap at backoff-delayed virtual times, duplicates are
+    deduped, and lost updates keep their compiled cohort slot as a
+    zero-weight mask member (no recompile).  ``checkpoint`` (a
+    :class:`repro.engine.resilience.CheckpointPolicy`) snapshots the run
+    — server params, arenas, RNG streams, the serialized event heap —
+    every ``checkpoint.every`` merged updates; ``resume_from`` resumes an
+    aborted run bit-identically."""
     if runner is None:
         cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
         runner = CohortRunner(clients, cfg)
     else:
         cfg = runner.cfg
+    if ((checkpoint is not None or resume_from is not None)
+            and isinstance(strategy, FedBuff)):
+        raise ValueError(
+            "checkpoint/resume does not support FedBuff — its cross-cohort "
+            "buffer holds live device trees the snapshot cannot capture")
+    injector = (FaultInjector(faults, len(clients))
+                if faults is not None else None)
+    runner.fault_injector = injector
     if runner.donates_globals:
         # the fused merge donates its globals argument; copy ONCE so the
         # first merge consumes our copy, not the caller's buffers (which
@@ -800,13 +895,21 @@ def run_async_engine(
     # Seed the event queue: every client starts training version 0 at t=0.
     heap, pending = [], {}
     server_version = 0
-    for c in clients:
-        key, sub = jax.random.split(key)
-        plan = runner.dispatch(c, global_params, sub, server_version)
-        pending[c.cid] = plan
-        heapq.heappush(heap, (plan.duration, c.cid))
-
     t_virtual = 0.0
+    if resume_from is not None:
+        from repro.engine import resilience as _rez
+        global_params, key, t_virtual, server_version = _rez.restore_async(
+            resume_from, runner, clients, log, injector, global_params,
+            heap, pending)
+        if checkpoint is not None:
+            checkpoint.mark(sum(log.update_counts.values()))
+    else:
+        for c in clients:
+            key, sub = jax.random.split(key)
+            plan = runner.dispatch(c, global_params, sub, server_version)
+            pending[c.cid] = plan
+            heapq.heappush(heap, (plan.duration, c.cid))
+
     done = False
     # pipelined submit/drain: cohorts in flight are capped at
     # cfg.pipeline_depth — past that the loop blocks on the OLDEST
@@ -818,29 +921,70 @@ def run_async_engine(
         events = pop_cohort(heap, cfg.staleness_window, cfg.max_cohort,
                             bucket_pow2=cfg.pow2_cohorts)
         plans = []
-        for t, cid in events:
-            p = pending.pop(cid)
-            p.t_complete = t
-            plans.append(p)
+        if injector is None:
+            for t, cid in events:
+                p = pending.pop(cid)
+                p.t_complete = t
+                plans.append(p)
+        else:
+            # every popped completion is a delivery ATTEMPT the injector
+            # resolves: duplicates are deduped, retried/late uploads
+            # re-enter the heap at a later virtual time (the pending plan
+            # stays pending), lost updates consume their plan as a
+            # zero-weight mask member (dropped=True)
+            for t, cid in events:
+                verdict, aux = injector.on_completion(cid, t)
+                if verdict == "duplicate":
+                    continue
+                if verdict == "requeue":
+                    heapq.heappush(heap, (aux, cid))
+                    continue
+                p = pending.pop(cid)
+                p.t_complete = t
+                if verdict == "drop":
+                    p.dropped = True
+                elif aux is not None:       # deliver + a scheduled dup copy
+                    heapq.heappush(heap, (aux, cid))
+                plans.append(p)
+            if not plans:                   # the whole pop was ghosts/retries
+                continue
         t_virtual = plans[-1].t_complete
         new_stacked = runner.submit_cohort(runner.stage_cohort(plans))
         log.cohort_sizes.append(len(plans))
+        n_dropped = sum(1 for p in plans if p.dropped)
+        if n_dropped:
+            injector.note_degraded()
 
         if _fused_ok(strategy, clients, plans, cfg):
             # staleness weights alpha/(1+tau_i), folded so the single
             # weights-vector reduction equals the sequential merges; member
-            # i's tau accounts for the i earlier merges in this cohort
-            taus = [(server_version + i) - p.model_version
-                    for i, p in enumerate(plans)]
-            weights = [strategy.mixing_weight(tau) for tau in taus]
+            # i's tau accounts for the i earlier DELIVERED merges in this
+            # cohort (dropped members merge with weight 0 — the fold gives
+            # them coefficient exactly 0 and leaves the survivors' terms
+            # bit-identical to a cohort they were never part of)
+            taus, weights = [], []
+            n_del = 0
+            for p in plans:
+                if p.dropped:
+                    taus.append(0)
+                    weights.append(0.0)
+                else:
+                    tau = (server_version + n_del) - p.model_version
+                    taus.append(tau)
+                    weights.append(strategy.mixing_weight(tau))
+                    n_del += 1
             g_coeff, coeffs = fold_cohort_weights(weights)
             global_params = runner.merge_cohort(
                 global_params, new_stacked, _pad_coeffs(coeffs, new_stacked),
                 g_coeff)
-            server_version += len(plans)
+            server_version += n_del
         else:
             taus, weights = [], []
             for i, p in enumerate(plans):
+                if p.dropped:
+                    taus.append(0)
+                    weights.append(0.0)
+                    continue
                 up = runner.upload(p, unstack_tree(new_stacked, i))
                 tau = server_version - p.model_version
                 global_params, inc, w = apply_update(
@@ -850,6 +994,8 @@ def run_async_engine(
                 weights.append(w)
 
         for p, tau, w in zip(plans, taus, weights):
+            if p.dropped:
+                continue
             c = clients[p.cid]
             log.staleness[c.tier].append(tau)
             log.update_counts[c.tier] += 1
@@ -858,7 +1004,7 @@ def run_async_engine(
 
         total_updates = sum(log.update_counts.values())
         crossed = any((total_updates - j) % eval_every == 0
-                      for j in range(len(plans)))
+                      for j in range(len(plans) - n_dropped))
         if crossed:
             # eval boundary — the pipelined schedule's ONLY sanctioned
             # host block between start and end of run: fetching the
@@ -880,23 +1026,36 @@ def run_async_engine(
             for p in plans:
                 c = clients[p.cid]
                 # joint aggregation-privacy adaptation: a client that has
-                # exhausted its budget STOPS training (see legacy loop)
+                # exhausted its budget STOPS training (see legacy loop) —
+                # dropped members DO re-dispatch (their device crashed at
+                # upload, the budget was still spent)
                 if (isinstance(strategy, AdaptiveAsync)
                         and p.epsilon >= strategy.eps_target):
                     continue
                 key, sub = jax.random.split(key)
                 plan = runner.dispatch(c, global_params, sub, server_version)
                 pending[c.cid] = plan
-                heapq.heappush(heap, (p.t_complete + plan.duration, c.cid))
+                t_next = p.t_complete + plan.duration
+                if injector is not None:
+                    # leave/rejoin churn delays the next local round
+                    t_next += injector.redispatch_delay(c.cid, p.t_complete)
+                heapq.heappush(heap, (t_next, c.cid))
             if runner.pipelined:
                 inflight.append(jax.tree_util.tree_leaves(new_stacked)
                                 + jax.tree_util.tree_leaves(global_params))
                 while len(inflight) > cfg.pipeline_depth:
                     runner.drain_waits += 1
                     jax.block_until_ready(inflight.popleft())
+            if checkpoint is not None and checkpoint.due(total_updates):
+                from repro.engine import resilience as _rez
+                _rez.save_async(checkpoint, runner, clients, log, injector,
+                                global_params, key, heap, pending, t_virtual,
+                                server_version, total_updates)
 
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
+    if injector is not None:
+        log.fault_events = list(injector.events)
     log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log

@@ -1,0 +1,351 @@
+"""Crash-resilient engine runs: snapshot / restore for the cohort loops.
+
+The engine loops (:func:`repro.engine.engine.run_fedavg_engine` /
+``run_async_engine``) call :func:`save_fedavg` / :func:`save_async` at
+loop-consistent points — the end of a barrier round, the end of one
+event-loop body after re-dispatch — and :func:`restore_fedavg` /
+:func:`restore_async` on ``resume_from``.  A snapshot captures EVERY
+input the remaining iterations read:
+
+* the server globals and the jax PRNG key chain;
+* the device-resident client arena (params + optimizer state, with the
+  queued dispatch writes flushed first — flushing early is a bitwise
+  no-op, the scatters write the same values either way);
+* every pending :class:`~repro.engine.cohort.LocalRoundPlan` (batch
+  index plan, dispatch key, duration, epsilon, pulled version) and the
+  serialized event heap, ghost duplicate entries included;
+* per-client host state: the numpy RNG streams (batch permutations and
+  the virtual clock), dropout counters, update counts, accountant log
+  moments, personal subtrees;
+* the :class:`RunLog` so far, the
+  :class:`~repro.core.faults.FaultInjector` state (its RNG streams
+  resume mid-fault-sequence) and the runner's scheduler counters.
+
+Restoring replays the rest of the run **bit-identically** to the
+uninterrupted one — the abort/resume tier-1 tests assert RunLog equality
+down to the float.  Deliberately NOT captured: the dataset arena and the
+compiled steps (pure functions of the config — rebuilt), the
+``EpsilonSchedule`` memo (pure), and the pipelined driver's in-flight
+window (futures cannot be serialized; it refills within
+``pipeline_depth`` cohorts, so only the wall-clock overlap — never a
+logged value — differs on resume.  ``drain_waits`` is therefore exact on
+the serial driver and approximate across a resume of a pipelined run).
+
+Storage is the durable flat-npz store in :mod:`repro.checkpoint`
+(atomic publish, ``keep_last`` retention, escaped tree-path keys);
+arrays land in the npz, scalars/lists ride the JSON ``_meta`` entry
+(floats round-trip exactly through JSON repr).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as _ckpt
+from repro.checkpoint.checkpoint import _escape, _path_key
+from repro.engine.cohort import LocalRoundPlan
+
+_RUNNER_COUNTERS = ("cohorts_run", "h2d_bytes_total", "host_syncs_at_eval",
+                    "host_syncs_between_evals", "blocking_submits",
+                    "drain_waits")
+_RUNLOG_FIELDS = ("times", "global_acc", "server_version", "update_counts",
+                  "influence", "staleness", "eps_trajectory", "local_acc",
+                  "cohort_sizes")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by :class:`CheckpointPolicy` after ``crash_after_saves``
+    snapshots — the fault-smoke benchmark and the abort/resume tests
+    kill a run at a published checkpoint without killing the process."""
+
+
+@dataclass
+class CheckpointPolicy:
+    """When and where the engine loops snapshot.
+
+    ``every`` counts the loop's progress unit — barrier rounds for
+    fedavg, merged updates for async.  ``keep_last`` bounds on-disk
+    retention (see :mod:`repro.checkpoint`).  ``crash_after_saves=N``
+    raises :class:`SimulatedCrash` right after the N-th successful save
+    of this policy object — deterministic mid-flight aborts for tests.
+    """
+
+    directory: str
+    every: int = 10
+    keep_last: int = 3
+    crash_after_saves: Optional[int] = None
+    saves: int = field(default=0, init=False)
+    _next: int = field(default=0, init=False, repr=False)
+
+    def __post_init__(self):
+        if self.every < 1 or self.every != int(self.every):
+            raise ValueError(
+                f"CheckpointPolicy.every must be an int >= 1: {self.every!r}")
+        if self.keep_last < 1:
+            raise ValueError(
+                f"CheckpointPolicy.keep_last must be >= 1: {self.keep_last!r}")
+        self._next = self.every
+
+    def due(self, step: int) -> bool:
+        return step >= self._next
+
+    def mark(self, step: int):
+        """Advance the cadence past ``step`` (called after a save, and on
+        resume so the first post-resume snapshot lands on the next
+        multiple instead of re-saving the restored step)."""
+        self._next = (int(step) // self.every + 1) * self.every
+
+    def _publish(self, step: int, tree: dict, meta: dict) -> str:
+        path = _ckpt.save(self.directory, step, tree, meta,
+                          keep_last=self.keep_last)
+        self.mark(step)
+        self.saves += 1
+        if (self.crash_after_saves is not None
+                and self.saves >= self.crash_after_saves):
+            raise SimulatedCrash(
+                f"simulated crash after checkpoint #{self.saves} "
+                f"(step {step}, {path})")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# flat-tree helpers (escaped keys shared with repro.checkpoint)
+# ---------------------------------------------------------------------------
+
+def _add_tree(flat: dict, prefix: str, tree):
+    """Flatten ``tree`` into ``flat`` under ``prefix`` with the store's
+    escaped path keys (collision within a snapshot is a bug)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = f"{prefix}/{_path_key(path)}" if path else prefix
+        if key in flat:
+            raise ValueError(f"snapshot key collision: {key!r}")
+        flat[key] = np.asarray(jax.device_get(leaf))
+
+
+def _fetch(flat: dict, key: str):
+    """Read one snapshot array back.  The snapshot hands ``_ckpt.save`` an
+    ALREADY-flat dict, so the store escapes each joined key once more as a
+    single path component — reads must apply the same (injective) escape."""
+    return flat[_escape(key)]
+
+
+def _get_tree(flat: dict, prefix: str, template):
+    """Rebuild a pytree from snapshot arrays using the LIVE template for
+    structure and device placement.  Leaves whose template sharding spans
+    several devices (the state arenas on a mesh) go back under that exact
+    sharding; everything else returns as a host array — uncommitted, so
+    downstream jitted computations place it exactly like the fresh-run
+    path does (a ``device_put`` onto the template's single device would
+    COMMIT the restored globals there and fight the mesh-constrained
+    arena init)."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = f"{prefix}/{_path_key(path)}" if path else prefix
+        arr = _fetch(flat, key)
+        if isinstance(leaf, jax.Array) and len(leaf.sharding.device_set) > 1:
+            out.append(jax.device_put(arr, leaf.sharding))
+        else:
+            out.append(np.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+# ---------------------------------------------------------------------------
+# snapshot assembly (shared by the fedavg / async save paths)
+# ---------------------------------------------------------------------------
+
+def _require_arena(runner):
+    if not runner.use_arena:
+        raise ValueError(
+            "checkpoint/resume requires the device-arena data path "
+            "(EngineConfig.device_arena=True with pytree-rule shardings) — "
+            "the host path keeps per-client optimizer trees outside the "
+            "snapshot's reach")
+
+
+def _snapshot_common(runner, clients, log, injector, global_params, key,
+                     pending: dict):
+    """Build the (arrays, meta) pair every loop kind shares."""
+    _require_arena(runner)
+    runner._flush_writes()      # queued dispatch writes land in the arena
+    flat = {"prng_key": np.asarray(jax.device_get(key))}
+    _add_tree(flat, "globals", global_params)
+    if runner._arena_params is not None:
+        _add_tree(flat, "arena_params", runner._arena_params)
+        _add_tree(flat, "arena_opt", runner._arena_opt)
+    cmeta = {}
+    for c in clients:
+        cmeta[str(c.cid)] = {
+            "rng": c.rng.bit_generator.state,
+            "clock_rng": c.clock.rng.bit_generator.state,
+            "clock_dropouts": int(c.clock.dropouts),
+            "update_count": int(c.update_count),
+            "model_version": int(c.model_version),
+            "acct_steps": int(c.accountant.steps),
+            "has_personal": c._personal is not None,
+        }
+        flat[f"acct_mu/{c.cid}"] = np.asarray(c.accountant._mu)
+        if c._personal is not None:
+            _add_tree(flat, f"personal/{c.cid}", c._personal)
+    pmeta = {}
+    for cid, p in pending.items():
+        pmeta[str(cid)] = {
+            "n_steps": int(p.n_steps),
+            "duration": float(p.duration),
+            "epsilon": float(p.epsilon),
+            "model_version": int(p.model_version),
+            "has_personal": p.personal_snapshot is not None,
+        }
+        flat[f"plan_batch_idx/{cid}"] = np.asarray(p.batch_idx)
+        flat[f"plan_key/{cid}"] = np.asarray(jax.device_get(p.key))
+        if p.personal_snapshot is not None:
+            _add_tree(flat, f"plan_personal/{cid}", p.personal_snapshot)
+    meta = {
+        "strategy": log.strategy,
+        "num_clients": len(clients),
+        "has_arena": runner._arena_params is not None,
+        "clients": cmeta,
+        "pending": pmeta,
+        "runlog": {f: getattr(log, f) for f in _RUNLOG_FIELDS},
+        "fault_events": [list(e) for e in log.fault_events],
+        "injector": injector.state_dict() if injector is not None else None,
+        "runner": {k: int(getattr(runner, k)) for k in _RUNNER_COUNTERS},
+    }
+    return flat, meta
+
+
+def _restore_common(flat, meta, runner, clients, log, injector,
+                    global_params):
+    """Inverse of :func:`_snapshot_common`; returns (globals, key)."""
+    _require_arena(runner)
+    if meta["strategy"] != log.strategy:
+        raise ValueError(
+            f"checkpoint was taken under strategy {meta['strategy']!r}, "
+            f"cannot resume a {log.strategy!r} run from it")
+    if meta["num_clients"] != len(clients):
+        raise ValueError(
+            f"checkpoint has {meta['num_clients']} clients, the resuming "
+            f"testbed has {len(clients)}")
+    if (injector is None) != (meta["injector"] is None):
+        raise ValueError(
+            "fault configuration mismatch: the checkpointed run and the "
+            "resuming run must both carry the same FaultModel (or neither)")
+    globals_ = _get_tree(flat, "globals", global_params)
+    key = jax.numpy.asarray(_fetch(flat, "prng_key"))
+    if meta["has_arena"]:
+        runner._ensure_state_arenas(globals_)
+        runner._arena_params = _get_tree(
+            flat, "arena_params", runner._arena_params)
+        runner._arena_opt = _get_tree(flat, "arena_opt", runner._arena_opt)
+    for c in clients:
+        cm = meta["clients"][str(c.cid)]
+        c.rng.bit_generator.state = cm["rng"]
+        c.clock.rng.bit_generator.state = cm["clock_rng"]
+        c.clock.dropouts = int(cm["clock_dropouts"])
+        c.update_count = int(cm["update_count"])
+        c.model_version = int(cm["model_version"])
+        c.accountant.steps = int(cm["acct_steps"])
+        c.accountant._mu = np.array(
+            _fetch(flat, f"acct_mu/{c.cid}"), np.float64)
+        if cm["has_personal"]:
+            tmpl = {k: globals_[k] for k in c.personal_keys}
+            c._personal = _get_tree(flat, f"personal/{c.cid}", tmpl)
+        else:
+            c._personal = None
+    for f in _RUNLOG_FIELDS:
+        setattr(log, f, meta["runlog"][f])
+    log.fault_events = [(str(k), int(cid), float(t))
+                        for k, cid, t in meta["fault_events"]]
+    if injector is not None:
+        injector.load_state_dict(meta["injector"])
+    for k in _RUNNER_COUNTERS:
+        setattr(runner, k, int(meta["runner"][k]))
+    return globals_, key
+
+
+def _restore_pending(flat, meta, clients, globals_) -> dict:
+    pending = {}
+    for cid_s, pm in meta["pending"].items():
+        cid = int(cid_s)
+        snapshot = None
+        if pm["has_personal"]:
+            tmpl = {k: globals_[k] for k in clients[cid].personal_keys}
+            snapshot = _get_tree(flat, f"plan_personal/{cid}", tmpl)
+        plan = LocalRoundPlan(
+            cid=cid, params0=None, opt_state=None,
+            batch_idx=np.asarray(
+                _fetch(flat, f"plan_batch_idx/{cid}"), np.int32),
+            key=jax.numpy.asarray(_fetch(flat, f"plan_key/{cid}")),
+            n_steps=int(pm["n_steps"]), duration=float(pm["duration"]),
+            epsilon=float(pm["epsilon"]),
+            model_version=int(pm["model_version"]))
+        plan.personal_snapshot = snapshot
+        pending[cid] = plan
+    return pending
+
+
+# ---------------------------------------------------------------------------
+# loop-facing entry points
+# ---------------------------------------------------------------------------
+
+def save_async(policy: CheckpointPolicy, runner, clients, log, injector,
+               global_params, key, heap, pending, t_virtual: float,
+               server_version: int, total_updates: int) -> str:
+    """Snapshot an async run at the end of one event-loop body (after
+    re-dispatch: ``pending``/``heap`` describe the NEXT events)."""
+    flat, meta = _snapshot_common(
+        runner, clients, log, injector, global_params, key, pending)
+    meta.update(kind="async", t_virtual=float(t_virtual),
+                engine_version=int(server_version),
+                heap=[[float(t), int(cid)] for t, cid in heap])
+    return policy._publish(int(total_updates), flat, meta)
+
+
+def restore_async(directory: str, runner, clients, log, injector,
+                  global_params, heap, pending) -> tuple:
+    """Rebuild async loop state in place (``heap``/``pending`` are filled);
+    returns ``(global_params, key, t_virtual, server_version)``."""
+    flat, meta = _ckpt.load_flat(directory)
+    if meta.get("kind") != "async":
+        raise ValueError(
+            f"checkpoint in {directory!r} is kind={meta.get('kind')!r}, "
+            "expected an async-engine snapshot")
+    globals_, key = _restore_common(
+        flat, meta, runner, clients, log, injector, global_params)
+    pending.update(_restore_pending(flat, meta, clients, globals_))
+    heap[:] = [(float(t), int(cid)) for t, cid in meta["heap"]]
+    heapq.heapify(heap)     # saved in heap order already — belt and braces
+    return globals_, key, float(meta["t_virtual"]), int(
+        meta["engine_version"])
+
+
+def save_fedavg(policy: CheckpointPolicy, runner, clients, log, injector,
+                global_params, key, t_virtual: float, rnd: int) -> str:
+    """Snapshot a fedavg run at the end of barrier round ``rnd`` (the
+    round's merge, logging and eval are already in ``log``)."""
+    flat, meta = _snapshot_common(
+        runner, clients, log, injector, global_params, key, pending={})
+    meta.update(kind="fedavg", t_virtual=float(t_virtual), round=int(rnd))
+    return policy._publish(int(rnd), flat, meta)
+
+
+def restore_fedavg(directory: str, runner, clients, log, injector,
+                   global_params) -> tuple:
+    """Returns ``(global_params, key, t_virtual, completed_round)``."""
+    flat, meta = _ckpt.load_flat(directory)
+    if meta.get("kind") != "fedavg":
+        raise ValueError(
+            f"checkpoint in {directory!r} is kind={meta.get('kind')!r}, "
+            "expected a fedavg-engine snapshot")
+    globals_, key = _restore_common(
+        flat, meta, runner, clients, log, injector, global_params)
+    return globals_, key, float(meta["t_virtual"]), int(meta["round"])
+
+
+__all__ = ["SimulatedCrash", "CheckpointPolicy",
+           "save_async", "restore_async", "save_fedavg", "restore_fedavg"]

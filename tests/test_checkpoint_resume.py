@@ -1,0 +1,203 @@
+"""Crash-resilient runs: the durable flat-npz store (atomic publish,
+retention, escaped keys) and the engine checkpoint/resume path — an
+aborted run resumed from its latest snapshot must reproduce the
+uninterrupted run's RunLog bit-identically, fault sequence included."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api.session import Session
+from repro.api.spec import ExperimentSpec, RunBudget, StrategySpec
+from repro.checkpoint import latest_step, load_flat, restore, save
+from repro.checkpoint.checkpoint import _step_files
+from repro.core.faults import FaultModel
+from repro.core.testbed import SERDataConfig, TestbedConfig
+from repro.engine import CheckpointPolicy, SimulatedCrash
+
+FAULTS = FaultModel(seed=7, failure_prob=0.1, upload_loss_prob=0.15,
+                    max_retries=1, retry_backoff_s=4.0, duplicate_prob=0.15,
+                    late_prob=0.1, leave_prob=0.1, rejoin_delay_s=40.0)
+TB = TestbedConfig(num_clients=4, data=SERDataConfig(n_total=160),
+                   batch_size=32, sigma=0.5, faults=FAULTS)
+ASYNC_SPEC = ExperimentSpec(
+    testbed=TB, strategy=StrategySpec("fedasync", alpha=0.6),
+    run=RunBudget(max_updates=18, eval_every=6))
+FEDAVG_SPEC = ExperimentSpec(
+    testbed=TestbedConfig(
+        num_clients=4, data=SERDataConfig(n_total=160), batch_size=32,
+        sigma=0.5,
+        faults=FaultModel(seed=7, failure_prob=0.12, upload_loss_prob=0.1,
+                          max_retries=1, retry_backoff_s=4.0, leave_prob=0.1,
+                          rejoin_delay_s=40.0, round_deadline_s=300.0,
+                          min_quorum=2)),
+    strategy=StrategySpec("fedavg"), run=RunBudget(rounds=10, eval_every=2))
+
+
+def _logdict(log):
+    """Every RunLog field the bit-identity contract covers (engine_stats
+    carries no wall-time — it is exact across an abort)."""
+    return dict(times=log.times, acc=log.global_acc,
+                sv=log.server_version, uc=dict(log.update_counts),
+                inf=log.influence, st=log.staleness,
+                eps={k: list(v) for k, v in log.eps_trajectory.items()},
+                fe=list(log.fault_events), es=dict(log.engine_stats),
+                cs=list(log.cohort_sizes), dr=dict(log.dropouts))
+
+
+def _assert_identical(run_a, run_b):
+    (p_a, log_a), (p_b, log_b) = run_a, run_b
+    a, b = _logdict(log_a), _logdict(log_b)
+    assert a == b, [k for k in a if a[k] != b[k]]
+    for x, y in zip(jax.tree_util.tree_leaves(p_a),
+                    jax.tree_util.tree_leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def async_plain():
+    return Session().run(ASYNC_SPEC)
+
+
+@pytest.fixture(scope="module")
+def fedavg_plain():
+    return Session().run(FEDAVG_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# the durable store
+# ---------------------------------------------------------------------------
+
+def test_store_escaped_keys_cannot_collide(tmp_path):
+    """{"a": {"b": x}} and {"a/b": y} used to flatten to the SAME npz key;
+    the escaped keys keep both leaves (satellite regression)."""
+    d = str(tmp_path)
+    tree = {"a": {"b": np.full(3, 1.0, np.float32)},
+            "a/b": np.full(3, 2.0, np.float32)}
+    save(d, 0, tree)
+    flat, _ = load_flat(d)
+    assert sorted(flat) == ["a/b", "a\\/b"]
+    got, _ = restore(d, {"a": {"b": np.zeros(3, np.float32)},
+                         "a/b": np.zeros(3, np.float32)})
+    np.testing.assert_array_equal(got["a"]["b"], tree["a"]["b"])
+    np.testing.assert_array_equal(got["a/b"], tree["a/b"])
+
+
+def test_store_keep_last_prunes_oldest(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2, 3, 4, 5):
+        save(d, step, {"x": np.array([step])}, keep_last=3)
+    assert _step_files(d) == [f"step_{s:08d}.npz" for s in (3, 4, 5)]
+    assert latest_step(d) == 5
+    with pytest.raises(ValueError, match="keep_last"):
+        save(d, 6, {"x": np.zeros(1)}, keep_last=0)
+
+
+def test_store_ignores_torn_tmp_files(tmp_path):
+    """A crash mid-save leaves a .tmp sibling; readers never see it."""
+    d = str(tmp_path)
+    save(d, 2, {"x": np.arange(4)})
+    with open(os.path.join(d, "step_00000009.npz.tmp"), "wb") as f:
+        f.write(b"torn")
+    assert latest_step(d) == 2
+    assert _step_files(d) == ["step_00000002.npz"]
+
+
+def test_store_meta_and_dtype_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+         "n": np.array(7, dtype=np.int32)}
+    save(d, 4, t, meta={"kind": "unit", "t_virtual": 0.1 + 0.2})
+    flat, meta = load_flat(d)
+    assert meta == {"step": 4, "kind": "unit", "t_virtual": 0.1 + 0.2}
+    np.testing.assert_array_equal(flat["w"], t["w"])
+    got, _ = restore(d, {"w": np.zeros((2, 3), np.float32),
+                         "n": np.array(0, np.int32)})
+    assert got["n"].dtype == np.int32 and int(got["n"]) == 7
+
+
+def test_checkpoint_policy_validation_and_cadence(tmp_path):
+    with pytest.raises(ValueError, match="every"):
+        CheckpointPolicy(directory=str(tmp_path), every=0)
+    with pytest.raises(ValueError, match="keep_last"):
+        CheckpointPolicy(directory=str(tmp_path), keep_last=0)
+    p = CheckpointPolicy(directory=str(tmp_path), every=5)
+    assert not p.due(4) and p.due(5) and p.due(7)
+    p.mark(7)                      # resumed at step 7: next snapshot at 10
+    assert not p.due(9) and p.due(10)
+
+
+# ---------------------------------------------------------------------------
+# engine abort/resume (tentpole acceptance: bit-identical RunLog)
+# ---------------------------------------------------------------------------
+
+def _crash_then_resume(spec, ckdir, every, crash_after):
+    with pytest.raises(SimulatedCrash):
+        Session().run(spec, checkpoint_every=every, checkpoint_dir=ckdir,
+                      crash_after_saves=crash_after)
+    assert latest_step(ckdir) is not None
+    return Session().run(spec, checkpoint_every=every, checkpoint_dir=ckdir,
+                         resume_from=ckdir)
+
+
+def test_checkpointed_uninterrupted_run_matches_plain(tmp_path, async_plain):
+    """Snapshotting is observation-free: a run that checkpoints but never
+    crashes equals the plain run bit-for-bit (the early write-flush the
+    snapshot forces is a bitwise no-op)."""
+    run = Session().run(ASYNC_SPEC, checkpoint_every=5,
+                        checkpoint_dir=str(tmp_path))
+    _assert_identical(async_plain, run)
+
+
+def test_async_abort_resume_bit_identical(tmp_path, async_plain):
+    resumed = _crash_then_resume(ASYNC_SPEC, str(tmp_path), every=5,
+                                 crash_after=2)
+    _assert_identical(async_plain, resumed)
+
+
+def test_fedavg_abort_resume_bit_identical(tmp_path, fedavg_plain):
+    resumed = _crash_then_resume(FEDAVG_SPEC, str(tmp_path), every=3,
+                                 crash_after=2)
+    _assert_identical(fedavg_plain, resumed)
+
+
+def test_checkpoint_every_requires_directory():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        Session().run(ASYNC_SPEC, checkpoint_every=5)
+
+
+def test_legacy_backend_refuses_checkpoint(tmp_path):
+    from dataclasses import replace
+    spec = replace(ASYNC_SPEC, backend="legacy")
+    with pytest.raises(ValueError, match="legacy"):
+        Session().run(spec, checkpoint_every=5,
+                      checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="legacy"):
+        Session().run(spec, resume_from=str(tmp_path))
+
+
+def test_fedbuff_refuses_checkpoint(tmp_path):
+    from dataclasses import replace
+    spec = replace(ASYNC_SPEC,
+                   strategy=StrategySpec("fedbuff", alpha=0.4,
+                                         buffer_size=2))
+    with pytest.raises(ValueError, match="FedBuff"):
+        Session().run(spec, checkpoint_every=5,
+                      checkpoint_dir=str(tmp_path))
+
+
+def test_resume_refuses_kind_and_fault_mismatch(tmp_path):
+    """A fedavg snapshot cannot seed an async loop, and the resuming spec
+    must carry the same FaultModel-or-not as the checkpointed run."""
+    from dataclasses import replace
+    ckdir = str(tmp_path)
+    with pytest.raises(SimulatedCrash):
+        Session().run(FEDAVG_SPEC, checkpoint_every=3, checkpoint_dir=ckdir,
+                      crash_after_saves=1)
+    with pytest.raises(ValueError, match="kind"):
+        Session().run(ASYNC_SPEC, resume_from=ckdir)
+    no_faults = replace(FEDAVG_SPEC,
+                        testbed=replace(FEDAVG_SPEC.testbed, faults=None))
+    with pytest.raises(ValueError, match="[Ff]ault"):
+        Session().run(no_faults, resume_from=ckdir)

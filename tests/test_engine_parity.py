@@ -110,6 +110,31 @@ def test_arena_data_path_matches_host_path(micro_cfg):
                 < log_h.engine_stats["h2d_bytes_per_cohort"])
 
 
+def test_dropout_counters_match_across_backends(micro_cfg):
+    """RunLog.dropouts (the passive delay-dropouts of the heterogeneity
+    layer, paper Table 2) must agree between the legacy loop and the
+    cohort engine — both drive the SAME per-client VirtualClock stream,
+    so the per-tier counters are identical, not just close."""
+    from repro.core.server import run_fedavg
+
+    def boosted():
+        clients, params, acc_fn, test = build_testbed(micro_cfg)
+        for c in clients[:2]:      # make dropouts certain in 4 rounds
+            c.profile = replace(c.profile, dropout_per_round=0.7,
+                                dropout_penalty_s=60.0)
+            c.reset()              # rebuild the clock over the new profile
+        return clients, params, acc_fn, test
+
+    logs = {}
+    for engine in ("legacy", "cohort"):
+        clients, params, acc_fn, test = boosted()
+        _, logs[engine] = run_fedavg(
+            clients, params, acc_fn, test, rounds=4,
+            seed=micro_cfg.seed, eval_every=2, engine=engine)
+    assert logs["legacy"].dropouts == logs["cohort"].dropouts
+    assert sum(logs["legacy"].dropouts.values()) > 0
+
+
 def test_async_engine_preserves_callers_initial_params(micro_cfg):
     """The arena path's fused merge donates its globals argument; the
     engine must consume a COPY of the caller's initial params so they

@@ -1,0 +1,236 @@
+"""Deterministic fault injection (repro.core.faults): model validation,
+the fedavg deadline/quorum policy, same-seed replay determinism, and the
+tentpole acceptance criterion — the SAME FaultModel replays the identical
+fault event sequence on both execution backends (legacy per-client loop
+vs cohort engine at staleness_window=0) with degraded cohorts riding the
+existing zero-weight mask slots (no new compiles)."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    FAULT_STATS_KEYS, FaultInjector, FaultModel, apply_deadline,
+    zero_fault_stats)
+from repro.core.runlog import ENGINE_STATS_KEYS
+from repro.core.testbed import run_experiment
+
+# Probabilities high enough that a short run exercises every fault kind.
+CHAOS = FaultModel(seed=7, failure_prob=0.1, upload_loss_prob=0.15,
+                   max_retries=1, retry_backoff_s=4.0, duplicate_prob=0.15,
+                   late_prob=0.1, leave_prob=0.1, rejoin_delay_s=40.0)
+BARRIER = FaultModel(seed=7, failure_prob=0.12, upload_loss_prob=0.1,
+                     max_retries=1, retry_backoff_s=4.0, leave_prob=0.1,
+                     rejoin_delay_s=40.0, round_deadline_s=300.0,
+                     min_quorum=2)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel validation + stats schema
+# ---------------------------------------------------------------------------
+
+def test_fault_model_validates_at_construction():
+    with pytest.raises(ValueError, match="failure_prob"):
+        FaultModel(failure_prob=1.5)
+    with pytest.raises(ValueError, match="leave_prob"):
+        FaultModel(leave_prob=-0.1)
+    with pytest.raises(ValueError, match="seed"):
+        FaultModel(seed=-1)
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultModel(max_retries=-2)
+    with pytest.raises(ValueError, match="rejoin_delay_s"):
+        FaultModel(rejoin_delay_s=-5.0)
+    # zero re-entry delays under a positive probability would freeze
+    # virtual time
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        FaultModel(upload_loss_prob=0.5, retry_backoff_s=0.0)
+    with pytest.raises(ValueError, match="duplicate_delay_s"):
+        FaultModel(duplicate_prob=0.5, duplicate_delay_s=0.0)
+    with pytest.raises(ValueError, match="round_deadline_s"):
+        FaultModel(round_deadline_s=0.0)
+    with pytest.raises(ValueError, match="min_quorum"):
+        FaultModel(min_quorum=0)
+    FaultModel()  # the all-quiet default is valid
+
+
+def test_fault_stats_schema_is_part_of_engine_stats():
+    assert set(FAULT_STATS_KEYS) <= set(ENGINE_STATS_KEYS)
+    z = zero_fault_stats()
+    assert set(z) == set(FAULT_STATS_KEYS)
+    assert all(v == 0 for v in z.values())
+
+
+# ---------------------------------------------------------------------------
+# apply_deadline (fedavg partial aggregation policy)
+# ---------------------------------------------------------------------------
+
+def test_apply_deadline_no_deadline_keeps_all_survivors():
+    m = FaultModel()
+    keep, rt = apply_deadline(m, [10.0, None, 30.0])
+    assert keep == [True, False, True]
+    assert rt == 30.0
+
+
+def test_apply_deadline_nothing_survived():
+    keep, rt = apply_deadline(FaultModel(), [None, None])
+    assert keep == [False, False]
+    assert rt is None
+
+
+def test_apply_deadline_cuts_stragglers():
+    m = FaultModel(round_deadline_s=300.0, min_quorum=1)
+    keep, rt = apply_deadline(m, [10.0, 50.0, 400.0])
+    assert keep == [True, True, False]
+    assert rt == 300.0          # the round stopped AT the deadline
+
+
+def test_apply_deadline_stretches_to_quorum():
+    m = FaultModel(round_deadline_s=50.0, min_quorum=2)
+    keep, rt = apply_deadline(m, [100.0, 200.0, 400.0])
+    # the plain deadline would keep nobody; it stretches to the 2nd
+    # smallest surviving delivery
+    assert keep == [True, True, False]
+    assert rt == 200.0
+
+
+def test_apply_deadline_nobody_cut_charges_slowest_kept():
+    m = FaultModel(round_deadline_s=300.0, min_quorum=1)
+    keep, rt = apply_deadline(m, [10.0, 20.0, None])
+    assert keep == [True, True, False]
+    assert rt == 20.0           # nobody hit the deadline: normal barrier
+
+
+def test_apply_deadline_quorum_larger_than_survivors():
+    m = FaultModel(round_deadline_s=1.0, min_quorum=5)
+    keep, rt = apply_deadline(m, [10.0, 30.0])
+    assert keep == [True, True]     # quorum clamps to the survivor count
+    assert rt == 30.0
+
+
+# ---------------------------------------------------------------------------
+# injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injector_same_seed_replays_identically():
+    a, b = FaultInjector(CHAOS, 4), FaultInjector(CHAOS, 4)
+    for inj in (a, b):
+        for step in range(40):
+            cid = step % 4
+            inj.on_completion(cid, 10.0 * step)
+            inj.redispatch_delay(cid, 10.0 * step + 1.0)
+    assert a.events == b.events
+    assert a.stats() == b.stats()
+    assert a.events                  # the chaos model actually fired
+
+
+def test_injector_state_dict_roundtrip_resumes_mid_sequence():
+    ref = FaultInjector(CHAOS, 3)
+    for step in range(30):
+        ref.on_completion(step % 3, 7.0 * step)
+
+    half = FaultInjector(CHAOS, 3)
+    for step in range(15):
+        half.on_completion(step % 3, 7.0 * step)
+    resumed = FaultInjector(CHAOS, 3)
+    resumed.load_state_dict(half.state_dict())
+    for step in range(15, 30):
+        resumed.on_completion(step % 3, 7.0 * step)
+    assert resumed.events == ref.events
+    assert resumed.stats() == ref.stats()
+
+
+def test_injector_ledger_invariant():
+    inj = FaultInjector(CHAOS, 4)
+    for step in range(60):
+        inj.on_completion(step % 4, 5.0 * step)
+    s = inj.stats()
+    assert s["fault_upload_losses"] > 0
+    assert s["fault_upload_losses"] == (
+        s["fault_retries"] + s["fault_lost_updates"])
+
+
+# ---------------------------------------------------------------------------
+# cross-backend fault replay parity (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def _faulty(cfg, model):
+    return replace(cfg, faults=model)
+
+
+def test_async_fault_events_match_across_backends(micro_cfg):
+    cfg = _faulty(micro_cfg, CHAOS)
+    kw = dict(max_updates=24, eval_every=6, alpha=0.4)
+    _, log_leg = run_experiment("fedasync", cfg, engine="legacy", **kw)
+    _, log_eng = run_experiment("fedasync", cfg, engine="cohort", **kw)
+    assert log_leg.fault_events, "the chaos model produced no faults"
+    assert log_leg.fault_events == log_eng.fault_events
+    assert log_leg.update_counts == log_eng.update_counts
+    assert log_leg.staleness == log_eng.staleness
+    np.testing.assert_allclose(log_leg.global_acc, log_eng.global_acc,
+                               atol=1e-5)
+    # the engine reports the counters; the legacy loop reports only the
+    # event list (engine_stats is the engine's schema)
+    s = log_eng.engine_stats
+    assert s["fault_upload_losses"] == (
+        s["fault_retries"] + s["fault_lost_updates"])
+    assert not log_leg.engine_stats
+
+
+def test_fedavg_fault_events_match_across_backends(micro_cfg):
+    cfg = _faulty(micro_cfg, BARRIER)
+    kw = dict(rounds=8, eval_every=2)
+    _, log_leg = run_experiment("fedavg", cfg, engine="legacy", **kw)
+    _, log_eng = run_experiment("fedavg", cfg, engine="cohort", **kw)
+    assert log_leg.fault_events, "the barrier model produced no faults"
+    assert log_leg.fault_events == log_eng.fault_events
+    assert log_leg.times == log_eng.times   # deadline times agree exactly
+    assert log_leg.update_counts == log_eng.update_counts
+    np.testing.assert_allclose(log_leg.global_acc, log_eng.global_acc,
+                               atol=1e-5)
+    s = log_eng.engine_stats
+    assert s["degraded_cohorts"] > 0
+    assert s["deadline_drops"] + s["fault_failures"] + \
+        s["fault_lost_updates"] > 0
+
+
+def test_faultless_run_reports_zero_fault_stats(micro_cfg):
+    _, log = run_experiment("fedavg", micro_cfg, rounds=1, engine="cohort")
+    assert log.fault_events == []
+    for k in FAULT_STATS_KEYS:
+        assert log.engine_stats[k] == 0
+
+
+def test_degraded_cohorts_compile_nothing_new(micro_cfg):
+    """A dropped member stays in its compiled cohort as a zero-weight mask
+    slot — after the fault-free run has warmed the step cache, a chaotic
+    run of the same shape must not build a single new step."""
+    from repro.engine.cohort_step import step_builds
+    kw = dict(max_updates=16, eval_every=8, alpha=0.4, engine="cohort")
+    run_experiment("fedasync", micro_cfg, **kw)            # warm the cache
+    before = step_builds()
+    chaos = replace(CHAOS, failure_prob=0.4)   # short run, certain drops
+    _, log = run_experiment("fedasync", _faulty(micro_cfg, chaos), **kw)
+    assert step_builds() == before
+    assert log.engine_stats["degraded_cohorts"] > 0        # faults did fire
+
+
+def test_fault_events_survive_in_runlog_order(micro_cfg):
+    """fault_events is the injector's ordered ledger: timestamps are
+    non-decreasing per client and every counted kind appears in it."""
+    cfg = _faulty(micro_cfg, CHAOS)
+    _, log = run_experiment("fedasync", cfg, engine="cohort",
+                            max_updates=24, eval_every=8, alpha=0.4)
+    per_cid = {}
+    for kind, cid, t in log.fault_events:
+        assert isinstance(kind, str) and isinstance(cid, int)
+        # retries/late/duplicates are recorded at their FUTURE delivery
+        # time, so only per-kind streams are monotone per client
+        per_cid.setdefault((cid, kind), []).append(t)
+    for ts in per_cid.values():
+        assert ts == sorted(ts)
+    kinds = {k for k, _, _ in log.fault_events}
+    s = log.engine_stats
+    for kind, counter in (("failure", "fault_failures"),
+                          ("upload_loss", "fault_upload_losses"),
+                          ("leave", "fault_churn_leaves")):
+        assert (kind in kinds) == (s[counter] > 0)

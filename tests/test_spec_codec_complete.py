@@ -19,6 +19,7 @@ _SPECIAL = {
     ("TestbedConfig", "dp_path"): "pallas",
     ("TestbedConfig", "partition"): "dirichlet",
     ("TestbedConfig", "workload"): "ser_linear",
+    ("TestbedConfig", "faults"): "__faults__",    # Optional[FaultModel]
     ("EngineConfig", "client_axis"): "vmap",
     ("EngineConfig", "mesh"): "__mesh__",          # built lazily (devices)
     ("DPConfig", "granularity"): "per_microbatch",
@@ -40,6 +41,9 @@ def _bump(cls_name, field, value):
     special = _SPECIAL.get((cls_name, field.name))
     if special == "__mesh__":
         return _mesh()
+    if special == "__faults__":
+        from repro.core.faults import FaultModel
+        return _nondefault_instance(FaultModel)
     if special is not None:
         assert special != value, (cls_name, field.name)
         return special
