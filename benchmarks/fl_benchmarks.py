@@ -342,15 +342,18 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
             "h2d_bytes_per_cohort": (
                 round(stats["h2d_bytes_per_cohort"])
                 if "h2d_bytes_per_cohort" in stats else None),
-            # fault-resilience counters (repro.core.faults): the bench
-            # runs faultless, so non-null values must be 0 — a nonzero
-            # here means a FaultModel leaked into the perf scenario and
-            # the timing is not comparable (None on the legacy row,
-            # whose loop reports no engine_stats)
+            # fault-resilience / screening counters (repro.core.faults,
+            # repro.core.screening): the bench runs faultless with
+            # screening off, so non-null values must be 0 — a nonzero
+            # here means a FaultModel or ScreeningConfig leaked into the
+            # perf scenario and the timing is not comparable (None on
+            # the legacy row, whose loop reports no engine_stats)
             "degraded_cohorts": stats.get(
                 "degraded_cohorts", None if log is None else 0),
             "fault_lost_updates": stats.get(
                 "fault_lost_updates", None if log is None else 0),
+            "screen_rejections": stats.get(
+                "screen_rejections", None if log is None else 0),
             # full reproduction provenance: the row's number can be
             # re-measured from this dict alone (ExperimentSpec.from_dict)
             "spec": spec_of("legacy" if ec is None else "cohort",
@@ -359,7 +362,9 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
     pipeline_rows = bench_engine_pipeline(tiny=tiny)
     sweep_section = bench_sweep_amortization(tiny=tiny)
     dp_rows = bench_dp_path(tiny=tiny)
-    _write_bench_engine(rows, pipeline_rows, sweep_section, dp_rows)
+    screening_section = bench_screening_overhead(tiny=tiny)
+    _write_bench_engine(rows, pipeline_rows, sweep_section, dp_rows,
+                        screening_section)
     return _write("engine_throughput", rows)
 
 
@@ -648,16 +653,86 @@ def bench_dp_path(num_clients=8, updates=24, seed=0, window=45.0, tiny=False):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Update-screening overhead: the compiled step ALWAYS computes the
+# per-member (finite, norm) verdicts, so turning screening ON costs only
+# the per-cohort sanctioned verdict fetch plus the host-side oracle
+# ---------------------------------------------------------------------------
+
+def bench_screening_overhead(num_clients=8, updates=48, seed=0, window=45.0,
+                             tiny=False):
+    """Screening-on vs screening-off on the SAME clean windowed FedAsync
+    workload (eval disabled).  Verdict computation is baked into every
+    compiled step, so the measurable cost of enabling screening is the
+    per-cohort device->host verdict fetch (``screen_verdict_syncs``) and
+    the host-side quarantine oracle — this section records that overhead
+    in BENCH_engine.json so a regression (e.g. the fetch becoming a full
+    blocking sync per member) shows up in the perf trajectory.  Both rows
+    run clean: a nonzero ``screen_rejections`` here means corruption
+    leaked into the perf scenario (``summarize.py --check-engine``
+    enforces it)."""
+    import time as _time
+
+    from repro.api import ExperimentSpec
+    from repro.core.screening import ScreeningConfig
+    from repro.engine import EngineConfig
+
+    if tiny:
+        num_clients = min(num_clients, 4)
+        updates = min(updates, 8)
+    scr = ScreeningConfig(max_update_norm=1e3, quarantine_after=2,
+                          readmit_delay_s=100.0)
+    ec = EngineConfig(staleness_window=window)
+
+    def cfg_of(screening):
+        return TestbedConfig(use_dp=True, sigma=1.0, batch_size=32,
+                             num_clients=num_clients,
+                             data=SERDataConfig(
+                                 n_total=(96 if tiny else 200) * num_clients),
+                             seed=seed, screening=screening)
+
+    def run(screening, n=updates):
+        t0 = _time.perf_counter()
+        _, log = run_experiment("fedasync", cfg_of(screening), max_updates=n,
+                                alpha=0.4, eval_every=10 ** 9,
+                                engine="cohort", engine_cfg=ec)
+        return _time.perf_counter() - t0, log
+
+    run(None, n=max(8, 2 * ec.max_cohort))        # warm the compiled step
+    t_off, log_off = run(None)
+    t_on, log_on = run(scr)
+    rows = []
+    for name, t, log, screening in (("off", t_off, log_off, None),
+                                    ("on", t_on, log_on, scr)):
+        s = log.engine_stats
+        rows.append({
+            "screening": name,
+            "num_clients": num_clients,
+            "updates": updates,
+            "wall_s": round(t, 3),
+            "updates_per_s": round(updates / t, 2),
+            "screen_rejections": s["screen_rejections"],
+            "screen_verdict_syncs": s["screen_verdict_syncs"],
+            "spec": ExperimentSpec.from_legacy(
+                "fedasync", cfg_of(screening), max_updates=updates,
+                alpha=0.4, eval_every=10 ** 9, engine="cohort",
+                engine_cfg=ec).to_dict(),
+        })
+    return {"rows": rows,
+            "overhead_pct": round(100.0 * (t_on / t_off - 1.0), 1)}
+
+
 def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
-                        dp_rows=None):
+                        dp_rows=None, screening_section=None):
     """The machine-readable perf trajectory: BENCH_engine.json at the repo
     root (schema checked by ``benchmarks/summarize.py --check-engine``).
     ``pipeline_rows`` (multi-device runs) land under the ``pipeline``
     section — the serial-vs-pipelined scheduler comparison —
     ``sweep_section`` (bench_sweep_amortization) under ``sweep`` — the
-    cold-per-run vs warm-Session comparison — and ``dp_rows``
-    (bench_dp_path) under ``dp_path`` — the jnp-vs-fused-kernel DP
-    hot-path comparison."""
+    cold-per-run vs warm-Session comparison — ``dp_rows`` (bench_dp_path)
+    under ``dp_path`` — the jnp-vs-fused-kernel DP hot-path comparison —
+    and ``screening_section`` (bench_screening_overhead) under
+    ``screening`` — the screening-on vs screening-off overhead pair."""
     import jax
 
     out = {
@@ -671,6 +746,8 @@ def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
         out["sweep"] = sweep_section
     if dp_rows:
         out["dp_path"] = {"rows": dp_rows}
+    if screening_section:
+        out["screening"] = screening_section
     fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(fn, "w") as f:
         json.dump(out, f, indent=1, default=float)

@@ -194,6 +194,88 @@ def fault_smoke() -> None:
           f";mesh={multi};resume=bit-identical")
 
 
+def screen_smoke() -> None:
+    """Corrupt-update defense drill (RESILIENCE.md): the SAME tiny async
+    workload run clean, corrupted-and-undefended, and corrupted-defended
+    (in-step screening + quarantine + norm-bounded merge) through one
+    warm Session.  The defended run must fire in-step rejections with a
+    consistent counter ledger and beat the undefended run's final
+    accuracy — corruption defense as an acceptance check, sharded when
+    more than one device exists (CI's engine-mesh job forces 8 host
+    devices)."""
+    import math
+    from dataclasses import replace
+
+    import jax
+
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    from repro.core.faults import FaultModel
+    from repro.core.screening import ScreeningConfig
+    from repro.core.testbed import TestbedConfig
+    from repro.data.synthetic_ser import SERDataConfig
+    from repro.engine import EngineConfig, cohort_mesh
+    from repro.models.ser_cnn import SERConfig
+
+    n_clients = 8
+    dims = dict(time_frames=12, n_mels=12)
+    multi = len(jax.devices()) > 1
+    if multi:
+        mesh = cohort_mesh(max_cohort=n_clients)
+        ec = EngineConfig(staleness_window=45.0,
+                          max_cohort=mesh.shape["data"],
+                          client_axis="vmap", mesh=mesh)
+    else:
+        ec = EngineConfig(staleness_window=45.0)
+    tb = TestbedConfig(
+        use_dp=True, sigma=0.5, batch_size=16, num_clients=n_clients,
+        data=SERDataConfig(n_total=36 * n_clients, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims))
+    faults = FaultModel(seed=7, corrupt_prob=0.5)
+    screen = ScreeningConfig(max_update_norm=1e3, quarantine_after=2,
+                             readmit_delay_s=100.0)
+
+    def spec(tb_, strat):
+        return ExperimentSpec(testbed=tb_, strategy=strat,
+                              run=RunBudget(max_updates=24, eval_every=8),
+                              engine=ec)
+
+    plain = StrategySpec("fedasync", alpha=0.4)
+    robust = StrategySpec("fedasync_normbound", alpha=0.4, norm_bound=10.0)
+    sess = Session()
+    t0 = time.time()
+    _, log_clean = sess.run(spec(tb, plain))
+    _, log_open = sess.run(spec(replace(tb, faults=faults), plain))
+    _, log_def = sess.run(
+        spec(replace(tb, faults=faults, screening=screen), robust))
+
+    s = log_def.engine_stats
+    if not s["screen_rejections"]:
+        raise SystemExit("screen-smoke defended run rejected nothing — "
+                         "the corruption drill is not exercising screening")
+    if s["screen_rejections"] != s["screen_nonfinite"] + s["screen_norm_rejects"]:
+        raise SystemExit(f"screen-smoke rejection ledger broken: {s}")
+    if not any(e[0].startswith("corrupt_") for e in log_open.fault_events):
+        raise SystemExit("screen-smoke fault model produced no corruption")
+    a_clean, a_open, a_def = (log.global_acc[-1] for log in
+                              (log_clean, log_open, log_def))
+    if not math.isfinite(a_def):
+        raise SystemExit(f"screen-smoke defended accuracy is {a_def}")
+    # the acceptance comparison: defense must beat the undefended run,
+    # whose merges ingest the NaN/blown-up payloads unchecked
+    a_open_eff = a_open if math.isfinite(a_open) else -1.0
+    if a_def <= a_open_eff:
+        raise SystemExit(
+            f"screen-smoke defense did not help: defended acc {a_def} "
+            f"<= undefended {a_open} (clean {a_clean})")
+    _line("screen.smoke", round((time.time() - t0) * 1e6),
+          f"rej={s['screen_rejections']}"
+          f";nonfinite={s['screen_nonfinite']}"
+          f";norm={s['screen_norm_rejects']}"
+          f";quar={s['screen_quarantined']}"
+          f";acc_clean={a_clean};acc_open={a_open};acc_def={a_def}"
+          f";mesh={multi}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -221,9 +303,19 @@ def main() -> None:
                          "RunLog must be bit-identical (CI's engine-mesh "
                          "fault-smoke step runs it on the forced-8-device "
                          "mesh)")
+    ap.add_argument("--screen-smoke", action="store_true",
+                    help="tiny corrupted run with in-step screening + "
+                         "robust aggregation: rejections must fire and "
+                         "the defended accuracy must beat the undefended "
+                         "run (CI's engine-mesh screen-smoke step runs it "
+                         "on the forced-8-device mesh)")
     args = ap.parse_args()
 
     from benchmarks import fl_benchmarks as flb
+
+    if args.screen_smoke:
+        screen_smoke()
+        return
 
     if args.fault_smoke:
         fault_smoke()

@@ -26,7 +26,8 @@ BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "../BENCH_engine.json")
 _STATS_ROW_FIELDS = {
     "data_path", "pipeline_depth", "host_syncs_between_evals",
     "blocking_submits", "drain_waits", "h2d_bytes_per_cohort",
-    "degraded_cohorts", "fault_lost_updates",
+    "degraded_cohorts", "fault_lost_updates", "screen_rejections",
+    "screen_verdict_syncs",
 }
 _stats_drift = _STATS_ROW_FIELDS - set(ENGINE_STATS_KEYS)
 if _stats_drift:
@@ -43,7 +44,7 @@ if _stats_drift:
 _ENGINE_ROW_KEYS = {
     "engine", "executor", "data_path", "mesh", "wall_s", "warm_step_ms",
     "updates_per_s", "speedup_vs_legacy", "h2d_bytes_per_cohort",
-    "degraded_cohorts", "fault_lost_updates", "spec",
+    "degraded_cohorts", "fault_lost_updates", "screen_rejections", "spec",
 }
 
 # the pipelined-scheduler section (bench_engine_pipeline, multi-device
@@ -73,6 +74,13 @@ _DP_ROW_KEYS = {
 # reporting interpret=True on one of these is a misconfiguration, not a
 # measurement (mirror of kernels/common._COMPILED_BACKENDS)
 _COMPILED_BACKENDS = {"tpu", "gpu", "cuda", "rocm"}
+
+# the update-screening overhead section (bench_screening_overhead):
+# screening-off vs screening-on on the same clean workload
+_SCREEN_ROW_KEYS = {
+    "screening", "wall_s", "updates_per_s", "screen_rejections",
+    "screen_verdict_syncs", "spec",
+}
 
 # an ExperimentSpec provenance dict must at least nest these sub-configs
 _SPEC_KEYS = {"testbed", "strategy", "run", "engine"}
@@ -114,14 +122,17 @@ def load_engine_bench(path=None):
         if missing:
             raise ValueError(f"{fn}: row {i} missing keys {sorted(missing)}")
         _check_spec(fn, f"row {i}", r["spec"])
-        # the throughput scenarios run FAULTLESS: a nonzero resilience
-        # counter means a FaultModel leaked into the perf run and the
-        # timing mixes degraded cohorts with healthy ones
-        for k in ("degraded_cohorts", "fault_lost_updates"):
+        # the throughput scenarios run FAULTLESS with screening off: a
+        # nonzero resilience or screening counter means a FaultModel or
+        # ScreeningConfig leaked into the perf run and the timing mixes
+        # degraded/defended cohorts with healthy ones
+        for k in ("degraded_cohorts", "fault_lost_updates",
+                  "screen_rejections"):
             if r[k]:
                 raise ValueError(
                     f"{fn}: row {i} ({r['engine']}) reports {k}={r[k]} — "
-                    "the throughput bench must run without a FaultModel")
+                    "the throughput bench must run without a FaultModel "
+                    "or ScreeningConfig")
     pipe = data.get("pipeline")
     if pipe is None:
         if data.get("devices", 1) > 1:
@@ -210,6 +221,46 @@ def load_engine_bench(path=None):
                 f"backend {r['backend']!r} (compiled-capable) — the "
                 "number is not a kernel measurement; fix the interpret "
                 "policy (kernels/common) or unset REPRO_PALLAS_INTERPRET")
+    screen = data.get("screening")
+    if screen is None:
+        raise ValueError(
+            f"{fn}: missing the 'screening' section (screening-on vs "
+            "screening-off overhead on the clean workload — run "
+            "benchmarks.fl_benchmarks.bench_screening_overhead)")
+    srows = screen.get("rows")
+    if not isinstance(srows, list) or not srows:
+        raise ValueError(f"{fn}: screening section has no rows")
+    for i, r in enumerate(srows):
+        missing = _SCREEN_ROW_KEYS - set(r)
+        if missing:
+            raise ValueError(
+                f"{fn}: screening row {i} missing keys {sorted(missing)}")
+        _check_spec(fn, f"screening row {i}", r["spec"])
+        # the overhead pair runs CLEAN — rejections firing here mean the
+        # off/on comparison is not like-for-like
+        if r["screen_rejections"]:
+            raise ValueError(
+                f"{fn}: screening row {i} ({r['screening']}) reports "
+                f"{r['screen_rejections']} rejections — the overhead "
+                "pair must run without corruption")
+    names = {r["screening"] for r in srows}
+    if not {"off", "on"} <= names:
+        raise ValueError(
+            f"{fn}: screening section must compare 'off' and 'on' rows "
+            f"(got {sorted(names)})")
+    for r in srows:
+        if r["screening"] == "on" and not r["screen_verdict_syncs"]:
+            raise ValueError(
+                f"{fn}: screening-on row reports 0 verdict syncs — the "
+                "sanctioned per-cohort verdict fetch must be counted, "
+                "otherwise the measured overhead is vacuous")
+        if r["screening"] == "off" and r["screen_verdict_syncs"]:
+            raise ValueError(
+                f"{fn}: screening-off row reports "
+                f"{r['screen_verdict_syncs']} verdict syncs — with "
+                "screening disabled nothing may fetch verdicts")
+    if "overhead_pct" not in screen:
+        raise ValueError(f"{fn}: screening section missing 'overhead_pct'")
     return data
 
 
@@ -250,6 +301,13 @@ def summarize_engine(out):
             f"{r['speedup_vs_jnp']}x vs jnp, "
             f"warm step {r['warm_step_ms']}ms, "
             f"{r['updates_per_s']} updates/s{mode}")
+    sc = data.get("screening")
+    if sc:
+        on = next((r for r in sc["rows"] if r["screening"] == "on"), None)
+        out.append(
+            f"screening[{data['devices']}dev] on-vs-off overhead "
+            f"{sc['overhead_pct']}%"
+            + (f", verdict syncs {on['screen_verdict_syncs']}" if on else ""))
 
 
 def main():
@@ -342,9 +400,11 @@ if __name__ == "__main__":
         n_pipe = len(data.get("pipeline", {}).get("rows", []))
         sw = data["sweep"]
         n_dp = len(data["dp_path"]["rows"])
+        sc = data["screening"]
         print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
               f"{n_pipe} pipeline rows, sweep {sw['speedup']}x "
               f"({sw['warm_step_builds']}/{sw['cold_step_builds']} builds), "
-              f"{n_dp} dp_path rows, {data['devices']} device(s)")
+              f"{n_dp} dp_path rows, screening overhead "
+              f"{sc['overhead_pct']}%, {data['devices']} device(s)")
         sys.exit(0)
     main()

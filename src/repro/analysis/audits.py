@@ -198,6 +198,17 @@ def audit_engine_stats(stats: dict, *, label="engine_stats"):
             f"{stats['fault_upload_losses']} must equal fault_retries="
             f"{stats['fault_retries']} + fault_lost_updates="
             f"{stats['fault_lost_updates']}.")
+    # screening-ledger conservation (repro.core.screening): every
+    # rejection is classified as exactly one of nonfinite / norm-reject
+    # — an imbalance means a verdict was double-counted or a classifier
+    # branch was skipped
+    if stats["screen_rejections"] != (
+            stats["screen_nonfinite"] + stats["screen_norm_rejects"]):
+        raise AuditFailure(
+            f"{label}: screening ledger imbalance — screen_rejections="
+            f"{stats['screen_rejections']} must equal screen_nonfinite="
+            f"{stats['screen_nonfinite']} + screen_norm_rejects="
+            f"{stats['screen_norm_rejects']}.")
     return stats
 
 

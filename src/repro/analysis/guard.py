@@ -36,9 +36,14 @@ def step_signature(spec):
         return None
     tb = spec.testbed
     # the built program only distinguishes add_noise = use_dp and
-    # sigma > 0; the magnitude is a runtime arg (PR 5)
+    # sigma > 0; the magnitude is a runtime arg (PR 5).  Fault and
+    # screening models never reach the program at all: corruption
+    # scales are a runtime (K,) step argument and screening thresholds
+    # compare on the host (PR 9), so a (fault × screening) grid shares
+    # ONE build with the clean point.
     tb = dataclasses.replace(
-        tb, sigma=1.0 if (tb.use_dp and tb.sigma > 0) else 0.0)
+        tb, sigma=1.0 if (tb.use_dp and tb.sigma > 0) else 0.0,
+        faults=None, screening=None)
     return (tb, spec.engine)
 
 

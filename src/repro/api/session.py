@@ -212,6 +212,9 @@ class Session:
         clients, params0 = self._clients, self._params0
         acc_fn, pooled = self._acc_fn, self._pooled
         self.events["runs"] += 1
+        # route by the strategy's sync/async nature, not its name: the
+        # robust fedavg variants (fedavg_trimmed) are barrier loops too
+        strategy = spec.strategy.make()
         if spec.backend == "legacy":
             if spec.engine.mesh is not None:
                 raise ValueError("mesh execution requires backend='cohort'")
@@ -220,30 +223,33 @@ class Session:
                     "checkpoint/resume requires backend='cohort' — the "
                     "legacy reference loop has no snapshot support")
             from repro.core.server import run_async, run_fedavg
-            if spec.strategy.name == "fedavg":
+            if not strategy.is_async:
                 return run_fedavg(
                     clients, params0, acc_fn, pooled, rounds=b.rounds,
                     seed=tb.seed, eval_every=b.eval_every,
                     target_acc=b.target_acc, engine="legacy",
-                    faults=tb.faults)
+                    faults=tb.faults, strategy=strategy,
+                    screening=tb.screening)
             return run_async(
-                clients, params0, acc_fn, pooled, spec.strategy.make(),
+                clients, params0, acc_fn, pooled, strategy,
                 max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
                 eval_every=b.eval_every, target_acc=b.target_acc,
-                engine="legacy", faults=tb.faults)
+                engine="legacy", faults=tb.faults, screening=tb.screening)
         from repro.engine import run_async_engine, run_fedavg_engine
         runner = self._get_runner(tb, spec.engine)
-        if spec.strategy.name == "fedavg":
+        if not strategy.is_async:
             return run_fedavg_engine(
                 clients, params0, acc_fn, pooled, rounds=b.rounds,
                 seed=tb.seed, eval_every=b.eval_every,
                 target_acc=b.target_acc, runner=runner, faults=tb.faults,
-                checkpoint=checkpoint, resume_from=resume_from)
+                checkpoint=checkpoint, resume_from=resume_from,
+                strategy=strategy, screening=tb.screening)
         return run_async_engine(
-            clients, params0, acc_fn, pooled, spec.strategy.make(),
+            clients, params0, acc_fn, pooled, strategy,
             max_updates=b.max_updates, max_time=b.max_time, seed=tb.seed,
             eval_every=b.eval_every, target_acc=b.target_acc, runner=runner,
-            faults=tb.faults, checkpoint=checkpoint, resume_from=resume_from)
+            faults=tb.faults, checkpoint=checkpoint, resume_from=resume_from,
+            screening=tb.screening)
 
     def sweep(self, spec: ExperimentSpec, axes: dict) -> SweepResult:
         """Run the cartesian grid of ``spec`` with ``axes`` mapping dotted

@@ -33,6 +33,7 @@ from repro.core.aggregation import make_strategy, validate_strategy_params
 from repro.core.dp import DPConfig
 from repro.core.faults import FaultModel
 from repro.core.fl_step import FLStepConfig
+from repro.core.screening import ScreeningConfig
 from repro.core.testbed import TestbedConfig
 from repro.data.synthetic_ser import SERDataConfig
 from repro.engine import EngineConfig
@@ -189,7 +190,8 @@ def replace_path(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
 
 _SPEC_TYPES = {cls.__name__: cls for cls in (
     ExperimentSpec, StrategySpec, RunBudget, TestbedConfig, SERDataConfig,
-    SERConfig, EngineConfig, DPConfig, FLStepConfig, FaultModel)}
+    SERConfig, EngineConfig, DPConfig, FLStepConfig, FaultModel,
+    ScreeningConfig)}
 
 
 def _is_mesh(obj) -> bool:

@@ -14,6 +14,11 @@ EXPERIMENTS.md):
                          weight additionally shrinks with the client's
                          cumulative privacy spend, throttling the high-end
                          devices that dominate the update stream.
+  * :class:`TrimmedMeanFedAvg` / :class:`NormBoundedFedAsync` — robust
+                         aggregation under corrupt updates (coordinate-wise
+                         trimmed mean; norm-clamped async merge) — the
+                         aggregation-side complement to the engine's
+                         update screening (repro.core.screening).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from dataclasses import dataclass, field, fields
 from functools import partial
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.pytree import tree_lin, tree_scale, tree_add, tree_zeros_like
@@ -60,6 +66,90 @@ class FedAsync:
     def merge(self, global_params, client_params, staleness: int):
         a_k = self.mixing_weight(staleness)
         return tree_lin(global_params, client_params, 1.0 - a_k, a_k), a_k
+
+
+@dataclass
+class TrimmedMeanFedAvg(FedAvg):
+    """Robust synchronous aggregation: coordinate-wise trimmed mean.
+
+    Sorts the K client payloads per coordinate, drops the
+    ``floor(trim_frac * K)`` largest and smallest values (capped so at
+    least one value survives) and averages the rest — the classic
+    Byzantine-robust estimator (Yin et al.; PAPERS.md).  Intentionally
+    UNWEIGHTED: a dataset-size weight would let a large corrupt client
+    dominate the very statistic meant to exclude it.  Deliberately NOT
+    fused (``_fused_ok`` routes it per-member): a per-coordinate sort is
+    not a weights-vector reduction.
+    """
+
+    trim_frac: float = 0.2
+    name: str = "fedavg_trimmed"
+
+    def __post_init__(self):
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(
+                f"trim_frac must be in [0, 0.5): {self.trim_frac} "
+                "(trimming half or more from each end leaves nothing)")
+
+    def aggregate(self, global_params, updates):
+        k = len(updates)
+        cut = min(int(self.trim_frac * k), (k - 1) // 2)
+        payloads = [u for u, _ in updates]
+
+        def leaf(*vals):
+            v = jnp.sort(jnp.stack(vals, axis=0), axis=0)
+            return jnp.mean(v[cut: k - cut], axis=0)
+
+        return jax.tree_util.tree_map(leaf, *payloads)
+
+
+@dataclass
+class NormBoundedFedAsync(FedAsync):
+    """Robust async merge: the client delta is norm-clamped before the
+    staleness-weighted Eq. 11 merge.  The merge moves by
+    ``min(1, norm_bound / ||p_k - g||)`` of the delta direction — an
+    oversized update contributes at most a ``norm_bound``-long step, a
+    nonfinite one contributes nothing (scale 0), while in-bound updates
+    merge EXACTLY like plain FedAsync.  The reported influence weight is
+    the host-known nominal ``alpha/(1+tau)`` (the clamp is a device-side
+    projection, not a re-weighting — bookkeeping stays sync-free)."""
+
+    norm_bound: float = 10.0
+    name: str = "fedasync_normbound"
+
+    def __post_init__(self):
+        if not self.norm_bound > 0:
+            raise ValueError(f"norm_bound must be > 0: {self.norm_bound}")
+
+    def merge(self, global_params, client_params, staleness: int):
+        sq = jnp.float32(0.0)
+        for g, p in zip(jax.tree_util.tree_leaves(global_params),
+                        jax.tree_util.tree_leaves(client_params)):
+            d = p.astype(jnp.float32) - g.astype(jnp.float32)
+            sq = sq + jnp.sum(d * d)
+        norm = jnp.sqrt(sq)
+        clamp = jnp.where(
+            jnp.isfinite(norm),
+            jnp.minimum(jnp.float32(1.0),
+                        jnp.float32(self.norm_bound)
+                        / jnp.maximum(norm, jnp.float32(1e-12))),
+            jnp.float32(0.0))
+
+        def leaf(g, p):
+            gf, pf = g.astype(jnp.float32), p.astype(jnp.float32)
+            # a nonfinite payload must contribute EXACTLY nothing:
+            # clamp is 0 there, but 0 * NaN = NaN would re-poison the
+            # projection, so nonfinite entries fall back to the globals
+            # (a no-op whenever the norm — and hence every entry — is
+            # finite, preserving the in-bound bit-identity below)
+            pf = jnp.where(jnp.isfinite(pf), pf, gf)
+            proj = (gf + clamp * (pf - gf)).astype(p.dtype)
+            # clamp == 1.0 selects the payload VERBATIM: an in-bound
+            # update then merges bit-identically to plain FedAsync
+            return jnp.where(clamp == 1.0, p, proj)
+
+        bounded = jax.tree_util.tree_map(leaf, global_params, client_params)
+        return super().merge(global_params, bounded, staleness)
 
 
 @dataclass
@@ -172,10 +262,14 @@ def _tunable_params(cls, exclude=()) -> tuple:
 # "without staleness control" variant), so that knob is not tunable there.
 STRATEGIES = {
     "fedavg": (FedAvg, ()),
+    "fedavg_trimmed": (TrimmedMeanFedAvg,
+                       _tunable_params(TrimmedMeanFedAvg)),
     "fedasync": (FedAsync, _tunable_params(FedAsync)),
     "fedasync_nostale": (
         partial(FedAsync, staleness_aware=False),
         _tunable_params(FedAsync, exclude=("staleness_aware",))),
+    "fedasync_normbound": (NormBoundedFedAsync,
+                           _tunable_params(NormBoundedFedAsync)),
     "fedbuff": (FedBuff, _tunable_params(FedBuff)),
     "adaptive_async": (AdaptiveAsync, _tunable_params(AdaptiveAsync)),
 }
@@ -206,6 +300,10 @@ def validate_strategy_params(name: str, kw: dict) -> str:
         raise ValueError(
             f"unknown param(s) {', '.join(unknown)} for strategy "
             f"{name!r} (valid: {', '.join(allowed) or 'none'})")
+    # value validation too: constructing the (cheap, pure) dataclass runs
+    # its __post_init__ checks, so a spec can no more carry trim_frac=0.7
+    # than an unknown param name
+    STRATEGIES[name][0](**kw)
     return name
 
 

@@ -20,8 +20,8 @@ Determinism contract
 --------------------
 Every client owns an independent ``np.random.Generator`` seeded from
 ``(model.seed, cid)``; draws happen in a FIXED per-delivery order
-(failure -> upload loss/retry -> late -> duplicate, then a leave draw at
-each re-dispatch).  Because the streams are per-client and the loops
+(failure -> upload loss/retry -> late -> duplicate -> corruption, then a
+leave draw at each re-dispatch).  Because the streams are per-client and the loops
 invoke the injector at the same logical points, the SAME seed + SAME
 FaultModel replays the identical fault event sequence on both execution
 backends (legacy per-client loop and cohort engine at
@@ -51,6 +51,11 @@ Fault semantics (one delivery attempt, at virtual time ``t``):
 6. **leave/rejoin churn** (``leave_prob``, drawn at each re-dispatch) —
    the client goes away for ``rejoin_delay_s`` before starting its next
    local round.
+7. **transit corruption** (``corrupt_prob``, drawn LAST and only on
+   deliveries that reach the server) — the payload arrives as all-NaN
+   (with probability ``corrupt_nan_frac``) or with its update delta
+   scaled by ``corrupt_scale``.  The server still receives it; the
+   screening layer (:mod:`repro.core.screening`) is the defense.
 
 FedAvg rounds additionally honor ``round_deadline_s`` + ``min_quorum``:
 the barrier stops waiting at the deadline (stretched just enough to
@@ -75,6 +80,7 @@ FAULT_STATS_KEYS = (
     "fault_duplicates_dropped",  # duplicate arrivals deduped at the server
     "fault_late_deliveries",     # deliveries delayed past completion
     "fault_churn_leaves",        # leave/rejoin cycles at re-dispatch
+    "fault_corruptions",         # delivered payloads corrupted in transit
     "degraded_cohorts",          # cohorts/rounds merged below full strength
     "deadline_drops",            # fedavg members dropped at the deadline
 )
@@ -105,6 +111,15 @@ class FaultModel:
     late_delay_s: float = 30.0
     leave_prob: float = 0.0        # P(leave) drawn at each re-dispatch
     rejoin_delay_s: float = 120.0
+    # transit corruption of DELIVERED payloads (drawn last, only on
+    # updates that actually reach the server): with probability
+    # ``corrupt_nan_frac`` the payload arrives as all-NaN, otherwise the
+    # update delta is blown up by ``corrupt_scale`` (a gradient-scaling
+    # attack / bit-rot model).  The screening layer
+    # (repro.core.screening) is the defense.
+    corrupt_prob: float = 0.0      # P(payload corrupted) per delivery
+    corrupt_nan_frac: float = 0.5  # NaN payload vs scale blowup split
+    corrupt_scale: float = 1e6     # delta multiplier for blowup corruption
     # fedavg-only graceful degradation: stop waiting for dead/slow
     # members at the deadline, but never aggregate below the quorum
     round_deadline_s: Optional[float] = None
@@ -112,7 +127,8 @@ class FaultModel:
 
     def __post_init__(self):
         for name in ("failure_prob", "upload_loss_prob", "duplicate_prob",
-                     "late_prob", "leave_prob"):
+                     "late_prob", "leave_prob", "corrupt_prob",
+                     "corrupt_nan_frac"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"FaultModel.{name} must be in [0, 1]: {v!r}")
@@ -130,14 +146,31 @@ class FaultModel:
                     f"FaultModel.{name} must be >= 0: "
                     f"{getattr(self, name)!r}")
         # a zero re-entry delay would re-pop the same virtual instant
-        # forever — virtual time must strictly advance per re-entry
-        for prob, delay in (("upload_loss_prob", "retry_backoff_s"),
-                            ("duplicate_prob", "duplicate_delay_s"),
+        # forever — virtual time must strictly advance per re-entry.
+        # Exception: retry_backoff_s == 0 is legal when max_retries == 0
+        # (a lost upload is dropped immediately, nothing ever re-enters
+        # the heap, so virtual time cannot freeze).
+        for prob, delay in (("duplicate_prob", "duplicate_delay_s"),
                             ("late_prob", "late_delay_s")):
             if getattr(self, prob) > 0 and getattr(self, delay) <= 0:
                 raise ValueError(
                     f"FaultModel.{delay} must be > 0 when {prob} > 0 "
                     "(virtual time must advance between re-entries)")
+        if (self.upload_loss_prob > 0 and self.retry_backoff_s <= 0
+                and self.max_retries > 0):
+            raise ValueError(
+                "FaultModel.retry_backoff_s must be > 0 when "
+                "upload_loss_prob > 0 and max_retries > 0 "
+                "(virtual time must advance between re-entries)")
+        if not (0 < self.corrupt_scale < float("inf")):
+            raise ValueError(
+                f"FaultModel.corrupt_scale must be a finite positive "
+                f"float: {self.corrupt_scale!r}")
+        if self.corrupt_prob > 0 and self.corrupt_scale == 1.0:
+            raise ValueError(
+                "FaultModel.corrupt_scale must differ from 1.0 when "
+                "corrupt_prob > 0 (1.0 is the clean-payload sentinel — "
+                "the corruption would be a silent no-op)")
         if self.round_deadline_s is not None and self.round_deadline_s <= 0:
             raise ValueError(
                 f"FaultModel.round_deadline_s must be > 0 or None: "
@@ -160,7 +193,21 @@ def apply_deadline(model: FaultModel, offsets) -> tuple:
     ``round_time`` is how long the round occupied the server (the
     effective deadline when it cut anyone off, else the slowest kept
     delivery; ``None`` when no update survived, in which case the caller
-    falls back to the full barrier wait)."""
+    falls back to the full barrier wait).
+
+    A quorum larger than the round's LIVE client count (``len(offsets)``
+    — everyone who dispatched, survivors and casualties alike) is a
+    configuration error, not a degraded round: the deadline would
+    stretch unboundedly waiting for a quorum that can never assemble.
+    Rejected here and at :class:`FaultInjector` construction.  A quorum
+    larger than the SURVIVOR count but within the live count is the
+    legitimate degraded case — the clamp below keeps every survivor."""
+    if int(model.min_quorum) > len(offsets):
+        raise ValueError(
+            f"FaultModel.min_quorum={int(model.min_quorum)} exceeds the "
+            f"round's live client count ({len(offsets)}) — the deadline "
+            "would stretch unboundedly waiting for a quorum that can "
+            "never assemble")
     times = sorted(o for o in offsets if o is not None)
     if not times:
         return [False] * len(offsets), None
@@ -189,12 +236,19 @@ class FaultInjector:
     checkpointed run resumes mid-fault-sequence bit-identically."""
 
     def __init__(self, model: FaultModel, num_clients: int):
+        if int(model.min_quorum) > int(num_clients):
+            raise ValueError(
+                f"FaultModel.min_quorum={int(model.min_quorum)} exceeds "
+                f"the testbed's live client count ({int(num_clients)}) — "
+                "the round deadline would stretch unboundedly waiting for "
+                "a quorum that can never assemble")
         self.model = model
         self._rngs = [np.random.default_rng((int(model.seed), 0x5EED, cid))
                       for cid in range(num_clients)]
         self._attempts = [0] * num_clients   # retries used, current update
         self._late = [False] * num_clients   # late draw used, current update
         self._dups = {}                      # (t, cid) -> pending copies
+        self._corrupt = {}                   # cid -> pending delivery scale
         self.counters = zero_fault_stats()
         self.events = []                     # ordered (kind, cid, t) tuples
 
@@ -207,6 +261,30 @@ class FaultInjector:
     def _reset_update(self, cid: int):
         self._attempts[cid] = 0
         self._late[cid] = False
+
+    def _draw_corruption(self, cid: int, t: float):
+        """Transit-corruption draw, LAST in the per-delivery order and
+        only on updates that actually reach the server.  The resulting
+        payload scale (NaN = all-NaN payload, ``corrupt_scale`` = delta
+        blowup, 1.0 = clean) parks in a per-client pending slot until
+        the loop collects it via :meth:`take_corruption`."""
+        m, rng = self.model, self._rngs[cid]
+        if m.corrupt_prob <= 0:
+            return
+        if rng.random() >= m.corrupt_prob:
+            return
+        if rng.random() < m.corrupt_nan_frac:
+            self._corrupt[cid] = float("nan")
+            self._record("corrupt_nan", "fault_corruptions", cid, t)
+        else:
+            self._corrupt[cid] = float(m.corrupt_scale)
+            self._record("corrupt_scale", "fault_corruptions", cid, t)
+
+    def take_corruption(self, cid: int) -> float:
+        """Collect (and clear) the pending delivery's payload scale for
+        ``cid`` — 1.0 when the delivery is clean.  Called exactly once
+        per delivered update by both backends."""
+        return self._corrupt.pop(cid, 1.0)
 
     # -- async loops --------------------------------------------------------
     def on_completion(self, cid: int, t: float) -> tuple:
@@ -263,6 +341,7 @@ class FaultInjector:
             dk = (float(dup_t), cid)
             self._dups[dk] = self._dups.get(dk, 0) + 1
             self._record("duplicate_scheduled", None, cid, dup_t)
+        self._draw_corruption(cid, t)
         self._reset_update(cid)
         return ("deliver", dup_t)
 
@@ -309,6 +388,7 @@ class FaultInjector:
             self._record("duplicate_scheduled", None, cid, dup_t)
             self._record("duplicate_dropped", "fault_duplicates_dropped",
                          cid, dup_t)
+        self._draw_corruption(cid, t0 + off)
         return off, None
 
     # -- server-side bookkeeping --------------------------------------------
@@ -331,6 +411,9 @@ class FaultInjector:
             "attempts": list(self._attempts),
             "late": list(self._late),
             "dups": [[t, cid, n] for (t, cid), n in self._dups.items()],
+            # NaN round-trips through JSON repr as the string "nan" —
+            # store scales as repr strings so the payload kind survives
+            "corrupt": [[cid, repr(s)] for cid, s in self._corrupt.items()],
             "counters": dict(self.counters),
             "events": [list(e) for e in self.events],
         }
@@ -342,6 +425,8 @@ class FaultInjector:
         self._late = [bool(b) for b in state["late"]]
         self._dups = {(float(t), int(cid)): int(n)
                       for t, cid, n in state["dups"]}
+        self._corrupt = {int(cid): float(s)
+                         for cid, s in state.get("corrupt", [])}
         self.counters = zero_fault_stats()
         self.counters.update(state["counters"])
         self.events = [(str(k), int(cid), float(t))

@@ -13,6 +13,7 @@ from typing import Optional
 
 from repro.core.fairness import fairness_report
 from repro.core.faults import FAULT_STATS_KEYS
+from repro.core.screening import SCREEN_STATS_KEYS
 
 # THE schema for ``RunLog.engine_stats`` — the exact keys
 # ``CohortRunner.stats()`` produces.  Frozen here (not derived at a use
@@ -38,7 +39,12 @@ ENGINE_STATS_KEYS = (
     # fault/retry/degraded-round counters (repro.core.faults; all zero on
     # a fault-free run — the schema is unconditional so --check-engine
     # and the audits validate every row the same way)
-) + FAULT_STATS_KEYS
+) + FAULT_STATS_KEYS + (
+    # update-screening / quarantine counters (repro.core.screening; all
+    # zero when TestbedConfig.screening is None, same unconditional-
+    # schema rationale; ledger law enforced by the audits:
+    # screen_rejections == screen_nonfinite + screen_norm_rejects)
+) + SCREEN_STATS_KEYS
 
 
 def validate_engine_stats(stats: dict, context: str = "engine_stats"):

@@ -1,0 +1,221 @@
+"""Update screening and quarantine for corrupt-update defense.
+
+The paper's low-tier devices ship infrequent, stale, noise-perturbed
+updates whose outlier geometry degrades the global model — and async DP
+schemes amplify the damage because every arriving update merges
+immediately, with no cross-client cross-check (van Dijk et al.
+2007.09208; Xu et al. 2402.10991 weight async contributions by quality
+for exactly this reason).  PR 8 made the *control plane* robust (loss,
+crash, churn — RESILIENCE.md); this module defends the *data plane*:
+
+* :class:`ScreeningConfig` — a frozen, spec-serializable screening
+  policy on ``TestbedConfig.screening`` (registered in the
+  :mod:`repro.api.spec` codec).  ``None`` disables screening entirely.
+* per-member screen verdicts — the compiled cohort step ALWAYS computes
+  a ``(finite, update_norm)`` pair per stacked member over the
+  float32 update delta (see ``make_cohort_step``); threshold comparison
+  happens on the HOST, so one compiled program serves screening on/off
+  and every threshold (the PR-5 one-program sweep invariant:
+  ``step_builds`` delta 0).  :func:`screen_update` is the host-side
+  mirror the legacy loops use, and :func:`corrupt_update` the host-side
+  mirror of the in-step transit corruption.
+* :class:`ScreeningState` — the deterministic host-side runtime:
+  rejection verdicts, per-client strike counters, quarantine suspension
+  after ``quarantine_after`` strikes, re-admission after
+  ``readmit_delay_s`` virtual seconds.  A rejected or quarantined
+  member is NOT ejected from its compiled cohort — it keeps its padded
+  slot and its merge coefficient becomes exactly ``0.0``, the same PR-3
+  mask machinery that absorbs lost updates.
+
+Determinism contract
+--------------------
+Screening draws no randomness at all: verdicts are pure functions of
+the (deterministic) update payloads and the delivery times already
+fixed by the virtual clock + :class:`~repro.core.faults.FaultInjector`.
+Both execution backends invoke :meth:`ScreeningState.screen` at the
+same logical points in the same ``(time, cid)`` delivery order, so the
+same seed + same configs replay the identical rejection/quarantine
+event sequence on the legacy loop and the cohort engine, across
+``pipeline_depth`` settings, and across a checkpoint/resume boundary
+(:meth:`ScreeningState.state_dict` rides in the snapshot meta).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# The screening counters appended to repro.core.runlog.ENGINE_STATS_KEYS
+# (all zero when screening is off, so the stats schema stays
+# unconditional).  Ledger law, enforced by
+# repro.analysis.audits.audit_engine_stats:
+#
+#     screen_rejections == screen_nonfinite + screen_norm_rejects
+#
+# Quarantine drops are counted separately (a suspended client's delivery
+# is dropped BEFORE its verdict is consulted, so it is not a rejection).
+SCREEN_STATS_KEYS = (
+    "screen_rejections",        # in-step verdict rejections (sum of next two)
+    "screen_nonfinite",         # rejected: NaN/Inf anywhere in the update
+    "screen_norm_rejects",      # rejected: update norm above max_update_norm
+    "screen_quarantined",       # suspension events (quarantine_after strikes)
+    "screen_quarantine_drops",  # deliveries dropped while suspended
+    "screen_verdict_syncs",     # sanctioned device->host verdict fetches
+)
+
+
+def zero_screen_stats() -> dict:
+    """The screening counters of a screening-off run."""
+    return {k: 0 for k in SCREEN_STATS_KEYS}
+
+
+@dataclass(frozen=True)
+class ScreeningConfig:
+    """Spec-serializable update-screening policy (see module docstring).
+
+    All fields are JSON scalars; validation happens at construction so a
+    bad policy never reaches a run.  The finite check is unconditional
+    once screening is on; ``max_update_norm=None`` disables only the
+    norm threshold, ``quarantine_after=0`` disables quarantine."""
+
+    max_update_norm: Optional[float] = None  # L2 reject threshold on the
+                                             # float32 update delta; None
+                                             # = finite-check only
+    quarantine_after: int = 0                # strikes before suspension;
+                                             # 0 = quarantine off
+    readmit_delay_s: float = 600.0           # virtual-time suspension length
+
+    def __post_init__(self):
+        if self.max_update_norm is not None and not self.max_update_norm > 0:
+            raise ValueError(
+                f"ScreeningConfig.max_update_norm must be > 0 or None: "
+                f"{self.max_update_norm!r}")
+        if (self.quarantine_after < 0
+                or self.quarantine_after != int(self.quarantine_after)):
+            raise ValueError(
+                f"ScreeningConfig.quarantine_after must be an int >= 0: "
+                f"{self.quarantine_after!r}")
+        if self.quarantine_after > 0 and not self.readmit_delay_s > 0:
+            raise ValueError(
+                f"ScreeningConfig.readmit_delay_s must be > 0 when "
+                f"quarantine is on: {self.readmit_delay_s!r}")
+
+
+def screen_update(params_ref, params_k) -> tuple:
+    """Host-side mirror of the compiled per-member screen pass: the
+    ``(finite, norm)`` verdict inputs for ONE update, computed over the
+    float32 delta ``params_k - params_ref`` with the same leaf-order
+    accumulation the stacked in-step pass uses.  The legacy loops call
+    this; the cohort engine reads the same quantities out of the
+    compiled step's screen outputs."""
+    sq = jnp.float32(0.0)
+    for p0, p in zip(jax.tree_util.tree_leaves(params_ref),
+                     jax.tree_util.tree_leaves(params_k)):
+        d = jnp.asarray(p, jnp.float32) - jnp.asarray(p0, jnp.float32)
+        sq = sq + jnp.sum(d * d)
+    norm = jnp.sqrt(sq)
+    return bool(jnp.isfinite(norm)), float(norm)
+
+
+def corrupt_update(params_ref, params_k, scale: float):
+    """Host-side mirror of the in-step transit corruption: the payload
+    delivered to the server becomes ``p0 + scale * (p - p0)`` (float32,
+    elementwise — bitwise identical to the compiled step's
+    ``where(scale == 1.0, p, p0 + scale * (p - p0))`` branch).  The
+    client's own local state keeps the honestly-trained params; only
+    the uploaded copy is corrupted.  ``scale == 1.0`` is the clean
+    sentinel and returns ``params_k`` unchanged (bit-identity)."""
+    if scale == 1.0:
+        return params_k
+    s = jnp.float32(scale)
+    return jax.tree_util.tree_map(
+        lambda p0, p: jnp.asarray(p0, jnp.float32)
+        + s * (jnp.asarray(p, jnp.float32) - jnp.asarray(p0, jnp.float32)),
+        params_ref, params_k)
+
+
+class ScreeningState:
+    """Deterministic host-side screening runtime shared by both
+    execution backends.  The loops call exactly one entry point per
+    delivered update — :meth:`screen` — in ``(time, cid)`` delivery
+    order; the state owns the strike/suspension bookkeeping, the
+    counters behind :data:`SCREEN_STATS_KEYS` (minus the runner-owned
+    ``screen_verdict_syncs``) and an ordered ``events`` ledger appended
+    to ``RunLog.fault_events``.  Serializes via :meth:`state_dict` so a
+    checkpointed run resumes mid-quarantine bit-identically."""
+
+    def __init__(self, cfg: ScreeningConfig, num_clients: int):
+        self.cfg = cfg
+        self._strikes = [0] * num_clients
+        self._suspended_until = [None] * num_clients
+        self.counters = {k: 0 for k in SCREEN_STATS_KEYS
+                         if k != "screen_verdict_syncs"}
+        self.events = []    # ordered (kind, cid, t) tuples
+
+    def _record(self, kind: str, counter: Optional[str], cid: int, t: float):
+        if counter is not None:
+            self.counters[counter] += 1
+        self.events.append((kind, cid, float(t)))
+
+    def screen(self, cid: int, t: float, finite, norm) -> bool:
+        """Resolve one delivered update at virtual time ``t``; returns
+        True when the update may merge.  Order: quarantine gate first
+        (a suspended client's delivery drops WITHOUT consulting the
+        verdict), then the finite/norm verdict, then strike/quarantine
+        bookkeeping on a rejection."""
+        su = self._suspended_until[cid]
+        if su is not None:
+            if t < su:
+                self._record("quarantine_drop", "screen_quarantine_drops",
+                             cid, t)
+                return False
+            self._suspended_until[cid] = None
+            self._record("readmit", None, cid, t)
+        finite, norm = bool(finite), float(norm)
+        ok = finite and (self.cfg.max_update_norm is None
+                         or norm <= float(self.cfg.max_update_norm))
+        if ok:
+            return True
+        self.counters["screen_rejections"] += 1
+        self._record("screen_nonfinite" if not finite else "screen_norm",
+                     "screen_nonfinite" if not finite else
+                     "screen_norm_rejects", cid, t)
+        if self.cfg.quarantine_after > 0:
+            self._strikes[cid] += 1
+            if self._strikes[cid] >= self.cfg.quarantine_after:
+                self._strikes[cid] = 0
+                self._suspended_until[cid] = t + float(self.cfg.readmit_delay_s)
+                self._record("quarantine", "screen_quarantined", cid, t)
+        return False
+
+    def stats(self) -> dict:
+        return dict(self.counters)
+
+    # -- checkpoint serialization -------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of strikes, suspensions, counters and the
+        event ledger — restoring it resumes quarantine bookkeeping
+        exactly where the checkpoint left it."""
+        return {
+            "strikes": list(self._strikes),
+            "suspended_until": [None if s is None else float(s)
+                                for s in self._suspended_until],
+            "counters": dict(self.counters),
+            "events": [list(e) for e in self.events],
+        }
+
+    def load_state_dict(self, state: dict):
+        self._strikes = [int(s) for s in state["strikes"]]
+        self._suspended_until = [None if s is None else float(s)
+                                 for s in state["suspended_until"]]
+        self.counters = {k: 0 for k in SCREEN_STATS_KEYS
+                         if k != "screen_verdict_syncs"}
+        self.counters.update(state["counters"])
+        self.events = [(str(k), int(cid), float(t))
+                       for k, cid, t in state["events"]]
+
+
+__all__ = ["SCREEN_STATS_KEYS", "zero_screen_stats", "ScreeningConfig",
+           "ScreeningState", "screen_update", "corrupt_update"]

@@ -58,6 +58,8 @@ def run_fedavg(
     faults=None,
     checkpoint=None,
     resume_from=None,
+    strategy=None,
+    screening=None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9).  Returns (final_params, RunLog).
 
@@ -66,7 +68,11 @@ def run_fedavg(
     ``faults`` (a :class:`repro.core.faults.FaultModel`) injects the same
     deterministic fault sequence on either execution path;
     ``checkpoint``/``resume_from`` (cohort-engine only) snapshot and
-    resume the run — see :mod:`repro.engine.resilience`."""
+    resume the run — see :mod:`repro.engine.resilience`.
+    ``strategy`` selects the synchronous aggregator (default plain
+    FedAvg; ``TrimmedMeanFedAvg`` is the robust variant); ``screening``
+    (a :class:`repro.core.screening.ScreeningConfig`) rejects
+    nonfinite/oversized uploads identically on both paths."""
     eval_every = _normalize_eval_every(eval_every)
     if engine == "cohort":
         from repro.engine import run_fedavg_engine
@@ -74,7 +80,8 @@ def run_fedavg(
             clients, global_params, accuracy_fn, test_data, rounds=rounds,
             seed=seed, eval_every=eval_every, target_acc=target_acc,
             engine_cfg=engine_cfg, mesh=mesh, faults=faults,
-            checkpoint=checkpoint, resume_from=resume_from)
+            checkpoint=checkpoint, resume_from=resume_from,
+            strategy=strategy, screening=screening)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
     if mesh is not None:
@@ -85,7 +92,7 @@ def run_fedavg(
     return _run_fedavg_legacy(
         clients, global_params, accuracy_fn, test_data, rounds=rounds,
         seed=seed, eval_every=eval_every, target_acc=target_acc,
-        faults=faults)
+        faults=faults, strategy=strategy, screening=screening)
 
 
 def run_async(
@@ -105,6 +112,7 @@ def run_async(
     faults=None,
     checkpoint=None,
     resume_from=None,
+    screening=None,
 ) -> tuple:
     """Event-driven asynchronous FL (Eq. 10-11).
 
@@ -128,7 +136,8 @@ def run_async(
             max_updates=max_updates, max_time=max_time, seed=seed,
             eval_every=eval_every, target_acc=target_acc,
             engine_cfg=engine_cfg, mesh=mesh, faults=faults,
-            checkpoint=checkpoint, resume_from=resume_from)
+            checkpoint=checkpoint, resume_from=resume_from,
+            screening=screening)
     if engine != "legacy":
         raise ValueError(f"unknown execution engine: {engine!r}")
     if mesh is not None:
@@ -139,7 +148,8 @@ def run_async(
     return _run_async_legacy(
         clients, global_params, accuracy_fn, test_data, strategy,
         max_updates=max_updates, max_time=max_time, seed=seed,
-        eval_every=eval_every, target_acc=target_acc, faults=faults)
+        eval_every=eval_every, target_acc=target_acc, faults=faults,
+        screening=screening)
 
 
 # ---------------------------------------------------------------------------
@@ -149,13 +159,17 @@ def run_async(
 def _run_fedavg_legacy(
     clients, global_params, accuracy_fn, test_data,
     rounds=60, seed=0, eval_every=1, target_acc=None, faults=None,
+    strategy=None, screening=None,
 ) -> tuple:
     from repro.core.aggregation import FedAvg
     from repro.core.faults import FaultInjector, apply_deadline
-    strat = FedAvg()
+    from repro.core import screening as _scr
+    strat = strategy if strategy is not None else FedAvg()
     injector = (FaultInjector(faults, len(clients))
                 if faults is not None else None)
-    log = RunLog(strategy="fedavg")
+    screener = (_scr.ScreeningState(screening, len(clients))
+                if screening is not None else None)
+    log = RunLog(strategy=strat.name)
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
     for c in clients:
@@ -164,7 +178,10 @@ def _run_fedavg_legacy(
         log.eps_trajectory.setdefault(c.tier, [])
 
     for rnd in range(1, rounds + 1):
-        updates, durations, infos = [], [], []
+        payloads, durations, infos = [], [], []
+        # the round's dispatch globals — the corruption/screening
+        # reference (the same snapshot the cohort engine's params0 is)
+        g_round = global_params
         for c in clients:
             key, sub = jax.random.split(key)
             params_k, info = c.local_train(global_params, sub)
@@ -173,31 +190,49 @@ def _run_fedavg_legacy(
                 # draw point as the cohort engine's dispatch loop)
                 info["duration"] += injector.redispatch_delay(
                     c.cid, t_virtual)
-            updates.append((params_k, c.n_train))
+            payloads.append(params_k)
             durations.append(info["duration"])
             infos.append(info)
+        t_round0 = t_virtual
+        offsets = list(durations)
         if injector is not None:
             offsets = [injector.fedavg_fate(c.cid, t_virtual, d)[0]
                        for c, d in zip(clients, durations)]
             keep, round_time = apply_deadline(injector.model, offsets)
-            for c, off, kept in zip(clients, offsets, keep):
-                if off is not None and not kept:
-                    injector.note_deadline_drop(c.cid, t_virtual + off)
+            for i, (c, off, kept) in enumerate(zip(clients, offsets, keep)):
+                if off is not None:
+                    # transit corruption hits every DELIVERED payload
+                    # (even a deadline-dropped one — the scale was drawn,
+                    # the payload just never merges)
+                    payloads[i] = _scr.corrupt_update(
+                        g_round, payloads[i],
+                        injector.take_corruption(c.cid))
+                    if not kept:
+                        injector.note_deadline_drop(c.cid, t_round0 + off)
             if not all(keep):
                 injector.note_degraded()
             t_virtual += (round_time if round_time is not None
                           else max(durations))
-            updates = [u for u, kept in zip(updates, keep) if kept]
         else:
             keep = [True] * len(clients)
             # straggler effect: the barrier waits for the slowest client
             t_virtual += max(durations)
+        if screener is not None:
+            keep = list(keep)
+            for i, (c, off) in enumerate(zip(clients, offsets)):
+                if not keep[i] or off is None:
+                    continue
+                fin, nrm = _scr.screen_update(g_round, payloads[i])
+                if not screener.screen(c.cid, t_round0 + off, fin, nrm):
+                    keep[i] = False
         for c, info, kept in zip(clients, infos, keep):
             if not kept:
                 continue
             log.update_counts[c.tier] += 1
             log.staleness[c.tier].append(0)  # barrier => no staleness
             log.eps_trajectory[c.tier].append(info["epsilon"])
+        updates = [(p, c.n_train)
+                   for c, p, kept in zip(clients, payloads, keep) if kept]
         if updates:
             global_params = strat.aggregate(global_params, updates)
 
@@ -213,19 +248,25 @@ def _run_fedavg_legacy(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    if injector is not None:
-        log.fault_events = list(injector.events)
+    if injector is not None or screener is not None:
+        ev = list(injector.events) if injector is not None else []
+        if screener is not None:
+            ev += list(screener.events)
+        log.fault_events = ev
     return global_params, log
 
 
 def _run_async_legacy(
     clients, global_params, accuracy_fn, test_data, strategy,
     max_updates=300, max_time=None, seed=0, eval_every=5, target_acc=None,
-    faults=None,
+    faults=None, screening=None,
 ) -> tuple:
     from repro.core.faults import FaultInjector
+    from repro.core import screening as _scr
     injector = (FaultInjector(faults, len(clients))
                 if faults is not None else None)
+    screener = (_scr.ScreeningState(screening, len(clients))
+                if screening is not None else None)
     log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)
     for c in clients:
@@ -235,13 +276,17 @@ def _run_async_legacy(
         log.eps_trajectory.setdefault(c.tier, [])
 
     # Seed the event queue: every client starts training version 0 at t=0.
+    # Pending entries carry the DISPATCH-time globals alongside the
+    # trained payload: transit corruption and screening both measure the
+    # upload against the snapshot the client pulled (params0 in the
+    # cohort engine), not the globals at delivery.
     heap = []
     pending = {}
     for c in clients:
         key, sub = jax.random.split(key)
         params_k, info = c.local_train(global_params, sub)
         c.model_version = 0
-        pending[c.cid] = (params_k, info)
+        pending[c.cid] = (params_k, info, global_params)
         heapq.heappush(heap, (info["duration"], c.cid))
 
     server_version = 0
@@ -268,7 +313,14 @@ def _run_async_legacy(
             elif aux is not None:           # deliver + a scheduled dup copy
                 heapq.heappush(heap, (aux, cid))
         t_virtual = t
-        params_k, info = pending.pop(cid)
+        params_k, info, g_ref = pending.pop(cid)
+        if not dropped and injector is not None:
+            params_k = _scr.corrupt_update(
+                g_ref, params_k, injector.take_corruption(cid))
+        if not dropped and screener is not None:
+            fin, nrm = _scr.screen_update(g_ref, params_k)
+            if not screener.screen(cid, t, fin, nrm):
+                dropped = True  # zero-influence reject, same as the engine
         if not dropped:
             tau = server_version - c.model_version
             log.staleness[c.tier].append(tau)
@@ -307,7 +359,7 @@ def _run_async_legacy(
             key, sub = jax.random.split(key)
             new_params_k, new_info = c.local_train(global_params, sub)
             c.model_version = server_version
-            pending[cid] = (new_params_k, new_info)
+            pending[cid] = (new_params_k, new_info, global_params)
             t_next = t_virtual + new_info["duration"]
             if injector is not None:
                 # leave/rejoin churn delays the next local round
@@ -317,6 +369,9 @@ def _run_async_legacy(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    if injector is not None:
-        log.fault_events = list(injector.events)
+    if injector is not None or screener is not None:
+        ev = list(injector.events) if injector is not None else []
+        if screener is not None:
+            ev += list(screener.events)
+        log.fault_events = ev
     return global_params, log

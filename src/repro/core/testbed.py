@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.client import Client
 from repro.core.dp import DPConfig
 from repro.core.faults import FaultModel
+from repro.core.screening import ScreeningConfig
 from repro.core.heterogeneity import PROFILES, TIERS
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic_ser import SERDataConfig, generate, train_test_split
@@ -64,6 +65,9 @@ class TestbedConfig:
     workload: str = "ser_cnn"      # repro.api.workloads registry entry
     faults: Optional[FaultModel] = None  # deterministic fault injection
                                    # (core.faults; None = fault-free run)
+    screening: Optional[ScreeningConfig] = None  # update screening /
+                                   # quarantine (core.screening; None =
+                                   # every delivered upload merges)
 
 
 def partition_key(cfg: TestbedConfig) -> tuple:

@@ -50,6 +50,11 @@ class LocalRoundPlan:
     dropped: bool = False    # update lost to a fault (core.faults): the member
                              # stays in the compiled cohort as a zero-weight
                              # mask slot and is never logged as an update
+    corrupt_scale: float = 1.0  # transit-corruption payload scale drawn by the
+                                # FaultInjector at delivery (1.0 = clean
+                                # sentinel, NaN = all-NaN payload, else delta
+                                # blowup) — folded into the compiled step's
+                                # (K_pad,) runtime corrupt_scale vector
 
 
 def steps_per_round(n: int, batch_size: int, local_epochs: int) -> int:

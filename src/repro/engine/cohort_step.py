@@ -13,8 +13,8 @@ Two data paths feed it (``make_cohort_step(..., arena=...)``):
   uploaded once; the step gathers the cohort with ``jnp.take`` over a
   (K,) slot vector, gathers minibatches from the resident data via the
   (K, S_max, B) int32 ``batch_idx`` plan, and scatters the new optimizer
-  state back into the (donated) opt arena.  Per-cohort H2D is a few KB
-  of indices.
+  state back into the opt arena.  Per-cohort H2D is a few KB of
+  indices.
 * **host** (PR-2 baseline, ``arena=False``) — params/opt state stack in
   Python per cohort and fully materialized batch tensors cross H2D every
   step; kept for the benchmark comparison and for raw-pytree shardings.
@@ -120,6 +120,46 @@ def validate_client_axis(client_axis: str) -> str:
 def _tree_where(mask, new, old):
     return jax.tree_util.tree_map(
         lambda n, o: jnp.where(mask, n, o), new, old)
+
+
+def _corrupt_members(ref, new, scale):
+    """In-step transit corruption of the stacked upload payloads:
+    member k's delivered params become ``p0 + scale[k] * (p - p0)``
+    (float32, elementwise).  ``scale[k] == 1.0`` is the CLEAN sentinel
+    and selects ``p`` verbatim through ``jnp.where`` — clean members'
+    payloads stay bitwise identical to an uncorrupted run, which is
+    what makes screening-off a true no-op (and keeps the one-program
+    invariant: the scale vector is a runtime argument, corruption rate
+    sweeps never retrace).  A NaN scale poisons the whole payload (the
+    all-NaN corruption mode)."""
+    def leaf(p0, p):
+        shape = (-1,) + (1,) * (p.ndim - 1)
+        s = scale.reshape(shape).astype(jnp.float32)
+        clean = (scale == 1.0).reshape(shape)
+        p0f, pf = p0.astype(jnp.float32), p.astype(jnp.float32)
+        return jnp.where(clean, pf, p0f + s * (pf - p0f)).astype(p.dtype)
+
+    return jax.tree_util.tree_map(leaf, ref, new)
+
+
+def _screen_members(ref, new):
+    """Per-member screen pass over the stacked (K, D) update matrix:
+    ``(finite, norm)`` with ``norm[k]`` the float32 L2 norm of member
+    k's update delta and ``finite[k]`` its finiteness verdict
+    (``isfinite(norm)`` — NaN/Inf anywhere in the delta, or a square
+    sum overflowing float32, both trip it).  Threshold comparison is
+    deliberately NOT here: it happens on the host against runtime
+    config scalars, so one compiled program serves screening on/off and
+    every threshold.  ``repro.core.screening.screen_update`` is the
+    legacy loops' host-side mirror (same leaf-order accumulation)."""
+    sq = None
+    for p0, p in zip(jax.tree_util.tree_leaves(ref),
+                     jax.tree_util.tree_leaves(new)):
+        d = p.astype(jnp.float32) - p0.astype(jnp.float32)
+        part = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))    # (K,)
+        sq = part if sq is None else sq + part
+    norm = jnp.sqrt(sq)
+    return jnp.isfinite(norm), norm
 
 
 def _tree_where_members(live, new, old):
@@ -228,6 +268,19 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     Incompatible with ``client_axis="fl_step"`` (per-microbatch
     mechanism); ignored when ``use_dp=False``.
 
+    Both data-path variants additionally take a trailing ``corrupt_scale``
+    argument — a (K_pad,) float32 runtime vector of per-member transit-
+    corruption scales (1.0 = clean sentinel, NaN = all-NaN payload, any
+    other value = update-delta blowup; see ``repro.core.faults``) — and
+    return a third output ``screen = (finite, norm)``: the per-member
+    finite verdict and float32 update-delta L2 norm of the (possibly
+    corrupted) upload payload, computed INSIDE the compiled program over
+    the stacked (K, D) update matrix.  Threshold comparison against
+    ``ScreeningConfig`` happens on the host, so screening on/off, every
+    threshold and every corruption rate replay ONE compiled program
+    (``step_builds`` delta 0 — the same invariant the runtime sigma
+    preserves).
+
     Both data-path variants take a trailing ``noise_stddev`` argument — a
     runtime float32 scalar carrying the DP noise scale ``sigma * C / B``
     (computed ON THE HOST by the runner so it rounds to the same float32
@@ -245,16 +298,20 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     the clients' sigma, so only the noisy points of a sweep share the
     runtime-scale program.
 
-    ``donate=False`` disables EVERY buffer donation (the opt-arena
-    scatter, the host path's stacked state, and ``donate_globals``).
-    Donation is a throughput win on the strictly serial driver, but a
-    donated-input dispatch BLOCKS the host until the computation
-    finishes (measured on jax 0.4 CPU: a donation-chained loop runs
-    fully synchronously while the identical non-donated chain dispatches
-    asynchronously) — the engine's pipelined scheduler
-    (``EngineConfig.pipeline_depth >= 2``) therefore trades the donated
-    in-place update for an async-dispatchable copy so host planning can
-    overlap device compute.
+    The cohort step itself is ALWAYS donation-free (see the arena-path
+    comment: on jax 0.4.37 the XLA:CPU thunk runtime recycles donated
+    step inputs while the PR-9 screen/corrupt epilogue still reads
+    pre-scatter state, corrupting the returned uploads).  ``donate``
+    now gates only the remaining donations outside the step —
+    ``donate_globals`` on the fused merge and the arena write helpers;
+    ``donate=False`` disables those too.  Donation is a throughput win
+    on the strictly serial driver, but a donated-input dispatch BLOCKS
+    the host until the computation finishes (measured on jax 0.4 CPU: a
+    donation-chained loop runs fully synchronously while the identical
+    non-donated chain dispatches asynchronously) — the engine's
+    pipelined scheduler (``EngineConfig.pipeline_depth >= 2``)
+    therefore runs every donation off so host planning can overlap
+    device compute.
     """
     global _STEP_BUILDS
     _STEP_BUILDS += 1
@@ -459,14 +516,22 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                 stack_trees([o for _, o in outs]))
 
     if arena:
-        # the opt arena is scatter-updated in place every cohort: input and
-        # output leaves share shape/dtype AND the same shape-aware sharding
-        # rule, so donation aliases even on a mesh (unlike the host path's
-        # replicated-in / partitioned-out cohort stacks)
-        @functools.partial(
-            jax.jit, **({"donate_argnums": (1,)} if donate else {}))
+        # the opt arena used to be donated and scatter-updated in place
+        # (input/output leaves share shape/dtype and sharding rule, so
+        # the alias materialized even on a mesh) — but with the PR-9
+        # screen/corrupt epilogue adding reduction outputs to the step,
+        # XLA:CPU's thunk runtime recycles the donated buffers while the
+        # epilogue still reads pre-scatter state, and the step returns
+        # garbage (observed on jax 0.4.37: NaN uploads in a fault-free
+        # run; data-dependency fences don't help because the bug is in
+        # buffer liveness, not op ordering).  The step is therefore
+        # donation-free on every path — the same program shape the
+        # pipelined scheduler always required (see audit_donation) — at
+        # the cost of one opt-arena copy per serial-path cohort.
+        @jax.jit
         def cohort_step(arena_params, arena_opt, arena_data, slots,
-                        batch_idx, keys, n_steps, noise_stddev):
+                        batch_idx, keys, n_steps, noise_stddev,
+                        corrupt_scale):
             def take(tree):
                 return jax.tree_util.tree_map(
                     lambda l: jnp.take(l, slots, axis=0), tree)
@@ -483,20 +548,24 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
                 noise_stddev)
             # write-back scatter: pad members target the spare slot with
             # their (masked, unchanged) gathered state, so duplicate
-            # indices only ever carry identical values
+            # indices only ever carry identical values.  The scatter
+            # takes the HONEST post-training state: transit corruption
+            # below touches only the returned upload payload, never the
+            # client's own arena slot.
             new_arena_opt = constrain(jax.tree_util.tree_map(
                 lambda a, n: a.at[slots].set(n), arena_opt, new_opt))
-            return constrain(new_params), new_arena_opt
+            upload = constrain(_corrupt_members(
+                stacked_params, new_params, corrupt_scale))
+            screen = constrain(_screen_members(stacked_params, upload))
+            return upload, new_arena_opt, screen
     else:
-        # donation is only a win when input and output buffers can alias;
-        # under mesh shardings the replicated inputs and partitioned
-        # outputs never do, and jax warns on every call — don't donate
-        jit_kw = ({} if client_shardings is not None or not donate
-                  else {"donate_argnums": (0, 1)})
-
-        @functools.partial(jax.jit, **jit_kw)
+        # donation-free like the arena path (the cohort-stack inputs
+        # never aliased under mesh shardings anyway — replicated in,
+        # partitioned out — and the single-device alias trips the same
+        # XLA:CPU thunk-runtime buffer recycling described above)
+        @jax.jit
         def cohort_step(stacked_params, stacked_opt, batches, keys, n_steps,
-                        noise_stddev):
+                        noise_stddev, corrupt_scale):
             stacked_params = constrain(stacked_params)
             if callable(client_shardings):
                 stacked_opt = constrain(stacked_opt)
@@ -504,7 +573,10 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
             new_params, new_opt = run_members(
                 stacked_params, stacked_opt, keys, batches, n_steps,
                 noise_stddev)
-            return constrain(new_params), new_opt
+            upload = constrain(_corrupt_members(
+                stacked_params, new_params, corrupt_scale))
+            screen = constrain(_screen_members(stacked_params, upload))
+            return upload, new_opt, screen
 
     # every merge replaces the globals, so donating kills the one
     # full-model re-allocation in the async inner loop — but only when the
@@ -514,11 +586,18 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     @functools.partial(jax.jit, **merge_kw)
     def merge_cohort(global_params, stacked_uploads, coeffs, g_coeff):
         coeffs = coeffs.astype(jnp.float32)
-        return jax.tree_util.tree_map(
-            lambda g, s: (g_coeff * g.astype(jnp.float32)
-                          + jnp.tensordot(coeffs, s.astype(jnp.float32),
-                                          axes=(0, 0))).astype(g.dtype),
-            global_params, stacked_uploads)
+
+        def leaf(g, s):
+            sf = s.astype(jnp.float32)
+            # a zero-coefficient member must contribute EXACTLY nothing
+            # even when its payload is nonfinite (a screened-out corrupt
+            # upload, PR 9): 0 * NaN = NaN would poison the reduction
+            mask = (coeffs != 0.0).reshape((-1,) + (1,) * (sf.ndim - 1))
+            sf = jnp.where(mask, sf, 0.0)
+            return (g_coeff * g.astype(jnp.float32)
+                    + jnp.tensordot(coeffs, sf, axes=(0, 0))).astype(g.dtype)
+
+        return jax.tree_util.tree_map(leaf, global_params, stacked_uploads)
 
     return cohort_step, merge_cohort
 

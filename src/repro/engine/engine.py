@@ -88,6 +88,7 @@ from repro.core.aggregation import (
     AdaptiveAsync, FedAsync, FedAvg, FedBuff, apply_update)
 from repro.core.faults import FaultInjector, apply_deadline, zero_fault_stats
 from repro.core.runlog import RunLog, eval_all, validate_engine_stats
+from repro.core.screening import ScreeningState, zero_screen_stats
 from repro.engine.cohort import (
     LocalRoundPlan, fedavg_weights, fold_cohort_weights, padded_cohort_size,
     plan_batches, pop_cohort, steps_per_round)
@@ -158,6 +159,19 @@ def _host_fetch(runner, value) -> float:
     return out
 
 
+def _host_fetch_array(runner, value):
+    """The :func:`_host_fetch` sibling for the engine's ARRAY reads —
+    today that is exactly one site, the per-cohort screen-verdict fetch
+    (``CohortRunner.fetch_screen``).  Routing the ``device_get`` through
+    this funnel keeps the sync accounting honest: the runner buckets the
+    fetch into ``screen_verdict_syncs`` (the screening path's sanctioned
+    blocking point), so ``host_syncs_between_evals`` stays 0 on the
+    pipelined path whether screening is on or off."""
+    out = jax.device_get(value)
+    runner.note_host_sync()
+    return out
+
+
 @dataclass
 class StagedCohort:
     """One cohort's device-ready inputs, assembled (and uploaded) ahead
@@ -175,6 +189,8 @@ class StagedCohort:
     batch_idx: Optional[object] = None   # (K_pad, S_max, B) int32 on device
     keys: Optional[object] = None        # (K_pad, 2) uint32 on device
     n_steps: Optional[object] = None     # (K_pad,) int32 on device
+    corrupt: Optional[object] = None     # (K_pad,) float32 transit-corruption
+                                         # scales (1.0 = clean, incl. pads)
     stacked_params: Optional[object] = None  # host path only
     stacked_opt: Optional[object] = None
     batches: Optional[object] = None
@@ -314,11 +330,22 @@ class CohortRunner:
         # the spec carries a FaultModel; stats() folds its counters into
         # the ENGINE_STATS_KEYS schema (zeros on a fault-free run)
         self.fault_injector = None
-        # a donated-input dispatch blocks the host (see cohort_step):
-        # every serial-path submit on the arena path (and the donating
-        # host path) is therefore a per-cohort host sync, counted at the
-        # submit site so the serial rows report a NONZERO between-evals
-        # sync count that the pipelined path demonstrably drops to 0
+        # update-screening oracle (core.screening.ScreeningState) — set by
+        # the engine loops when the spec carries a ScreeningConfig; the
+        # verdict fetches it forces are the pipelined path's third
+        # sanctioned sync bucket (screen_verdict_syncs), so the
+        # host_syncs_between_evals == 0 invariant survives screening
+        self.screening = None
+        self._in_screen = False
+        self.screen_verdict_syncs = 0
+        self._last_screen = None
+        # the serial driver consumes every submit's results before
+        # planning the next cohort (and its donating merge/arena-write
+        # helpers block dispatch anyway — see cohort_step): every
+        # serial-path submit is therefore a per-cohort host sync,
+        # counted at the submit site so the serial rows report a NONZERO
+        # between-evals sync count that the pipelined path demonstrably
+        # drops to 0
         self._submits_block = (not self.pipelined) and (
             self.use_arena or client_shardings is None)
         # epsilon-vs-round table per client (lazy; see dispatch)
@@ -348,10 +375,16 @@ class CohortRunner:
         self.drain_waits = 0
         self.blocking_submits = 0
         self.fault_injector = None
+        self.screening = None
+        self._in_screen = False
+        self.screen_verdict_syncs = 0
+        self._last_screen = None
 
     # -- host-sync accounting ---------------------------------------------
     def note_host_sync(self):
-        if self._in_eval:
+        if self._in_screen:
+            self.screen_verdict_syncs += 1
+        elif self._in_eval:
             self.host_syncs_at_eval += 1
         else:
             self.host_syncs_between_evals += 1
@@ -449,6 +482,11 @@ class CohortRunner:
         }
         inj = self.fault_injector
         out.update(inj.stats() if inj is not None else zero_fault_stats())
+        scr = zero_screen_stats()
+        if self.screening is not None:
+            scr.update(self.screening.counters)
+        scr["screen_verdict_syncs"] = self.screen_verdict_syncs
+        out.update(scr)
         return out
 
     # -- dispatch ----------------------------------------------------------
@@ -553,14 +591,16 @@ class CohortRunner:
             }
             self.cohorts_run += 1
             self.h2d_bytes_total += (
-                sum(a.nbytes for a in batches_np.values()) + 4 * k)
+                sum(a.nbytes for a in batches_np.values()) + 4 * k + 4 * k)
             return StagedCohort(
                 plans=plans, k=k, arena=False,
                 stacked_params=stack_trees([p.params0 for p in plans]),
                 stacked_opt=stack_trees([p.opt_state for p in plans]),
                 batches={kk: jnp.asarray(v) for kk, v in batches_np.items()},
                 keys=jnp.stack([p.key for p in plans]),
-                n_steps=jnp.asarray([p.n_steps for p in plans], jnp.int32))
+                n_steps=jnp.asarray([p.n_steps for p in plans], jnp.int32),
+                corrupt=jnp.asarray(
+                    [p.corrupt_scale for p in plans], jnp.float32))
         self._flush_writes()
         k_pad = (padded_cohort_size(k, self._n_data, self.cfg.pow2_cohorts)
                  if self._n_data > 1 else k)
@@ -579,12 +619,15 @@ class CohortRunner:
         keys = jnp.stack(
             [p.key for p in plans]
             + [jnp.zeros_like(plans[0].key)] * (k_pad - k))
+        scales = np.ones((k_pad,), np.float32)  # pad members stay clean
+        scales[:k] = [p.corrupt_scale for p in plans]
         self.cohorts_run += 1
-        self.h2d_bytes_total += batch_idx.nbytes + slots.nbytes + n_steps.nbytes
+        self.h2d_bytes_total += (batch_idx.nbytes + slots.nbytes
+                                 + n_steps.nbytes + scales.nbytes)
         return StagedCohort(
             plans=plans, k=k, slots=slots_j,
             batch_idx=jnp.asarray(batch_idx), keys=keys,
-            n_steps=jnp.asarray(n_steps))
+            n_steps=jnp.asarray(n_steps), corrupt=jnp.asarray(scales))
 
     def submit_cohort(self, staged: StagedCohort):
         """Enqueue the compiled local phase for a staged cohort.  On the
@@ -599,20 +642,48 @@ class CohortRunner:
             self.note_host_sync()
         if not staged.arena:
             if staged.degenerate:
+                self._last_screen = None
                 return stack_trees([p.params0 for p in plans])
-            new_stacked, new_opt = self.cohort_step(
+            new_stacked, new_opt, screen = self.cohort_step(
                 staged.stacked_params, staged.stacked_opt, staged.batches,
-                staged.keys, staged.n_steps, self._noise_std)
+                staged.keys, staged.n_steps, self._noise_std, staged.corrupt)
             for i, p in enumerate(plans):
                 self.clients[p.cid].opt_state = unstack_tree(new_opt, i)
+            self._last_screen = screen
             return new_stacked
         if staged.degenerate:
+            self._last_screen = None
             return self._gather(self._arena_params, staged.slots)
-        new_stacked, self._arena_opt = self.cohort_step(
+        new_stacked, self._arena_opt, screen = self.cohort_step(
             self._arena_params, self._arena_opt, self._arena_data,
             staged.slots, staged.batch_idx, staged.keys, staged.n_steps,
-            self._noise_std)
+            self._noise_std, staged.corrupt)
+        self._last_screen = screen
         return new_stacked
+
+    def take_screen_handle(self):
+        """Return-and-clear the device handle for the LAST submitted
+        cohort's screen outputs ((K_pad,) finite-mask + update norms).
+        The handle is a future on the pipelined path — nothing syncs
+        until :meth:`fetch_screen` pulls it."""
+        screen, self._last_screen = self._last_screen, None
+        return screen
+
+    def fetch_screen(self, handle, k: int):
+        """Materialize one cohort's screen verdict inputs on the host:
+        ONE device->host fetch of the (finite, norm) pair, bucketed as a
+        ``screen_verdict_syncs`` sanctioned sync (the pipelined clean
+        path keeps ``host_syncs_between_evals == 0``).  Degenerate
+        cohorts (``handle is None``) never trained, so every member is
+        trivially finite with a zero-delta norm."""
+        if handle is None:
+            return np.ones((k,), bool), np.zeros((k,), np.float32)
+        self._in_screen = True
+        try:
+            fin, nrm = _host_fetch_array(self, handle)
+        finally:
+            self._in_screen = False
+        return np.asarray(fin[:k]), np.asarray(nrm[:k])
 
     # -- upload ------------------------------------------------------------
     def upload(self, plan: LocalRoundPlan, new_params):
@@ -676,6 +747,8 @@ def run_fedavg_engine(
     faults=None,
     checkpoint=None,
     resume_from: Optional[str] = None,
+    strategy=None,
+    screening=None,
 ) -> tuple:
     """Synchronous FedAvg (Eq. 9): each round is one full-population
     barrier, executed as ceil(N / max_cohort) compiled cohort chunks whose
@@ -693,16 +766,35 @@ def run_fedavg_engine(
     the member's round.  ``checkpoint`` (a
     :class:`repro.engine.resilience.CheckpointPolicy`) snapshots the full
     run state every ``checkpoint.every`` rounds; ``resume_from`` (a
-    checkpoint directory) resumes an aborted run bit-identically."""
+    checkpoint directory) resumes an aborted run bit-identically.
+
+    ``strategy`` selects the synchronous aggregator (default plain
+    :class:`~repro.core.aggregation.FedAvg`); robust variants like
+    ``TrimmedMeanFedAvg`` route per-member through ``aggregate`` exactly
+    like the legacy loop.  ``screening`` (a
+    :class:`repro.core.screening.ScreeningConfig`) screens every
+    delivered upload against the compiled step's always-computed
+    finite-mask/update-norm outputs: a rejected member keeps its compiled
+    slot and merges with coefficient exactly 0.0 — same degradation rule
+    as a lost update, same program, ``step_builds`` delta 0."""
     if runner is None:
         cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
         runner = CohortRunner(clients, cfg)
     else:
         cfg = runner.cfg
+    if strategy is None:
+        strategy = FedAvg()
+    if strategy.is_async:
+        raise ValueError(
+            f"run_fedavg_engine requires a synchronous strategy, got "
+            f"{strategy.name!r} — use run_async_engine")
     injector = (FaultInjector(faults, len(clients))
                 if faults is not None else None)
     runner.fault_injector = injector
-    log = RunLog(strategy="fedavg")
+    screener = (ScreeningState(screening, len(clients))
+                if screening is not None else None)
+    runner.screening = screener
+    log = RunLog(strategy=strategy.name)
     key = jax.random.PRNGKey(seed)
     t_virtual = 0.0
     for c in clients:
@@ -735,20 +827,27 @@ def run_fedavg_engine(
                 # its whole barrier round (the initial round never draws)
                 p.duration += injector.redispatch_delay(c.cid, t_virtual)
             plans.append(p)
-        chunks = [plans[i:i + cfg.max_cohort]
-                  for i in range(0, len(plans), cfg.max_cohort)]
-        stacked_chunks = [
-            runner.submit_cohort(runner.stage_cohort(ch)) for ch in chunks]
-        log.cohort_sizes.extend(len(ch) for ch in chunks)
+        # per-plan delivery times for the screening ledger (None = the
+        # upload never arrived, so there is nothing to screen)
+        t_round0 = t_virtual
+        t_deliver = [t_round0 + p.duration for p in plans]
         if injector is not None:
+            # fates resolve BEFORE staging so a delivered member's
+            # transit-corruption scale rides into the compiled step's
+            # runtime corrupt vector (the draws are host-only state, so
+            # the event sequence is identical to the submit-first order
+            # earlier revisions used)
             fates = [injector.fedavg_fate(p.cid, t_virtual, p.duration)
                      for p in plans]
             offsets = [off for off, _ in fates]
             keep, round_time = apply_deadline(injector.model, offsets)
-            for p, off, kept in zip(plans, offsets, keep):
+            for i, (p, off, kept) in enumerate(zip(plans, offsets, keep)):
                 p.dropped = not kept
-                if off is not None and not kept:
-                    injector.note_deadline_drop(p.cid, t_virtual + off)
+                t_deliver[i] = None if off is None else t_round0 + off
+                if off is not None:
+                    p.corrupt_scale = injector.take_corruption(p.cid)
+                    if not kept:
+                        injector.note_deadline_drop(p.cid, t_round0 + off)
             if any(p.dropped for p in plans):
                 injector.note_degraded()
             # the barrier waits for the effective deadline when it cut
@@ -758,8 +857,29 @@ def run_fedavg_engine(
                           else max(p.duration for p in plans))
         else:
             t_virtual += max(p.duration for p in plans)
+        chunks = [plans[i:i + cfg.max_cohort]
+                  for i in range(0, len(plans), cfg.max_cohort)]
+        stacked_chunks, screen_handles = [], []
+        for ch in chunks:
+            stacked_chunks.append(
+                runner.submit_cohort(runner.stage_cohort(ch)))
+            screen_handles.append(runner.take_screen_handle())
+        log.cohort_sizes.extend(len(ch) for ch in chunks)
+        if screener is not None:
+            # judge every DELIVERED member against the compiled step's
+            # finite-mask/update-norm outputs (one fetch per chunk, the
+            # screen_verdict_syncs bucket); a reject keeps its compiled
+            # slot and merges with coefficient exactly 0.0 below
+            i0 = 0
+            for ch, handle in zip(chunks, screen_handles):
+                fin, nrm = runner.fetch_screen(handle, len(ch))
+                for j, p in enumerate(ch):
+                    if not p.dropped and not screener.screen(
+                            p.cid, t_deliver[i0 + j], fin[j], nrm[j]):
+                        p.dropped = True
+                i0 += len(ch)
 
-        if _fused_ok(FedAvg(), clients, plans, cfg):
+        if _fused_ok(strategy, clients, plans, cfg):
             # Eq. 9 as chunked weights-vector reductions: the new globals
             # accumulate sum_k (n_k / sum n) p_k across the chunks, the
             # sum running over SURVIVING members only (dropped members
@@ -788,7 +908,7 @@ def run_fedavg_engine(
                      clients[p.cid].n_train)
                     for i, p in enumerate(ch) if not p.dropped)
             if updates:
-                global_params = FedAvg().aggregate(global_params, updates)
+                global_params = strategy.aggregate(global_params, updates)
 
         for p in plans:
             if p.dropped:
@@ -823,8 +943,11 @@ def run_fedavg_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    if injector is not None:
-        log.fault_events = list(injector.events)
+    if injector is not None or screener is not None:
+        ev = list(injector.events) if injector is not None else []
+        if screener is not None:
+            ev += list(screener.events)
+        log.fault_events = ev
     log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log
 
@@ -846,6 +969,7 @@ def run_async_engine(
     faults=None,
     checkpoint=None,
     resume_from: Optional[str] = None,
+    screening=None,
 ) -> tuple:
     """Event-driven async FL (Eq. 10-11) over cohorts popped from the
     virtual-clock heap.  ``staleness_window=0`` reproduces the legacy loop
@@ -864,7 +988,14 @@ def run_async_engine(
     :class:`repro.engine.resilience.CheckpointPolicy`) snapshots the run
     — server params, arenas, RNG streams, the serialized event heap —
     every ``checkpoint.every`` merged updates; ``resume_from`` resumes an
-    aborted run bit-identically."""
+    aborted run bit-identically.
+
+    ``screening`` (a :class:`repro.core.screening.ScreeningConfig`)
+    screens every delivered upload against the compiled step's
+    always-computed finite-mask/update-norm outputs — rejects (and
+    quarantine drops) become zero-coefficient mask slots like lost
+    updates, thresholds are host-side runtime scalars so the one
+    compiled program is shared across every screening setting."""
     if runner is None:
         cfg = _resolve_mesh_cfg(engine_cfg or EngineConfig(), mesh)
         runner = CohortRunner(clients, cfg)
@@ -878,6 +1009,9 @@ def run_async_engine(
     injector = (FaultInjector(faults, len(clients))
                 if faults is not None else None)
     runner.fault_injector = injector
+    screener = (ScreeningState(screening, len(clients))
+                if screening is not None else None)
+    runner.screening = screener
     if runner.donates_globals:
         # the fused merge donates its globals argument; copy ONCE so the
         # first merge consumes our copy, not the caller's buffers (which
@@ -943,17 +1077,31 @@ def run_async_engine(
                 p.t_complete = t
                 if verdict == "drop":
                     p.dropped = True
-                elif aux is not None:       # deliver + a scheduled dup copy
-                    heapq.heappush(heap, (aux, cid))
+                else:
+                    p.corrupt_scale = injector.take_corruption(cid)
+                    if aux is not None:     # deliver + a scheduled dup copy
+                        heapq.heappush(heap, (aux, cid))
                 plans.append(p)
             if not plans:                   # the whole pop was ghosts/retries
                 continue
         t_virtual = plans[-1].t_complete
         new_stacked = runner.submit_cohort(runner.stage_cohort(plans))
+        screen_handle = runner.take_screen_handle()
         log.cohort_sizes.append(len(plans))
         n_dropped = sum(1 for p in plans if p.dropped)
         if n_dropped:
             injector.note_degraded()
+        if screener is not None:
+            # screen every DELIVERED member at its completion time (one
+            # fetch per cohort — the screen_verdict_syncs bucket); a
+            # reject becomes a zero-coefficient mask slot exactly like a
+            # lost update, so the merge below re-uses the same program
+            fin, nrm = runner.fetch_screen(screen_handle, len(plans))
+            for j, p in enumerate(plans):
+                if not p.dropped and not screener.screen(
+                        p.cid, p.t_complete, fin[j], nrm[j]):
+                    p.dropped = True
+            n_dropped = sum(1 for p in plans if p.dropped)
 
         if _fused_ok(strategy, clients, plans, cfg):
             # staleness weights alpha/(1+tau_i), folded so the single
@@ -1055,7 +1203,10 @@ def run_async_engine(
     for c in clients:
         log.resources[c.tier] = c.clock.resource_sample()
         log.dropouts[c.tier] = c.clock.dropouts
-    if injector is not None:
-        log.fault_events = list(injector.events)
+    if injector is not None or screener is not None:
+        ev = list(injector.events) if injector is not None else []
+        if screener is not None:
+            ev += list(screener.events)
+        log.fault_events = ev
     log.engine_stats = validate_engine_stats(runner.stats())
     return global_params, log

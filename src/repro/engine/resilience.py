@@ -51,7 +51,7 @@ from repro.engine.cohort import LocalRoundPlan
 
 _RUNNER_COUNTERS = ("cohorts_run", "h2d_bytes_total", "host_syncs_at_eval",
                     "host_syncs_between_evals", "blocking_submits",
-                    "drain_waits")
+                    "drain_waits", "screen_verdict_syncs")
 _RUNLOG_FIELDS = ("times", "global_acc", "server_version", "update_counts",
                   "influence", "staleness", "eps_trajectory", "local_acc",
                   "cohort_sizes")
@@ -214,6 +214,8 @@ def _snapshot_common(runner, clients, log, injector, global_params, key,
         "runlog": {f: getattr(log, f) for f in _RUNLOG_FIELDS},
         "fault_events": [list(e) for e in log.fault_events],
         "injector": injector.state_dict() if injector is not None else None,
+        "screening": (runner.screening.state_dict()
+                      if runner.screening is not None else None),
         "runner": {k: int(getattr(runner, k)) for k in _RUNNER_COUNTERS},
     }
     return flat, meta
@@ -235,6 +237,13 @@ def _restore_common(flat, meta, runner, clients, log, injector,
         raise ValueError(
             "fault configuration mismatch: the checkpointed run and the "
             "resuming run must both carry the same FaultModel (or neither)")
+    saved_screening = meta.get("screening")
+    if (runner.screening is None) != (saved_screening is None):
+        raise ValueError(
+            "screening configuration mismatch: the checkpointed run and "
+            "the resuming run must both carry a ScreeningConfig (or "
+            "neither) — quarantine strike/suspension state cannot be "
+            "invented or discarded mid-run")
     globals_ = _get_tree(flat, "globals", global_params)
     key = jax.numpy.asarray(_fetch(flat, "prng_key"))
     if meta["has_arena"]:
@@ -263,8 +272,10 @@ def _restore_common(flat, meta, runner, clients, log, injector,
                         for k, cid, t in meta["fault_events"]]
     if injector is not None:
         injector.load_state_dict(meta["injector"])
+    if runner.screening is not None:
+        runner.screening.load_state_dict(saved_screening)
     for k in _RUNNER_COUNTERS:
-        setattr(runner, k, int(meta["runner"][k]))
+        setattr(runner, k, int(meta["runner"].get(k, 0)))
     return globals_, key
 
 

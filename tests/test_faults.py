@@ -100,11 +100,26 @@ def test_apply_deadline_nobody_cut_charges_slowest_kept():
     assert rt == 20.0           # nobody hit the deadline: normal barrier
 
 
-def test_apply_deadline_quorum_larger_than_survivors():
-    m = FaultModel(round_deadline_s=1.0, min_quorum=5)
-    keep, rt = apply_deadline(m, [10.0, 30.0])
-    assert keep == [True, True]     # quorum clamps to the survivor count
+def test_apply_deadline_quorum_larger_than_survivors_clamps():
+    # quorum within the LIVE count but above the SURVIVOR count is the
+    # legitimate degraded round: the clamp keeps every survivor
+    m = FaultModel(round_deadline_s=1.0, min_quorum=3)
+    keep, rt = apply_deadline(m, [10.0, 30.0, None])
+    assert keep == [True, True, False]
     assert rt == 30.0
+
+
+def test_apply_deadline_quorum_larger_than_live_count_raises():
+    """A quorum no round can ever assemble is a configuration error, not
+    a degraded round — the deadline would stretch unboundedly (PR 9
+    bugfix; the old clamp silently aggregated below the quorum)."""
+    m = FaultModel(round_deadline_s=1.0, min_quorum=5)
+    with pytest.raises(ValueError, match=r"min_quorum=5.*live client count \(2\)"):
+        apply_deadline(m, [10.0, 30.0])
+    # same guard at injector construction, against the testbed size
+    with pytest.raises(ValueError, match=r"min_quorum=5.*live client count \(3\)"):
+        FaultInjector(m, 3)
+    FaultInjector(m, 5)  # quorum == client count is the boundary: legal
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +162,79 @@ def test_injector_ledger_invariant():
     assert s["fault_upload_losses"] > 0
     assert s["fault_upload_losses"] == (
         s["fault_retries"] + s["fault_lost_updates"])
+
+
+# ---------------------------------------------------------------------------
+# retry-budget edges (PR 8 backoff re-entry, PR 9 regression coverage)
+# ---------------------------------------------------------------------------
+
+def _ledger_balances(stats):
+    return stats["fault_upload_losses"] == (
+        stats["fault_retries"] + stats["fault_lost_updates"])
+
+
+def test_zero_retry_budget_drops_immediately():
+    """max_retries=0: a lost upload never re-enters the heap — the first
+    loss IS the lost update, so retry_backoff_s=0.0 is legal (nothing
+    re-enters at a frozen virtual time)."""
+    m = FaultModel(seed=11, upload_loss_prob=1.0, max_retries=0,
+                   retry_backoff_s=0.0)
+    inj = FaultInjector(m, 2)
+    verdict, reason = inj.on_completion(0, 10.0)
+    assert (verdict, reason) == ("drop", "retries_exhausted")
+    s = inj.stats()
+    assert s["fault_upload_losses"] == s["fault_lost_updates"] == 1
+    assert s["fault_retries"] == 0
+    assert _ledger_balances(s)
+    assert [k for k, _, _ in inj.events] == ["upload_loss", "lost"]
+
+
+def test_zero_backoff_with_positive_retries_rejected():
+    # the carve-out is ONLY for max_retries=0; a retry at +0.0s would
+    # re-pop the same virtual instant forever
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        FaultModel(upload_loss_prob=0.5, max_retries=1, retry_backoff_s=0.0)
+    FaultModel(upload_loss_prob=0.5, max_retries=0, retry_backoff_s=0.0)
+
+
+def test_retry_exhaustion_exactly_at_round_deadline():
+    """A retry chain that exhausts with its final loss timestamped
+    exactly AT the deadline: the member drops as a fault (offset None),
+    and a surviving member delivered exactly at the deadline is KEPT
+    (the deadline boundary is inclusive)."""
+    m = FaultModel(seed=0, upload_loss_prob=1.0, max_retries=2,
+                   retry_backoff_s=50.0, round_deadline_s=300.0,
+                   min_quorum=1)
+    inj = FaultInjector(m, 2)
+    off, reason = inj.fedavg_fate(0, t0=0.0, duration=200.0)
+    assert off is None and reason == "retries_exhausted"
+    # losses at 200/250/300, retries into 250/300, lost at 300 == deadline
+    assert [(k, t) for k, _, t in inj.events] == [
+        ("upload_loss", 200.0), ("retry", 250.0),
+        ("upload_loss", 250.0), ("retry", 300.0),
+        ("upload_loss", 300.0), ("lost", 300.0)]
+    s = inj.stats()
+    assert s["fault_upload_losses"] == 3
+    assert s["fault_retries"] == 2 and s["fault_lost_updates"] == 1
+    assert _ledger_balances(s)
+    # the boundary delivery at off == deadline survives the barrier
+    keep, rt = apply_deadline(m, [None, 300.0])
+    assert keep == [False, True]
+    assert rt == 300.0
+
+
+def test_zero_retry_budget_ledger_holds_end_to_end(micro_cfg):
+    m = FaultModel(seed=5, upload_loss_prob=0.4, max_retries=0,
+                   retry_backoff_s=0.0)
+    _, log = run_experiment("fedasync", _faulty(micro_cfg, m),
+                            engine="cohort", max_updates=20, eval_every=10,
+                            alpha=0.4)
+    s = log.engine_stats
+    assert s["fault_upload_losses"] > 0
+    assert s["fault_retries"] == 0
+    assert _ledger_balances(s)
+    kinds = [k for k, _, _ in log.fault_events]
+    assert "retry" not in kinds and "lost" in kinds
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,456 @@
+"""Update screening & robust aggregation (PR 9): the compiled
+corrupt-update defense.
+
+Covers the tentpole acceptance criteria end to end: in-step rejection
+with a ``step_builds`` delta of 0 (thresholds are host-side runtime
+scalars), same-seed identical ``fault_events`` on the legacy loop and
+the cohort engine, quarantine state carried bit-identically across a
+checkpoint/resume boundary, the two robust aggregators, and the
+satellite-2 guarantee that screening at infinite thresholds is a
+bitwise no-op on a fault-free run (single device here, forced-8-device
+mesh in a subprocess)."""
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.audits import audit_engine_stats
+from repro.api.session import Session
+from repro.api.spec import ExperimentSpec, RunBudget, StrategySpec
+from repro.checkpoint import latest_step
+from repro.core.aggregation import (FedAsync, NormBoundedFedAsync,
+                                    STRATEGIES, TrimmedMeanFedAvg,
+                                    make_strategy)
+from repro.core.faults import FaultModel
+from repro.core.runlog import ENGINE_STATS_KEYS
+from repro.core.screening import (SCREEN_STATS_KEYS, ScreeningConfig,
+                                  ScreeningState, corrupt_update,
+                                  screen_update, zero_screen_stats)
+from repro.core.testbed import run_experiment
+from repro.data.synthetic_ser import SERDataConfig
+from repro.core.testbed import TestbedConfig
+from repro.engine import SimulatedCrash
+from repro.engine.cohort_step import step_builds
+
+# The verified corruption drill: half the deliveries corrupted, split
+# between all-NaN payloads and 1e6x delta blowups — both far outside
+# max_update_norm=1e3, so every corrupt delivery is rejected in-step.
+CORRUPT = FaultModel(seed=7, corrupt_prob=0.5)
+SCREEN = ScreeningConfig(max_update_norm=1e3, quarantine_after=2,
+                         readmit_delay_s=100.0)
+
+
+def _assert_params_close(a, b, rtol=1e-4, atol=2e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _logdict(log, drop_syncs=False):
+    es = dict(log.engine_stats)
+    if drop_syncs:
+        # screening-on runs one sanctioned verdict fetch per cohort; the
+        # satellite-2 no-op contract covers everything BUT that counter
+        es.pop("screen_verdict_syncs", None)
+    return dict(times=log.times, acc=log.global_acc,
+                sv=log.server_version, uc=dict(log.update_counts),
+                inf=log.influence, st=log.staleness,
+                eps={k: list(v) for k, v in log.eps_trajectory.items()},
+                fe=list(log.fault_events), es=es,
+                cs=list(log.cohort_sizes), dr=dict(log.dropouts))
+
+
+# ---------------------------------------------------------------------------
+# config validation & stats schema
+# ---------------------------------------------------------------------------
+
+def test_screening_config_validation():
+    ScreeningConfig()                          # all-defaults is legal
+    ScreeningConfig(max_update_norm=5.0, quarantine_after=3,
+                    readmit_delay_s=10.0)
+    with pytest.raises(ValueError, match="max_update_norm"):
+        ScreeningConfig(max_update_norm=0.0)
+    with pytest.raises(ValueError, match="max_update_norm"):
+        ScreeningConfig(max_update_norm=-1.0)
+    with pytest.raises(ValueError, match="quarantine_after"):
+        ScreeningConfig(quarantine_after=-1)
+    with pytest.raises(ValueError, match="readmit_delay_s"):
+        ScreeningConfig(quarantine_after=2, readmit_delay_s=0.0)
+    # readmit delay is irrelevant while quarantine is off
+    ScreeningConfig(quarantine_after=0, readmit_delay_s=0.0)
+
+
+def test_screen_stats_schema():
+    assert set(SCREEN_STATS_KEYS) <= set(ENGINE_STATS_KEYS)
+    z = zero_screen_stats()
+    assert set(z) == set(SCREEN_STATS_KEYS)
+    assert all(v == 0 for v in z.values())
+
+
+def test_corrupt_fault_model_validation():
+    with pytest.raises(ValueError, match="corrupt_scale"):
+        FaultModel(corrupt_prob=0.5, corrupt_scale=1.0)
+    with pytest.raises(ValueError, match="corrupt_scale"):
+        FaultModel(corrupt_scale=float("inf"))
+    with pytest.raises(ValueError, match="corrupt_nan_frac"):
+        FaultModel(corrupt_nan_frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# host-side mirrors of the in-step corrupt/screen passes
+# ---------------------------------------------------------------------------
+
+def _tree(*vals):
+    return {"w": jnp.asarray(vals[0], jnp.float32),
+            "b": jnp.asarray(vals[1], jnp.float32)}
+
+
+def test_corrupt_update_mirror():
+    ref = _tree([1.0, 2.0], [0.5])
+    new = _tree([1.5, 1.0], [0.5])
+    assert corrupt_update(ref, new, 1.0) is new     # clean sentinel
+    blown = corrupt_update(ref, new, 3.0)           # p0 + 3 (p - p0)
+    np.testing.assert_allclose(blown["w"], [2.5, -1.0])
+    np.testing.assert_allclose(blown["b"], [0.5])
+    nan = corrupt_update(ref, new, float("nan"))
+    assert all(np.isnan(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(nan))
+
+
+def test_screen_update_mirror():
+    ref = _tree([1.0, 2.0], [0.0])
+    new = _tree([1.0, 5.0], [4.0])
+    finite, norm = screen_update(ref, new)
+    assert finite and norm == pytest.approx(5.0)    # sqrt(3^2 + 4^2)
+    bad = _tree([float("nan"), 5.0], [4.0])
+    finite, norm = screen_update(ref, bad)
+    assert not finite
+
+
+# ---------------------------------------------------------------------------
+# the deterministic quarantine runtime
+# ---------------------------------------------------------------------------
+
+def test_screening_state_strike_quarantine_readmit():
+    cfg = ScreeningConfig(max_update_norm=10.0, quarantine_after=2,
+                          readmit_delay_s=50.0)
+    st = ScreeningState(cfg, num_clients=2)
+    assert st.screen(0, 0.0, True, 5.0)             # clean: accepted
+    assert not st.screen(0, 1.0, True, 20.0)        # norm reject, strike 1
+    assert not st.screen(0, 2.0, False, float("nan"))  # strike 2 -> suspend
+    assert not st.screen(0, 3.0, True, 1.0)         # dropped unseen
+    assert st.screen(1, 4.0, True, 1.0)             # other client unaffected
+    assert st.screen(0, 52.0, True, 1.0)            # served delay -> readmit
+    c = st.counters
+    assert c["screen_rejections"] == 2
+    assert c["screen_rejections"] == (c["screen_nonfinite"]
+                                      + c["screen_norm_rejects"])
+    assert c["screen_quarantined"] == 1
+    assert c["screen_quarantine_drops"] == 1
+    assert st.events == [("screen_norm", 0, 1.0),
+                         ("screen_nonfinite", 0, 2.0),
+                         ("quarantine", 0, 2.0),
+                         ("quarantine_drop", 0, 3.0),
+                         ("readmit", 0, 52.0)]
+
+
+def test_screening_state_checkpoint_roundtrip_mid_quarantine():
+    """A snapshot taken while a client is suspended must replay the
+    remaining drop/readmit sequence identically after restore."""
+    cfg = ScreeningConfig(max_update_norm=10.0, quarantine_after=1,
+                          readmit_delay_s=30.0)
+
+    def drive(st, steps):
+        return [st.screen(*s) for s in steps]
+
+    pre = [(0, 1.0, True, 99.0)]                    # reject -> quarantine
+    post = [(0, 5.0, True, 1.0),                    # dropped (suspended)
+            (0, 31.0, True, 1.0),                   # readmit + accept
+            (0, 40.0, False, 0.0)]                  # reject -> re-quarantine
+    a = ScreeningState(cfg, 2)
+    drive(a, pre)
+    snap = a.state_dict()
+    b = ScreeningState(cfg, 2)
+    b.load_state_dict(snap)
+    assert drive(a, post) == drive(b, post)
+    assert a.state_dict() == b.state_dict()
+    assert a.events == b.events
+
+
+# ---------------------------------------------------------------------------
+# robust aggregators
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_math_and_outlier_immunity():
+    strat = TrimmedMeanFedAvg(trim_frac=0.2)
+    vals = [1.0, 2.0, 3.0, 4.0, 1e9]                # one blown-up payload
+    updates = [({"w": jnp.asarray([v], jnp.float32)}, 100 * (i + 1))
+               for i, v in enumerate(vals)]         # weights must be ignored
+    out = strat.aggregate(None, updates)
+    # k=5, cut=1: sort, drop one from each end, mean of [2, 3, 4]
+    np.testing.assert_allclose(out["w"], [3.0])
+    # two-member cohort: cut clamps to 0, plain unweighted mean survives
+    out2 = strat.aggregate(None, updates[:2])
+    np.testing.assert_allclose(out2["w"], [1.5])
+    with pytest.raises(ValueError, match="trim_frac"):
+        TrimmedMeanFedAvg(trim_frac=0.5)
+
+
+def test_normbound_merge_clamps_and_matches_fedasync_in_bound():
+    g = {"w": jnp.asarray([0.0, 0.0], jnp.float32)}
+    plain, robust = FedAsync(alpha=0.4), NormBoundedFedAsync(alpha=0.4,
+                                                             norm_bound=5.0)
+    inb = {"w": jnp.asarray([3.0, 0.0], jnp.float32)}     # norm 3 < 5
+    (mp, ap), (mr, ar) = plain.merge(g, inb, 2), robust.merge(g, inb, 2)
+    assert ap == ar
+    np.testing.assert_array_equal(np.asarray(mp["w"]), np.asarray(mr["w"]))
+    # oversized: the merge moves alpha_k * norm_bound, never further
+    big = {"w": jnp.asarray([30.0, 40.0], jnp.float32)}   # norm 50
+    mb, ab = robust.merge(g, big, 0)
+    np.testing.assert_allclose(np.asarray(mb["w"]),
+                               0.4 * 5.0 * np.asarray([0.6, 0.8]),
+                               rtol=1e-6)
+    # nonfinite payload contributes nothing at all
+    nan = {"w": jnp.asarray([float("nan"), 1.0], jnp.float32)}
+    mn, _ = robust.merge(g, nan, 0)
+    np.testing.assert_array_equal(np.asarray(mn["w"]), np.asarray(g["w"]))
+    with pytest.raises(ValueError, match="norm_bound"):
+        NormBoundedFedAsync(norm_bound=0.0)
+
+
+def test_robust_strategies_registered_and_spec_validated():
+    assert "fedavg_trimmed" in STRATEGIES
+    assert "fedasync_normbound" in STRATEGIES
+    t = make_strategy("fedavg_trimmed", trim_frac=0.25)
+    assert isinstance(t, TrimmedMeanFedAvg) and not t.is_async
+    n = make_strategy("fedasync_normbound", alpha=0.5, norm_bound=2.0)
+    assert isinstance(n, NormBoundedFedAsync) and n.is_async
+    StrategySpec("fedavg_trimmed", trim_frac=0.1)         # registry-legal
+    with pytest.raises(ValueError):
+        StrategySpec("fedavg_trimmed", trim_frac=0.7)     # validated at spec
+    with pytest.raises(ValueError):
+        StrategySpec("fedasync_normbound", bogus=1.0)
+
+
+# ---------------------------------------------------------------------------
+# backend parity under corruption (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_run_parity_legacy_vs_cohort(micro_cfg):
+    """Same seed + same configs replay the identical corruption and
+    rejection/quarantine event sequence on both backends, and the
+    defended models agree numerically."""
+    cfg = replace(micro_cfg, faults=CORRUPT, screening=SCREEN)
+    kw = dict(max_updates=12, eval_every=4, alpha=0.4)
+    p_leg, log_leg = run_experiment("fedasync", cfg, engine="legacy", **kw)
+    p_eng, log_eng = run_experiment("fedasync", cfg, engine="cohort", **kw)
+    assert list(log_leg.fault_events) == list(log_eng.fault_events)
+    assert log_leg.update_counts == log_eng.update_counts
+    assert log_leg.staleness == log_eng.staleness
+    _assert_params_close(p_leg, p_eng)
+    kinds = [e[0] for e in log_eng.fault_events]
+    assert {"corrupt_nan", "corrupt_scale"} & set(kinds)  # faults fired
+    assert ("screen_nonfinite" in kinds) or ("screen_norm" in kinds)
+    es = log_eng.engine_stats
+    audit_engine_stats(es)
+    assert es["screen_rejections"] > 0
+    assert es["screen_rejections"] == (es["screen_nonfinite"]
+                                       + es["screen_norm_rejects"])
+    assert es["fault_corruptions"] >= es["screen_rejections"]
+    assert es["screen_verdict_syncs"] > 0
+
+
+def test_pipelined_screening_keeps_sync_free_invariant(micro_cfg):
+    """Verdict fetches route through the sanctioned funnel: a PIPELINED
+    corrupted run still reports ``host_syncs_between_evals == 0`` while
+    the verdict-fetch counter accounts for every device->host read the
+    screening oracle needed."""
+    from repro.engine import EngineConfig
+    cfg = replace(micro_cfg, faults=CORRUPT, screening=SCREEN)
+    _, log = run_experiment("fedasync", cfg, max_updates=12, eval_every=4,
+                            alpha=0.4, engine="cohort",
+                            engine_cfg=EngineConfig(pipeline_depth=2))
+    es = log.engine_stats
+    audit_engine_stats(es)
+    assert es["pipeline_depth"] == 2
+    assert es["screen_rejections"] > 0
+    assert es["screen_verdict_syncs"] > 0
+    assert es["host_syncs_between_evals"] == 0
+
+
+def test_corrupt_fedavg_parity_legacy_vs_cohort(micro_cfg):
+    cfg = replace(micro_cfg, faults=CORRUPT, screening=SCREEN)
+    p_leg, log_leg = run_experiment("fedavg", cfg, rounds=2, engine="legacy")
+    p_eng, log_eng = run_experiment("fedavg", cfg, rounds=2, engine="cohort")
+    assert list(log_leg.fault_events) == list(log_eng.fault_events)
+    assert log_leg.update_counts == log_eng.update_counts
+    _assert_params_close(p_leg, p_eng)
+    assert log_eng.engine_stats["screen_rejections"] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: screening at infinite thresholds is a bitwise no-op
+# ---------------------------------------------------------------------------
+
+def test_screening_off_vs_infinite_thresholds_bitwise(micro_cfg):
+    """Fault-free run: screening=None vs a screening pass that can never
+    reject (no norm bound, quarantine off) — the RunLog (minus the
+    sanctioned verdict-fetch counter) and params are IDENTICAL, because
+    the compiled step always computes the verdicts and acceptance routes
+    through the same merge coefficients."""
+    kw = dict(max_updates=8, eval_every=4, alpha=0.4)
+    p_off, log_off = run_experiment("fedasync", micro_cfg, **kw)
+    cfg_on = replace(micro_cfg,
+                     screening=ScreeningConfig(max_update_norm=None))
+    p_on, log_on = run_experiment("fedasync", cfg_on, **kw)
+    assert _logdict(log_off, drop_syncs=True) == \
+        _logdict(log_on, drop_syncs=True)
+    assert log_off.engine_stats["screen_verdict_syncs"] == 0
+    assert log_on.engine_stats["screen_verdict_syncs"] > 0
+    assert log_on.engine_stats["screen_rejections"] == 0
+    for a, b in zip(jax.tree_util.tree_leaves(p_off),
+                    jax.tree_util.tree_leaves(p_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_screening_off_noop_on_forced_eight_device_mesh():
+    """The same bitwise no-op contract on a forced 8-device host mesh
+    (own subprocess so the main session keeps its single-device cache)."""
+    code = """
+from dataclasses import replace
+import jax
+import numpy as np
+assert len(jax.devices()) == 8, len(jax.devices())
+from repro.core.screening import ScreeningConfig
+from repro.core.testbed import TestbedConfig, run_experiment
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import EngineConfig
+from repro.launch.mesh import make_host_mesh
+
+cfg = TestbedConfig(num_clients=4, data=SERDataConfig(n_total=160),
+                    batch_size=32, sigma=0.5, seed=3)
+kw = dict(max_updates=6, eval_every=6, alpha=0.4,
+          engine_cfg=EngineConfig(client_axis="vmap", max_cohort=4))
+p_off, log_off = run_experiment("fedasync", cfg, mesh=make_host_mesh(data=4),
+                                **kw)
+p_on, log_on = run_experiment(
+    "fedasync", replace(cfg, screening=ScreeningConfig(max_update_norm=None)),
+    mesh=make_host_mesh(data=4), **kw)
+assert log_off.times == log_on.times
+assert log_off.global_acc == log_on.global_acc
+assert log_off.update_counts == log_on.update_counts
+assert list(log_off.fault_events) == list(log_on.fault_events)
+assert log_on.engine_stats["screen_rejections"] == 0
+for a, b in zip(jax.tree_util.tree_leaves(p_off),
+                jax.tree_util.tree_leaves(p_on)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("mesh-screen-noop-ok")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "mesh-screen-noop-ok" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# one-program invariant: screening/corruption never recompile the step
+# ---------------------------------------------------------------------------
+
+def test_in_step_rejection_costs_zero_new_builds(micro_cfg):
+    """Warm the clean program, then run the corruption drill: rejections
+    fire inside the SAME compiled step (corrupt scales are a runtime
+    (K,) argument, thresholds compare on the host) — ``step_builds``
+    delta 0, the tentpole acceptance criterion."""
+    sess = Session()
+    base = ExperimentSpec(
+        testbed=micro_cfg, strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=10, eval_every=5))
+    sess.run(base)                                  # clean warm-up build
+    n0 = step_builds()
+    _, log = sess.run(replace(
+        base, testbed=replace(micro_cfg, faults=CORRUPT, screening=SCREEN)))
+    assert step_builds() == n0
+    assert log.engine_stats["screen_rejections"] > 0
+
+
+def test_sweep_strategy_sigma_corruption_shares_one_program(micro_cfg):
+    """The (strategy x sigma x corruption) grid runs warm under
+    ``compile_guard`` with a budget of ONE build: neither axis reaches
+    the compiled program."""
+    sess = Session()
+    spec = ExperimentSpec(
+        testbed=replace(micro_cfg, screening=SCREEN),
+        strategy=StrategySpec("fedasync", alpha=0.4),
+        run=RunBudget(max_updates=4, eval_every=4))
+    res = sess.sweep(spec, axes={
+        "strategy": [StrategySpec("fedasync", alpha=0.4),
+                     StrategySpec("fedasync_normbound", alpha=0.4,
+                                  norm_bound=5.0)],
+        "testbed.sigma": [0.5, 1.0],
+        "testbed.faults": [None, CORRUPT],
+    })
+    assert len(res.logs) == 8
+    assert sess.events["sweep_step_builds"] <= 1    # guard budget was 1
+    for point, log in zip(res.points, res.logs):
+        rej = log.engine_stats["screen_rejections"]
+        if point["testbed.faults"] is None:
+            assert rej == 0
+        else:
+            assert rej > 0
+
+
+# ---------------------------------------------------------------------------
+# quarantine across a checkpoint/resume boundary
+# ---------------------------------------------------------------------------
+
+QUAR_SPEC = ExperimentSpec(
+    testbed=TestbedConfig(
+        num_clients=4, data=SERDataConfig(n_total=160), batch_size=32,
+        sigma=0.5, faults=FaultModel(seed=7, corrupt_prob=0.5),
+        screening=ScreeningConfig(max_update_norm=1e3, quarantine_after=1,
+                                  readmit_delay_s=60.0)),
+    strategy=StrategySpec("fedasync", alpha=0.6),
+    run=RunBudget(max_updates=18, eval_every=6))
+
+
+def test_quarantine_survives_checkpoint_resume(tmp_path):
+    plain = Session().run(QUAR_SPEC)
+    kinds = [e[0] for e in plain[1].fault_events]
+    assert "quarantine" in kinds                    # the drill quarantines
+    ckdir = str(tmp_path)
+    with pytest.raises(SimulatedCrash):
+        Session().run(QUAR_SPEC, checkpoint_every=5, checkpoint_dir=ckdir,
+                      crash_after_saves=2)
+    assert latest_step(ckdir) is not None
+    resumed = Session().run(QUAR_SPEC, checkpoint_every=5,
+                            checkpoint_dir=ckdir, resume_from=ckdir)
+    assert _logdict(plain[1]) == _logdict(resumed[1])
+    for a, b in zip(jax.tree_util.tree_leaves(plain[0]),
+                    jax.tree_util.tree_leaves(resumed[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_refuses_screening_mismatch(tmp_path):
+    """The resuming spec must carry the same screening-or-not as the
+    checkpointed run — silently dropping quarantine state would fork
+    the replay."""
+    ckdir = str(tmp_path)
+    with pytest.raises(SimulatedCrash):
+        Session().run(QUAR_SPEC, checkpoint_every=5, checkpoint_dir=ckdir,
+                      crash_after_saves=1)
+    stripped = replace(QUAR_SPEC,
+                       testbed=replace(QUAR_SPEC.testbed, screening=None))
+    with pytest.raises(ValueError, match="[Ss]creening"):
+        Session().run(stripped, resume_from=ckdir)

@@ -20,6 +20,7 @@ _SPECIAL = {
     ("TestbedConfig", "partition"): "dirichlet",
     ("TestbedConfig", "workload"): "ser_linear",
     ("TestbedConfig", "faults"): "__faults__",    # Optional[FaultModel]
+    ("TestbedConfig", "screening"): "__screening__",  # Optional[ScreeningConfig]
     ("EngineConfig", "client_axis"): "vmap",
     ("EngineConfig", "mesh"): "__mesh__",          # built lazily (devices)
     ("DPConfig", "granularity"): "per_microbatch",
@@ -44,6 +45,9 @@ def _bump(cls_name, field, value):
     if special == "__faults__":
         from repro.core.faults import FaultModel
         return _nondefault_instance(FaultModel)
+    if special == "__screening__":
+        from repro.core.screening import ScreeningConfig
+        return _nondefault_instance(ScreeningConfig)
     if special is not None:
         assert special != value, (cls_name, field.name)
         return special
