@@ -363,8 +363,9 @@ def bench_engine_throughput(num_clients=8, updates=48, seed=0, window=45.0,
     sweep_section = bench_sweep_amortization(tiny=tiny)
     dp_rows = bench_dp_path(tiny=tiny)
     screening_section = bench_screening_overhead(tiny=tiny)
+    scale_section = bench_scale(tiny=tiny)
     _write_bench_engine(rows, pipeline_rows, sweep_section, dp_rows,
-                        screening_section)
+                        screening_section, scale_section)
     return _write("engine_throughput", rows)
 
 
@@ -722,8 +723,114 @@ def bench_screening_overhead(num_clients=8, updates=48, seed=0, window=45.0,
             "overhead_pct": round(100.0 * (t_on / t_off - 1.0), 1)}
 
 
+def bench_scale(n_values=(1_000, 10_000, 100_000), hot_slots=128,
+                lookahead=16, updates=32, seed=0, tiny=False):
+    """Million-client-track scale trajectory: the SAME FedAsync workload
+    over growing shared-row synthetic populations, executed through the
+    tiered client-state store (``StoreConfig.hot_slots`` bounds the
+    device arena; :mod:`repro.engine.statestore`).  Every client
+    references ONE dataset dict, so the identity-deduped ``DataArena``
+    uploads one device row regardless of N — population size stresses
+    exactly what the store manages (startup dispatch, the event heap,
+    residency churn, prefetch), not host RAM.
+
+    Each row records updates/s and wall seconds (startup included — the
+    O(N) part IS the scale story), the measured device-arena footprint
+    (live hot params + opt + data leaf bytes, BOUNDED by ``hot_slots``
+    while N grows 100x), the all-resident arithmetic equivalent
+    (per-slot state bytes x (N + pad) + data), and the store's ledger
+    counters.  ``summarize.py --check-engine`` requires the section and
+    validates growing N, bounded-vs-resident bytes and the fetch ledger
+    per row — the 100k row is the acceptance run: it must complete with
+    the same hot-arena bytes as the 1k row.  ``tiny`` shrinks the
+    populations to (64, 256) for the CI smoke; the compiled programs
+    depend on ``hot_slots``, never N, so one warm pass covers every row.
+    """
+    import time as _time
+
+    import jax
+    import jax.random as jr
+
+    from repro.api import ExperimentSpec
+    from repro.api.workloads import get_workload
+    from repro.core.aggregation import FedAsync
+    from repro.core.runlog import STORE_STATS_KEYS
+    from repro.core.testbed import build_clients, build_partitions
+    from repro.engine import (CohortRunner, EngineConfig, StoreConfig,
+                              run_async_engine)
+    from repro.models.ser_cnn import SERConfig
+
+    if tiny:
+        n_values, hot_slots, lookahead, updates = (64, 256), 24, 8, 12
+    dims = dict(time_frames=12, n_mels=12)
+    base = TestbedConfig(
+        use_dp=True, sigma=1.0, batch_size=16, num_clients=4,
+        data=SERDataConfig(n_total=160, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims),
+        seed=seed)
+    splits, pooled = build_partitions(base)
+    tmpl = splits[0]                 # every scale client shares this row
+    wl = get_workload(base.workload)
+    params0 = wl.init(jr.PRNGKey(seed), base.model)
+    acc_fn = wl.shared_accuracy(base.model)
+
+    mesh, max_cohort = None, 8
+    if len(jax.devices()) > 1:
+        from repro.engine import cohort_mesh
+        mesh = cohort_mesh(max_cohort=max_cohort)
+    ec = EngineConfig(staleness_window=60.0, max_cohort=max_cohort,
+                      pipeline_depth=2, mesh=mesh,
+                      store=StoreConfig(hot_slots=hot_slots,
+                                        lookahead=lookahead))
+
+    def tree_bytes(t):
+        return int(sum(l.nbytes for l in jax.tree_util.tree_leaves(t)))
+
+    def go(n):
+        clients = build_clients(base, [tmpl] * n)
+        runner = CohortRunner(clients, ec)
+        _, log = run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.4),
+            max_updates=updates, seed=seed, eval_every=10 ** 9,
+            runner=runner)
+        return runner, log
+
+    go(max(hot_slots + 8, 2 * max_cohort))   # warm the compiled buckets
+
+    rows = []
+    for n in n_values:
+        t0 = _time.perf_counter()
+        runner, log = go(n)
+        wall = _time.perf_counter() - t0
+        state_bytes = (tree_bytes(runner._arena_params)
+                       + tree_bytes(runner._arena_opt))
+        data_bytes = tree_bytes(runner._arena_data)
+        stats = log.engine_stats
+        row = {
+            "n_clients": n,
+            "hot_slots": hot_slots,
+            "lookahead": lookahead,
+            "population": "shared-row",
+            "updates": updates,
+            "wall_s": round(wall, 2),
+            "updates_per_s": round(updates / wall, 2),
+            "peak_device_arena_bytes": state_bytes + data_bytes,
+            "resident_equiv_bytes": int(
+                state_bytes / runner.arena_slots * (n + 1)) + data_bytes,
+            "spec": ExperimentSpec.from_legacy(
+                "fedasync", replace(base, num_clients=n),
+                max_updates=updates, alpha=0.4, eval_every=10 ** 9,
+                engine="cohort", engine_cfg=ec).to_dict(),
+        }
+        row.update({k: int(stats[k]) for k in STORE_STATS_KEYS})
+        rows.append(row)
+        del runner
+    return {"rows": rows}
+
+
 def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
-                        dp_rows=None, screening_section=None):
+                        dp_rows=None, screening_section=None,
+                        scale_section=None):
     """The machine-readable perf trajectory: BENCH_engine.json at the repo
     root (schema checked by ``benchmarks/summarize.py --check-engine``).
     ``pipeline_rows`` (multi-device runs) land under the ``pipeline``
@@ -731,8 +838,10 @@ def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
     ``sweep_section`` (bench_sweep_amortization) under ``sweep`` — the
     cold-per-run vs warm-Session comparison — ``dp_rows`` (bench_dp_path)
     under ``dp_path`` — the jnp-vs-fused-kernel DP hot-path comparison —
-    and ``screening_section`` (bench_screening_overhead) under
-    ``screening`` — the screening-on vs screening-off overhead pair."""
+    ``screening_section`` (bench_screening_overhead) under ``screening``
+    — the screening-on vs screening-off overhead pair — and
+    ``scale_section`` (bench_scale) under ``scale`` — the tiered-store
+    client-count trajectory with its bounded device-arena footprint."""
     import jax
 
     out = {
@@ -748,6 +857,8 @@ def _write_bench_engine(rows, pipeline_rows=None, sweep_section=None,
         out["dp_path"] = {"rows": dp_rows}
     if screening_section:
         out["screening"] = screening_section
+    if scale_section:
+        out["scale"] = scale_section
     fn = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
     with open(fn, "w") as f:
         json.dump(out, f, indent=1, default=float)

@@ -276,6 +276,90 @@ def screen_smoke() -> None:
           f";mesh={multi}")
 
 
+def scale_smoke() -> None:
+    """Tiered client-state store drill (STORE.md): the SAME tiny async
+    workload run all-resident and through a hot-slot-bounded
+    TieredStateStore with lookahead prefetch — the two runs must produce
+    BIT-IDENTICAL params and trajectories, the tiered run must actually
+    churn (prefetch hits AND evictions both nonzero), its fetch ledger
+    must balance, and the pipelined scheduler must stay sync-free
+    between eval boundaries.  Runs sharded when more than one device
+    exists (CI's engine-mesh job forces 8 host devices)."""
+    import jax
+    import jax.random as jr
+
+    from repro.api.workloads import get_workload
+    from repro.core.aggregation import FedAsync
+    from repro.core.runlog import STORE_STATS_KEYS
+    from repro.core.testbed import TestbedConfig, build_clients, \
+        build_partitions
+    from repro.data.synthetic_ser import SERDataConfig
+    from repro.engine import (CohortRunner, EngineConfig, StoreConfig,
+                              cohort_mesh, run_async_engine)
+    from repro.models.ser_cnn import SERConfig
+
+    n_clients = 16
+    dims = dict(time_frames=12, n_mels=12)
+    tb = TestbedConfig(
+        use_dp=True, sigma=0.5, batch_size=16, num_clients=n_clients,
+        data=SERDataConfig(n_total=36 * n_clients, **dims),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **dims))
+    splits, pooled = build_partitions(tb)
+    wl = get_workload(tb.workload)
+    params0 = wl.init(jr.PRNGKey(0), tb.model)
+    acc_fn = wl.shared_accuracy(tb.model)
+    multi = len(jax.devices()) > 1
+    if multi:
+        mesh, max_cohort, updates = cohort_mesh(max_cohort=8), 8, 24
+        store = StoreConfig(hot_slots=8, lookahead=6)
+    else:
+        mesh, max_cohort, updates = None, 4, 40
+        store = StoreConfig(hot_slots=6, lookahead=4)
+
+    def go(store_cfg):
+        clients = build_clients(tb, splits)
+        ec = EngineConfig(staleness_window=30.0, max_cohort=max_cohort,
+                          pipeline_depth=2, mesh=mesh, store=store_cfg)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+            max_updates=updates, seed=0, eval_every=10,
+            runner=CohortRunner(clients, ec))
+
+    t0 = time.time()
+    p_res, log_res = go(StoreConfig())
+    p_tier, log_tier = go(store)
+    bad = [k for k in ("times", "global_acc", "staleness", "update_counts",
+                       "cohort_sizes")
+           if getattr(log_res, k) != getattr(log_tier, k)]
+    bad += ["params"] if any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(p_res),
+                        jax.tree_util.tree_leaves(p_tier))) else []
+    if bad:
+        raise SystemExit(
+            f"scale-smoke tiered run is NOT bit-identical; diverged: {bad}")
+    s = {k: log_tier.engine_stats[k] for k in STORE_STATS_KEYS}
+    if s["store_fetches"] != (s["store_hot_hits"] + s["store_prefetch_hits"]
+                              + s["store_stall_waits"]):
+        raise SystemExit(f"scale-smoke store ledger broken: {s}")
+    if not s["store_prefetch_hits"]:
+        raise SystemExit(f"scale-smoke lookahead prefetcher never hit: {s}")
+    if not s["store_evictions"]:
+        raise SystemExit(f"scale-smoke store never evicted "
+                         f"(hot_slots={store.hot_slots} of {n_clients}): {s}")
+    if log_tier.engine_stats["host_syncs_between_evals"]:
+        raise SystemExit(
+            "scale-smoke tiered run blocked between eval boundaries: "
+            f"{log_tier.engine_stats['host_syncs_between_evals']} syncs")
+    _line("scale.smoke", round((time.time() - t0) * 1e6),
+          f"hot={store.hot_slots}/{n_clients}"
+          f";prefetch={s['store_prefetch_hits']}"
+          f";evictions={s['store_evictions']}"
+          f";stalls={s['store_stall_waits']}"
+          f";spill_kb={s['store_spill_bytes'] // 1024}"
+          f";mesh={multi};parity=bit-identical")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -303,6 +387,12 @@ def main() -> None:
                          "RunLog must be bit-identical (CI's engine-mesh "
                          "fault-smoke step runs it on the forced-8-device "
                          "mesh)")
+    ap.add_argument("--scale-smoke", action="store_true",
+                    help="tiny resident-vs-tiered client-state-store pair: "
+                         "bit-identical params/trajectories with live "
+                         "prefetch hits, evictions and a balanced fetch "
+                         "ledger (CI's engine-mesh scale-smoke step runs "
+                         "it on the forced-8-device mesh)")
     ap.add_argument("--screen-smoke", action="store_true",
                     help="tiny corrupted run with in-step screening + "
                          "robust aggregation: rejections must fire and "
@@ -312,6 +402,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import fl_benchmarks as flb
+
+    if args.scale_smoke:
+        scale_smoke()
+        return
 
     if args.screen_smoke:
         screen_smoke()

@@ -82,6 +82,19 @@ _SCREEN_ROW_KEYS = {
     "screen_verdict_syncs", "spec",
 }
 
+# the tiered-store scale section (bench_scale): the same FedAsync
+# workload over growing shared-row populations through the hot-slot-
+# bounded TieredStateStore; the device-arena footprint must stay bounded
+# while resident_equiv grows with N, and every row's fetch ledger must
+# balance (store_fetches == hot + prefetch + stall)
+_SCALE_ROW_KEYS = {
+    "n_clients", "hot_slots", "lookahead", "population", "updates",
+    "wall_s", "updates_per_s", "peak_device_arena_bytes",
+    "resident_equiv_bytes", "store_fetches", "store_hot_hits",
+    "store_prefetch_hits", "store_stall_waits", "store_evictions",
+    "store_spill_bytes", "store_sync_reads", "spec",
+}
+
 # an ExperimentSpec provenance dict must at least nest these sub-configs
 _SPEC_KEYS = {"testbed", "strategy", "run", "engine"}
 
@@ -261,6 +274,41 @@ def load_engine_bench(path=None):
                 "screening disabled nothing may fetch verdicts")
     if "overhead_pct" not in screen:
         raise ValueError(f"{fn}: screening section missing 'overhead_pct'")
+    scale = data.get("scale")
+    if scale is None:
+        raise ValueError(
+            f"{fn}: missing the 'scale' section (tiered-store client-count "
+            "trajectory — run benchmarks.fl_benchmarks.bench_scale)")
+    crows = scale.get("rows")
+    if not isinstance(crows, list) or len(crows) < 2:
+        raise ValueError(
+            f"{fn}: scale section needs >= 2 rows (growing n_clients)")
+    for i, r in enumerate(crows):
+        missing = _SCALE_ROW_KEYS - set(r)
+        if missing:
+            raise ValueError(
+                f"{fn}: scale row {i} missing keys {sorted(missing)}")
+        _check_spec(fn, f"scale row {i}", r["spec"])
+        if r["store_fetches"] != (r["store_hot_hits"]
+                                  + r["store_prefetch_hits"]
+                                  + r["store_stall_waits"]):
+            raise ValueError(
+                f"{fn}: scale row {i} (n={r['n_clients']}) breaks the "
+                "store ledger law store_fetches == hot + prefetch + stall")
+        if (r["hot_slots"] < r["n_clients"]
+                and r["peak_device_arena_bytes"]
+                >= r["resident_equiv_bytes"]):
+            raise ValueError(
+                f"{fn}: scale row {i} (n={r['n_clients']}, "
+                f"hot={r['hot_slots']}) device arena "
+                f"{r['peak_device_arena_bytes']}B is not smaller than the "
+                f"all-resident equivalent {r['resident_equiv_bytes']}B — "
+                "the tiered store is not bounding device memory")
+    ns = [r["n_clients"] for r in crows]
+    if ns != sorted(set(ns)):
+        raise ValueError(
+            f"{fn}: scale rows must have strictly increasing n_clients "
+            f"(got {ns})")
     return data
 
 
@@ -308,6 +356,15 @@ def summarize_engine(out):
             f"screening[{data['devices']}dev] on-vs-off overhead "
             f"{sc['overhead_pct']}%"
             + (f", verdict syncs {on['screen_verdict_syncs']}" if on else ""))
+    for r in data.get("scale", {}).get("rows", []):
+        out.append(
+            f"scale[{data['devices']}dev] n={r['n_clients']} "
+            f"(hot={r['hot_slots']}, look={r['lookahead']}): "
+            f"{r['updates_per_s']} updates/s, wall {r['wall_s']}s, "
+            f"device arena {r['peak_device_arena_bytes'] // 1024}KB vs "
+            f"resident-equiv {r['resident_equiv_bytes'] // 1024}KB, "
+            f"prefetch {r['store_prefetch_hits']}/{r['store_fetches']} "
+            f"fetches, {r['store_evictions']} evictions")
 
 
 def main():
@@ -401,10 +458,12 @@ if __name__ == "__main__":
         sw = data["sweep"]
         n_dp = len(data["dp_path"]["rows"])
         sc = data["screening"]
+        sca = data["scale"]["rows"]
         print(f"BENCH_engine.json ok: {len(data['rows'])} rows, "
               f"{n_pipe} pipeline rows, sweep {sw['speedup']}x "
               f"({sw['warm_step_builds']}/{sw['cold_step_builds']} builds), "
               f"{n_dp} dp_path rows, screening overhead "
-              f"{sc['overhead_pct']}%, {data['devices']} device(s)")
+              f"{sc['overhead_pct']}%, scale to n={sca[-1]['n_clients']} "
+              f"({len(sca)} rows), {data['devices']} device(s)")
         sys.exit(0)
     main()

@@ -209,6 +209,19 @@ def audit_engine_stats(stats: dict, *, label="engine_stats"):
             f"{stats['screen_rejections']} must equal screen_nonfinite="
             f"{stats['screen_nonfinite']} + screen_norm_rejects="
             f"{stats['screen_norm_rejects']}.")
+    # store-ledger conservation (repro.engine.statestore): every slot
+    # acquisition is classified as exactly one of hot-hit / prefetch-hit
+    # / stall — an imbalance means a fetch was double-counted or a
+    # classification branch was skipped (all-resident runs report 0 == 0)
+    if stats["store_fetches"] != (
+            stats["store_hot_hits"] + stats["store_prefetch_hits"]
+            + stats["store_stall_waits"]):
+        raise AuditFailure(
+            f"{label}: store ledger imbalance — store_fetches="
+            f"{stats['store_fetches']} must equal store_hot_hits="
+            f"{stats['store_hot_hits']} + store_prefetch_hits="
+            f"{stats['store_prefetch_hits']} + store_stall_waits="
+            f"{stats['store_stall_waits']}.")
     return stats
 
 

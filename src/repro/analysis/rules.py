@@ -476,11 +476,73 @@ class HostSyncInHotRegion(Rule):
         return None
 
 
+# ---------------------------------------------------------------------------
+# REP006 — per-client loop in a store residency hot region
+# ---------------------------------------------------------------------------
+
+_STORE_REGION_RE = re.compile(
+    r"^_?(prefetch|spill|evict|acquire|materialize)\w*$")
+
+
+class PerClientLoopInStoreRegion(Rule):
+    """Residency-management hot paths must walk cohorts/batches, never
+    the whole client population.
+
+    History: the tiered-store PR exists because the engine loops used to
+    touch all N clients per round (the O(N) dispatch scan the lazy-plan
+    fix removed); the store's prefetch/spill/acquire paths run once per
+    cohort, so a Python loop over ``clients`` (or ``self.clients``)
+    inside them reintroduces exactly the O(N)-per-cohort wall the
+    100k-client scale bench guards against — invisible at the 32-client
+    paper testbed, fatal at scale.  The rule flags ``for``-loop and
+    comprehension iterables that reference a ``clients`` name/attribute
+    inside functions named like store residency regions (``prefetch*``,
+    ``spill*``, ``evict*``, ``acquire*``, ``materialize*``,
+    underscore-prefixed included).  Walk the cohort's plans or the
+    prefetch batch, or index one client (``clients[cid]``), instead.
+    """
+
+    code = "REP006"
+    title = "per-client loop inside a store residency region"
+
+    def check(self, file, ctx):
+        findings = []
+        for fn in _functions(file.tree):
+            if not _STORE_REGION_RE.match(fn.name):
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    iters = [node.iter]
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    iters = [g.iter for g in node.generators]
+                else:
+                    continue
+                if any(self._mentions_clients(it) for it in iters):
+                    findings.append(self.finding(
+                        file, node,
+                        f"loop over the client population in store region "
+                        f"`{fn.name}` — residency paths run per cohort: "
+                        "walk the cohort/prefetch batch (or index "
+                        "clients[cid]) instead"))
+        return findings
+
+    @staticmethod
+    def _mentions_clients(node) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id == "clients":
+                return True
+            if isinstance(n, ast.Attribute) and n.attr == "clients":
+                return True
+        return False
+
+
 RULES = {
     r.code: r for r in (
         CacheKeyCompleteness(), SpecCodecCompleteness(), StaticDivisor(),
-        DonatedReuse(), HostSyncInHotRegion())
+        DonatedReuse(), HostSyncInHotRegion(), PerClientLoopInStoreRegion())
 }
 
 __all__ = ["RULES", "Rule", "CacheKeyCompleteness", "SpecCodecCompleteness",
-           "StaticDivisor", "DonatedReuse", "HostSyncInHotRegion"]
+           "StaticDivisor", "DonatedReuse", "HostSyncInHotRegion",
+           "PerClientLoopInStoreRegion"]

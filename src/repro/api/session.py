@@ -115,15 +115,21 @@ class SweepResult:
 class Session:
     """Owns testbed + engine state across runs (see module docstring).
 
-    One live testbed and one live cohort runner at a time (device arenas
-    are big — a sweep should not accumulate one per scenario); dataset
-    partitions are kept per distinct data-config so alternating testbeds
-    still skip regeneration.  The compiled-step cache itself is process-
-    global (:mod:`repro.engine.cohort_step`) — the session adds the layers
-    above it."""
+    One live testbed and one live cohort runner at a time (CLIENT-state
+    arenas are big — a sweep should not accumulate one per scenario);
+    dataset partitions are kept per distinct data-config so alternating
+    testbeds still skip regeneration, and the uploaded device dataset
+    arena (:class:`repro.engine.DataArena`) is kept per
+    ``(partition_key, mesh)`` — it is immutable and keyed separately from
+    client state, so a sweep whose axes only touch client-state config
+    (sigma, strategy, store) hands the SAME device buffers to every
+    rebuilt runner and skips the re-upload entirely.  The compiled-step
+    cache itself is process-global (:mod:`repro.engine.cohort_step`) —
+    the session adds the layers above it."""
 
     def __init__(self):
         self._partitions = {}          # partition_key -> (splits, pooled)
+        self._data_arenas = {}         # (partition_key, mesh) -> DataArena
         self._testbed_cfg: Optional[TestbedConfig] = None
         self._clients = None
         self._params0 = None
@@ -170,7 +176,16 @@ class Session:
             self._runner.reset_for_run()
             self.events["runner_reuses"] += 1
         else:
-            self._runner = CohortRunner(self._clients, engine_cfg)
+            arena_key = (partition_key(tb), engine_cfg.mesh)
+            arena = self._data_arenas.get(arena_key)
+            self._runner = CohortRunner(self._clients, engine_cfg,
+                                        data_arena=arena)
+            if getattr(self._runner, "use_arena", False):
+                if arena is None:
+                    self._data_arenas[arena_key] = self._runner.data_arena
+                    self.events["data_arena_builds"] += 1
+                else:
+                    self.events["data_arena_reuses"] += 1
             self._runner_key = key
             self.events["runner_builds"] += 1
         return self._runner

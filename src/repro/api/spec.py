@@ -36,7 +36,7 @@ from repro.core.fl_step import FLStepConfig
 from repro.core.screening import ScreeningConfig
 from repro.core.testbed import TestbedConfig
 from repro.data.synthetic_ser import SERDataConfig
-from repro.engine import EngineConfig
+from repro.engine import EngineConfig, StoreConfig
 from repro.models.ser_cnn import SERConfig
 
 
@@ -190,7 +190,7 @@ def replace_path(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
 
 _SPEC_TYPES = {cls.__name__: cls for cls in (
     ExperimentSpec, StrategySpec, RunBudget, TestbedConfig, SERDataConfig,
-    SERConfig, EngineConfig, DPConfig, FLStepConfig, FaultModel,
+    SERConfig, EngineConfig, StoreConfig, DPConfig, FLStepConfig, FaultModel,
     ScreeningConfig)}
 
 

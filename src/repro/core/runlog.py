@@ -15,6 +15,21 @@ from repro.core.fairness import fairness_report
 from repro.core.faults import FAULT_STATS_KEYS
 from repro.core.screening import SCREEN_STATS_KEYS
 
+# Tiered client-state store counters (see STORE.md).  Defined HERE, not
+# in ``repro.engine.statestore``, for the same no-cycle reason this
+# module exists at all: ``repro.core`` must not import ``repro.engine``,
+# while the store (engine-side) imports the schema from here so the
+# producer and the frozen schema cannot drift apart.
+STORE_STATS_KEYS = (
+    "store_fetches",         # slot acquisitions demanded by staged cohorts
+    "store_hot_hits",        # already device-resident, not via prefetch
+    "store_prefetch_hits",   # resident because the lookahead staged it
+    "store_stall_waits",     # cohort had to block on a demand load
+    "store_evictions",       # hot slots surrendered to LRU pressure
+    "store_spill_bytes",     # device->host bytes of dirty-row spills
+    "store_sync_reads",      # _host_fetch-funnelled reads tagged _in_store
+)
+
 # THE schema for ``RunLog.engine_stats`` — the exact keys
 # ``CohortRunner.stats()`` produces.  Frozen here (not derived at a use
 # site) so every consumer of engine provenance pulls from one place:
@@ -44,7 +59,13 @@ ENGINE_STATS_KEYS = (
     # zero when TestbedConfig.screening is None, same unconditional-
     # schema rationale; ledger law enforced by the audits:
     # screen_rejections == screen_nonfinite + screen_norm_rejects)
-) + SCREEN_STATS_KEYS
+) + SCREEN_STATS_KEYS + (
+    # tiered client-state store counters (repro.engine.statestore; all
+    # zero on an all-resident run — StoreConfig.hot_slots is None — same
+    # unconditional-schema rationale; ledger law enforced by the audits:
+    # store_fetches == store_hot_hits + store_prefetch_hits
+    #                  + store_stall_waits)
+) + STORE_STATS_KEYS
 
 
 def validate_engine_stats(stats: dict, context: str = "engine_stats"):

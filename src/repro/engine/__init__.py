@@ -42,6 +42,14 @@ index plans (``RunLog.engine_stats`` reports the measured bytes).
 (``benchmarks/fl_benchmarks.py::bench_engine_throughput`` times both and
 writes ``BENCH_engine.json``).
 
+Client-state tiering (``EngineConfig.store``): ``StoreConfig.hot_slots``
+bounds the device arena to a hot set backed by a host cold store, with a
+lookahead prefetcher reading the virtual clock's event heap
+(``repro.engine.statestore``; contract in STORE.md).  Datasets live in
+their own identity-deduped :class:`~repro.engine.statestore.DataArena`.
+Tiered runs are bit-identical to the all-resident arena while scaling
+the same engine to 100k+-client populations on bounded device memory.
+
 Scheduling (``EngineConfig.pipeline_depth``): the default depth 1 is the
 serial driver (donation-chained — every submit blocks the host for the
 cohort's device time); depth >= 2 is the pipelined submit/drain
@@ -83,15 +91,23 @@ from repro.engine.mesh_backend import (
     cohort_spec,
 )
 from repro.engine.resilience import CheckpointPolicy, SimulatedCrash
+from repro.engine.statestore import (
+    DataArena,
+    StoreConfig,
+    TieredStateStore,
+)
 
 __all__ = [
     "CLIENT_AXES",
     "CheckpointPolicy",
     "CohortRunner",
     "CohortSharding",
+    "DataArena",
     "EngineConfig",
     "LocalRoundPlan",
     "SimulatedCrash",
+    "StoreConfig",
+    "TieredStateStore",
     "assert_cohort_partitioned",
     "cached_cohort_step",
     "cohort_mesh",

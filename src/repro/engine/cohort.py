@@ -40,6 +40,9 @@ class LocalRoundPlan:
     opt_state: object        # client optimizer state at dispatch (None on
                              # the arena path — state never leaves the arena)
     batch_idx: np.ndarray    # (S, B) int32 minibatch indices into c.data
+                             # (None until staging: dispatch defers the
+                             # permutation draws — O(1) per client — and
+                             # CohortRunner._materialize_plans fills it)
     key: object              # dispatch PRNG key (the legacy local_train sub)
     n_steps: int             # S actually executed (== legacy DP-SGD steps)
     duration: float          # virtual round duration from the tier clock

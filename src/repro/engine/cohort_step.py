@@ -222,17 +222,24 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
     default) the per-cohort inputs are a few KB of int32 indices instead
     of stacked state and batch tensors:
 
-    ``cohort_step(arena_params, arena_opt, arena_data, slots, batch_idx,
-    keys, n_steps)`` where the arenas hold ALL clients' state/data on a
-    leading slot axis A (slot per client plus a spare pad slot):
+    ``cohort_step(arena_params, arena_opt, arena_data, slots, data_slots,
+    batch_idx, keys, n_steps)`` where the arenas hold the resident
+    clients' state/data on a leading slot axis (a slot per RESIDENT
+    client plus a spare pad slot — all N clients on the all-resident
+    layout, the ``StoreConfig.hot_slots`` hot set under the tiered
+    store):
 
       arena_params: pytree, leaves (A, ...) — per-slot dispatch params
       arena_opt:    pytree, leaves (A, ...) — per-slot optimizer state
                     (DONATED: scatter-updated in place each cohort)
-      arena_data:   pytree, leaves (A, n_max, ...) — every client's
-                    dataset, uploaded once at runner construction
-      slots:        (K,) int32 — arena slot of each cohort member
+      arena_data:   pytree, leaves (A_d, n_max, ...) — every DISTINCT
+                    dataset, uploaded once at runner construction and
+                    keyed separately from client state (A_d never
+                    shrinks to the hot set; see ``statestore.DataArena``)
+      slots:        (K,) int32 — STATE arena slot of each cohort member
                     (padded mask members point at the spare slot)
+      data_slots:   (K,) int32 — DATA arena row of each member (equal to
+                    ``slots`` values on the legacy all-resident layout)
       batch_idx:    (K, S_max, B) int32 minibatch plan, gathered from
                     ``arena_data`` INSIDE the compiled program
 
@@ -530,7 +537,7 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
         # the cost of one opt-arena copy per serial-path cohort.
         @jax.jit
         def cohort_step(arena_params, arena_opt, arena_data, slots,
-                        batch_idx, keys, n_steps, noise_stddev,
+                        data_slots, batch_idx, keys, n_steps, noise_stddev,
                         corrupt_scale):
             def take(tree):
                 return jax.tree_util.tree_map(
@@ -538,11 +545,16 @@ def make_cohort_step(loss_fn: Callable, dp_cfg: DPConfig, opt,
 
             stacked_params = constrain(take(arena_params))
             stacked_opt = constrain(take(arena_opt))
-            # in-step batch gather: (A, n_max, ...)[slot, idx] -> the
+            # in-step batch gather: (A_d, n_max, ...)[dslot, idx] -> the
             # (K, S_max, B, ...) batch stack, computed on device from the
-            # resident datasets (only `batch_idx` crossed H2D)
+            # resident datasets (only the index plan crossed H2D).  The
+            # dataset arena has its OWN slot map: state slots are hot-set
+            # rows under the tiered store while data rows stay resident
+            # per distinct dataset (deduped), so the two index spaces
+            # only coincide on the legacy all-resident layout.
             batches = constrain(jax.tree_util.tree_map(
-                lambda l: l[slots[:, None, None], batch_idx], arena_data))
+                lambda l: l[data_slots[:, None, None], batch_idx],
+                arena_data))
             new_params, new_opt = run_members(
                 stacked_params, stacked_opt, keys, batches, n_steps,
                 noise_stddev)
@@ -693,16 +705,23 @@ def cached_cohort_step(loss_fn, dp_cfg, opt, use_dp=True, dp_path="jnp",
 
 def cached_arena_helpers(arena_slots: int, opt, client_shardings,
                          donate: bool = True):
-    """Compiled arena plumbing — ``(init, write, gather)`` over the
-    (A, ...) client-state arenas — shared across CohortRunners and stored
-    in the SAME cache as the compiled steps, so
+    """Compiled arena plumbing — ``(init, write, gather, write_rows,
+    init_opt)`` over the (A, ...) client-state arenas — shared across
+    CohortRunners and stored in the SAME cache as the compiled steps, so
     :func:`invalidate_step_cache` drops a mesh's helper entries alongside
     its step entries (the documented mesh-lifetime cleanup covers both).
     The arenas themselves are call arguments, never closed over: the
     cache holds compiled functions only, no device buffers.
-    ``donate=False`` keeps ``write`` out-of-place (the pipelined
+    ``donate=False`` keeps the writers out-of-place (the pipelined
     scheduler needs async dispatch; donated inputs block it — see
-    :func:`make_cohort_step`)."""
+    :func:`make_cohort_step`).
+
+    ``write_rows``/``init_opt`` serve the tiered store's hot-set churn:
+    ``write_rows(arena, rows, slots)`` scatters pre-stacked per-slot
+    rows (cold-store reloads — leaves (k, ...)); ``init_opt(arena_opt,
+    p, slots)`` re-initializes slots' optimizer rows in place from a
+    params tree (``opt.init`` is value-independent, so a re-initialized
+    slot is bitwise the row a fresh all-resident arena would hold)."""
 
     def build():
         def constrain(tree):
@@ -729,7 +748,24 @@ def cached_arena_helpers(arena_slots: int, opt, client_shardings,
             return jax.tree_util.tree_map(
                 lambda l: jnp.take(l, slots, axis=0), arena)
 
-        return init, write, gather
+        @functools.partial(
+            jax.jit, **({"donate_argnums": (0,)} if donate else {}))
+        def write_rows(arena, rows, slots):
+            return constrain(jax.tree_util.tree_map(
+                lambda a, r: a.at[slots].set(r.astype(a.dtype)),
+                arena, rows))
+
+        @functools.partial(
+            jax.jit, **({"donate_argnums": (0,)} if donate else {}))
+        def init_opt(arena_opt, p, slots):
+            fresh = opt.init(p)
+            return constrain(jax.tree_util.tree_map(
+                lambda a, l: a.at[slots].set(
+                    jnp.broadcast_to(l[None].astype(a.dtype),
+                                     (slots.shape[0],) + l.shape)),
+                arena_opt, fresh))
+
+        return init, write, gather, write_rows, init_opt
 
     sh_key = _shardings_key(client_shardings)
     if sh_key is _UNCACHEABLE:

@@ -96,6 +96,8 @@ from repro.engine.cohort_step import (
     cached_arena_helpers, cached_cohort_step, stack_trees, unstack_tree,
     validate_client_axis)
 from repro.engine.mesh_backend import CohortSharding
+from repro.engine.statestore import (
+    DataArena, StoreConfig, TieredStateStore, zero_store_stats)
 
 
 @dataclass(frozen=True)
@@ -127,6 +129,13 @@ class EngineConfig:
                                    # planning/staging overlaps device compute,
                                    # donation off so dispatch is async (see
                                    # module docstring pipeline diagram)
+    store: StoreConfig = StoreConfig()  # tiered client-state store (see
+                                   # repro.engine.statestore / STORE.md):
+                                   # hot_slots=None keeps the all-resident
+                                   # arena; a positive hot_slots bounds the
+                                   # device arena to that many client rows
+                                   # backed by a host cold store with
+                                   # event-heap lookahead prefetch
 
     def __post_init__(self):
         validate_client_axis(self.client_axis)
@@ -135,6 +144,17 @@ class EngineConfig:
             raise ValueError(
                 f"pipeline_depth must be an integer >= 1: "
                 f"{self.pipeline_depth!r}")
+        if self.store.hot_slots is not None:
+            if not self.device_arena:
+                raise ValueError(
+                    "StoreConfig.hot_slots requires device_arena=True — "
+                    "the host data path has no device arena to bound")
+            if self.store.hot_slots < self.max_cohort:
+                raise ValueError(
+                    f"StoreConfig.hot_slots={self.store.hot_slots} must be "
+                    f">= max_cohort={self.max_cohort}: a staged cohort pins "
+                    "one hot slot per member, so a smaller hot set "
+                    "deadlocks slot acquisition")
 
 
 def _resolve_mesh_cfg(cfg: EngineConfig, mesh) -> EngineConfig:
@@ -172,6 +192,29 @@ def _host_fetch_array(runner, value):
     return out
 
 
+@functools.lru_cache(maxsize=None)
+def _key_chain_fn(n: int):
+    def chain(key):
+        def body(k, _):
+            ks = jax.random.split(k)
+            return ks[0], ks[1]
+        return jax.lax.scan(body, key, None, length=n)
+    return jax.jit(chain)
+
+
+def split_key_chain(key, n: int):
+    """``n`` sequential ``jax.random.split`` draws as ONE compiled scan.
+
+    Bitwise identical to the Python loop ``key, sub = jax.random.split
+    (key)`` repeated ``n`` times (the scan body IS that loop body), but
+    O(1) dispatches instead of O(N) — the startup schedule at N=100k was
+    dominated by per-client split dispatch overhead.  Returns ``(key,
+    subs)`` with ``subs`` a host-side (n, 2) uint32 array so handing
+    ``subs[i]`` to each plan costs no per-row device slicing."""
+    key, subs = _key_chain_fn(n)(key)
+    return key, np.asarray(subs)
+
+
 @dataclass
 class StagedCohort:
     """One cohort's device-ready inputs, assembled (and uploaded) ahead
@@ -186,6 +229,9 @@ class StagedCohort:
     degenerate: bool = False       # s_max == 0: no client has a full batch
     arena: bool = True
     slots: Optional[object] = None       # (K_pad,) int32 on device
+    data_slots: Optional[object] = None  # (K_pad,) int32 dataset-arena rows
+                                         # (the very `slots` object on the
+                                         # all-resident identity layout)
     batch_idx: Optional[object] = None   # (K_pad, S_max, B) int32 on device
     keys: Optional[object] = None        # (K_pad, 2) uint32 on device
     n_steps: Optional[object] = None     # (K_pad,) int32 on device
@@ -220,7 +266,7 @@ class CohortRunner:
     """
 
     def __init__(self, clients, cfg: EngineConfig,
-                 client_shardings=None):
+                 client_shardings=None, data_arena=None):
         c0 = clients[0]
         for c in clients:
             if (c.dp_cfg != c0.dp_cfg or c.use_dp != c0.use_dp
@@ -263,6 +309,18 @@ class CohortRunner:
         # stack, not with the arenas — fall back to the host data path
         self.use_arena = bool(cfg.device_arena) and (
             client_shardings is None or callable(client_shardings))
+        # tiered client-state store (repro.engine.statestore): bound the
+        # device arena to cfg.store.hot_slots rows backed by a host cold
+        # store.  Requires the arena path — EngineConfig.__post_init__
+        # rejects hot_slots without device_arena, and a raw shardings
+        # pytree silently falling back to the host path must fail loudly
+        # rather than silently going all-resident
+        self.tiered = self.use_arena and cfg.store.hot_slots is not None
+        if cfg.store.hot_slots is not None and not self.use_arena:
+            raise ValueError(
+                "StoreConfig.hot_slots requires the device-arena data "
+                "path, but these client_shardings force the host path "
+                "(pass a callable shape-aware rule like CohortSharding)")
         # pipelined mode (pipeline_depth >= 2) submits cohorts without
         # waiting — donation must be OFF throughout the hot loop because
         # a donated-input dispatch blocks the host until the computation
@@ -276,6 +334,7 @@ class CohortRunner:
         # initial globals once per run (donation would otherwise delete
         # the caller's buffers at the first merge).
         self.donates_globals = (self.use_arena and not self.pipelined
+                                and not self.tiered
                                 and not any(
                                     c.personal_keys for c in clients))
         add_noise = bool(c0.use_dp and c0.dp_cfg.noise_multiplier > 0)
@@ -292,7 +351,8 @@ class CohortRunner:
             dp_path=self.dp_path, client_axis=cfg.client_axis,
             client_shardings=client_shardings, fl_cfg=cfg.fl_cfg,
             arena=self.use_arena, donate_globals=self.donates_globals,
-            donate=not self.pipelined, add_noise=add_noise)
+            donate=not self.pipelined and not self.tiered,
+            add_noise=add_noise)
         # the compiled step's runtime noise scale: sigma * C / B computed
         # on the HOST (float64) then rounded once to float32 — the same
         # constant the statically-folded legacy path multiplies by, so
@@ -339,6 +399,9 @@ class CohortRunner:
         self._in_screen = False
         self.screen_verdict_syncs = 0
         self._last_screen = None
+        # tiered-store spills route device->host reads through the
+        # _host_fetch funnel tagged _in_store (bucketed store_sync_reads)
+        self._in_store = False
         # the serial driver consumes every submit's results before
         # planning the next cohort (and its donating merge/arena-write
         # helpers block dispatch anyway — see cohort_step): every
@@ -350,8 +413,12 @@ class CohortRunner:
             self.use_arena or client_shardings is None)
         # epsilon-vs-round table per client (lazy; see dispatch)
         self._eps_sched = {}
+        self.store = None
         if self.use_arena:
-            self._build_data_arena()
+            self._adopt_data_arena(data_arena)
+            if self.tiered:
+                self.store = TieredStateStore(
+                    cfg.store, len(clients), self)
 
     # -- cross-run reuse ---------------------------------------------------
     def reset_for_run(self):
@@ -379,10 +446,18 @@ class CohortRunner:
         self._in_screen = False
         self.screen_verdict_syncs = 0
         self._last_screen = None
+        self._in_store = False
+        if self.store is not None:
+            # residency/LRU/cold state is per-run (the arenas re-init);
+            # the dataset arena and compiled helpers stay warm
+            self.store = TieredStateStore(
+                self.cfg.store, len(self.clients), self)
 
     # -- host-sync accounting ---------------------------------------------
     def note_host_sync(self):
-        if self._in_screen:
+        if self._in_store:
+            self.store.sync_reads += 1
+        elif self._in_screen:
             self.screen_verdict_syncs += 1
         elif self._in_eval:
             self.host_syncs_at_eval += 1
@@ -395,30 +470,42 @@ class CohortRunner:
         self._in_eval = inside
 
     # -- device-resident arenas -------------------------------------------
-    def _build_data_arena(self):
-        """Upload every client's dataset once: pytree leaves
-        (A, n_max, ...) with slot = cid, short datasets zero-padded (the
-        pad rows are never indexed by a real batch plan), plus spare
-        slots so A is a multiple of the data-axis product (the arena
-        itself then shards under the shape-aware rule)."""
+    def _adopt_data_arena(self, data_arena):
+        """Size the CLIENT-STATE arena and adopt (or build) the dataset
+        arena — two separately-keyed residencies since the tiered store:
+
+        * state arena — ``hot_slots`` rows under the tiered store (all N
+          on the resident layout) plus the pad slot, rounded up to the
+          data-axis product so it shards; rows churn with residency.
+        * dataset arena — one row per DISTINCT dataset, uploaded once
+          (:class:`repro.engine.statestore.DataArena`) and addressed by
+          its own cid->row map; NEVER bounded by ``hot_slots`` and
+          reusable across runners whose partition/mesh match (the
+          Session passes a cached one in so sigma-only sweeps skip the
+          re-upload).
+
+        On the legacy all-resident layout both index spaces coincide
+        (slot == cid == data row), recorded as
+        ``_data_slots_identical`` so staging uploads ONE slot vector."""
         clients = self.clients
         n = len(clients)
-        self.pad_slot = n                       # gathered by padded members
-        slots = n + 1
-        if self._n_data > 1:
-            slots = -(-slots // self._n_data) * self._n_data
-        self.arena_slots = slots
-        n_max = max(c.n_train for c in clients)
         cs = self.client_shardings
         put = ((lambda a: jax.device_put(a, cs(a))) if callable(cs)
                else jnp.asarray)
-        arena = {}
-        for k, v0 in clients[0].data.items():
-            buf = np.zeros((slots, n_max) + v0.shape[1:], v0.dtype)
-            for c in clients:
-                buf[c.cid, : c.data[k].shape[0]] = c.data[k]
-            arena[k] = put(buf)
-        self._arena_data = arena
+        if data_arena is None:
+            data_arena = DataArena.build(clients, self._n_data, put)
+        self.data_arena = data_arena
+        self._arena_data = data_arena.leaves
+        self._data_slot_of = data_arena.slot_of_cid
+        hot = self.cfg.store.hot_slots if self.tiered else n
+        self.pad_slot = hot                     # gathered by padded members
+        slots = hot + 1
+        if self._n_data > 1:
+            slots = -(-slots // self._n_data) * self._n_data
+        self.arena_slots = slots
+        self._data_slots_identical = (
+            not self.tiered and data_arena.pad_slot == self.pad_slot
+            and np.array_equal(self._data_slot_of, np.arange(n)))
 
     def _ensure_state_arenas(self, params):
         """Lazy-init the params/opt arenas from the first dispatched
@@ -429,9 +516,10 @@ class CohortRunner:
         ``invalidate_step_cache`` together with the step entries)."""
         if self._arena_params is not None:
             return
-        init, self._write, self._gather = cached_arena_helpers(
+        (init, self._write, self._gather, self._write_rows,
+         self._init_opt) = cached_arena_helpers(
             self.arena_slots, self.clients[0].opt, self.client_shardings,
-            donate=not self.pipelined)
+            donate=not self.pipelined and not self.tiered)
         self._arena_params, self._arena_opt = init(params)
 
     def _queue_write(self, slot: int, params_tree):
@@ -441,6 +529,72 @@ class CohortRunner:
         into ONE compiled broadcast-write."""
         self._ensure_state_arenas(params_tree)
         self._writeq.append((slot, params_tree))
+
+    def _cancel_writes(self, slot: int):
+        """Drop queued params writes against ``slot`` — the tiered store
+        calls this when it evicts the slot's occupant (the write belonged
+        to the evicted cid; its replacement queues its own)."""
+        self._writeq = [(s, t) for s, t in self._writeq if s != slot]
+
+    # -- tiered-store device plumbing (see repro.engine.statestore) --------
+    def spill_opt_slot(self, slot: int):
+        """Fetch one hot opt row to the host for the cold store.  The
+        read routes through the ``_host_fetch_array`` funnel tagged
+        ``_in_store`` (counted ``store_sync_reads``), keeping the
+        pipelined path's ``host_syncs_between_evals == 0`` proof honest."""
+        row = self._gather(self._arena_opt, jnp.asarray([slot], jnp.int32))
+        self._in_store = True
+        try:
+            host = _host_fetch_array(self, row)
+        finally:
+            self._in_store = False
+        return jax.tree_util.tree_map(lambda l: l[0], host)
+
+    def load_opt_rows(self, rows, slots):
+        """Re-upload cold opt rows into freshly-assigned hot slots as ONE
+        stacked scatter (async device_put under jit — the prefetcher's
+        H2D overlaps device compute like every other staging upload)."""
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: np.stack(ls), *rows)
+        self.h2d_bytes_total += sum(
+            l.nbytes for l in jax.tree_util.tree_leaves(stacked))
+        self._arena_opt = self._write_rows(
+            self._arena_opt, stacked, jnp.asarray(slots, jnp.int32))
+
+    def init_opt_rows(self, params_tree, slots):
+        """Re-initialize never-spilled slots' opt rows on device
+        (``opt.init`` is value-independent — bitwise the state the
+        all-resident arena holds for a not-yet-trained client)."""
+        self._ensure_state_arenas(params_tree)
+        self._arena_opt = self._init_opt(
+            self._arena_opt, params_tree, jnp.asarray(slots, jnp.int32))
+
+    def prefetch_upcoming(self, heap, pending):
+        """Lookahead prefetch for the async loop: peek the next
+        ``StoreConfig.lookahead`` completions of the virtual clock's
+        event heap — O(k log N), pop k then push back, never a full
+        sort — and stage their members' hot slots ahead of the cohort
+        that will pop them.  ``pending`` filters ghosts (fault
+        duplicates whose plan already delivered): prefetching a stale
+        cid would stage stale params."""
+        if self.store is None or not heap:
+            return
+        k = min(self.store.lookahead, len(heap))
+        if k <= 0:
+            return
+        head = [heapq.heappop(heap) for _ in range(k)]
+        for entry in head:
+            heapq.heappush(heap, entry)
+        self.store.prefetch_cids(
+            [cid for _, cid in head if cid in pending])
+
+    def prefetch_plans(self, plans):
+        """Lookahead prefetch for the fedavg barrier: stage the NEXT
+        chunk's members while the current chunk's step executes.  Only
+        same-round plans may be passed — a cross-round prefetch would
+        stage the previous round's globals."""
+        if self.store is not None:
+            self.store.prefetch_cids([p.cid for p in plans])
 
     def _flush_writes(self):
         q, self._writeq = self._writeq, []
@@ -487,6 +641,10 @@ class CohortRunner:
             scr.update(self.screening.counters)
         scr["screen_verdict_syncs"] = self.screen_verdict_syncs
         out.update(scr)
+        st = zero_store_stats()
+        if self.store is not None:
+            st.update(self.store.stats())
+        out.update(st)
         return out
 
     # -- dispatch ----------------------------------------------------------
@@ -503,15 +661,24 @@ class CohortRunner:
             params0 = dict(global_params)
             params0.update(c._personal)
             personal_snapshot = {k: global_params[k] for k in c.personal_keys}
-        if self.use_arena:
+        if self.store is not None:
+            # tiered path: the client may have no hot slot yet — remember
+            # WHICH globals tree it pulled; the deferred write happens at
+            # acquire/prefetch time against the slot it then holds
+            self.store.note_dispatch(c.cid, params0)
+        elif self.use_arena:
             # arena path: the dispatch-time params snapshot is a deferred
             # device-side slot write; optimizer state already lives in the
             # arena (initialized for every slot at first dispatch)
             self._queue_write(c.cid, params0)
         elif c.opt_state is None:
             c.opt_state = c.opt.init(params0)
-        idx = plan_batches(c.rng, c.n_train, c.batch_size, c.local_epochs)
-        steps = int(idx.shape[0])
+        # the batch plan materializes LAZILY at staging (satellite of the
+        # tiered-store PR: dispatch must be O(1) per client so the N-wide
+        # startup/barrier schedules never do O(N) permutation work up
+        # front); the step COUNT is a closed form of (n, B, E), and the
+        # accountant charge needs only the count
+        steps = steps_per_round(c.n_train, c.batch_size, c.local_epochs)
         if c.use_dp and steps > 0:
             c.accountant.step(c.q, c.dp_cfg.noise_multiplier, steps)
         duration = c.clock.round_duration()
@@ -521,11 +688,22 @@ class CohortRunner:
             cid=c.cid,
             params0=None if self.use_arena else params0,
             opt_state=None if self.use_arena else c.opt_state,
-            batch_idx=idx, key=key, n_steps=steps, duration=duration,
+            batch_idx=None, key=key, n_steps=steps, duration=duration,
             epsilon=self._client_epsilon(c, steps) if c.use_dp else 0.0,
             model_version=server_version)
         plan.personal_snapshot = personal_snapshot
         return plan
+
+    def _materialize_plans(self, plans):
+        """Draw the deferred minibatch permutations for the plans being
+        staged (in plan order — each client's RNG advances exactly as the
+        eager per-dispatch draws did, because a client's next dispatch
+        can only follow the staging of its current plan)."""
+        for p in plans:
+            if p.batch_idx is None:
+                c = self.clients[p.cid]
+                p.batch_idx = plan_batches(
+                    c.rng, c.n_train, c.batch_size, c.local_epochs)
 
     def _client_epsilon(self, c, steps: int) -> float:
         """Dispatch-time epsilon: a per-round table lookup on the shared
@@ -575,6 +753,7 @@ class CohortRunner:
         Pure w.r.t. the compiled step: staging cohort t+1 while cohort t
         executes is safe because every input is host-deterministic plan
         state (the pipelined scheduler's lookahead relies on it)."""
+        self._materialize_plans(plans)
         k = len(plans)
         if not self.use_arena:
             if self.s_max == 0:  # degenerate: no client has a full batch
@@ -601,15 +780,29 @@ class CohortRunner:
                 n_steps=jnp.asarray([p.n_steps for p in plans], jnp.int32),
                 corrupt=jnp.asarray(
                     [p.corrupt_scale for p in plans], jnp.float32))
+        # slot resolution precedes the flush: the tiered store's acquire
+        # queues params writes for faulted-in members, and those must ride
+        # THIS cohort's flush (the all-resident path queues nothing here,
+        # so the flush point is unchanged for it)
+        if self.store is not None:
+            member_slots = self.store.acquire_cohort([p.cid for p in plans])
+        else:
+            member_slots = [p.cid for p in plans]
         self._flush_writes()
         k_pad = (padded_cohort_size(k, self._n_data, self.cfg.pow2_cohorts)
                  if self._n_data > 1 else k)
         slots = np.full((k_pad,), self.pad_slot, np.int32)
-        slots[:k] = [p.cid for p in plans]
+        slots[:k] = member_slots
         slots_j = jnp.asarray(slots)
+        data_slots_j = slots_j
+        dslots = None
+        if not self._data_slots_identical:
+            dslots = np.full((k_pad,), self.data_arena.pad_slot, np.int32)
+            dslots[:k] = self._data_slot_of[[p.cid for p in plans]]
+            data_slots_j = jnp.asarray(dslots)
         if self.s_max == 0:  # degenerate: no client has a full batch
             return StagedCohort(plans=plans, k=k, degenerate=True,
-                                slots=slots_j)
+                                slots=slots_j, data_slots=data_slots_j)
         batch_size = self.clients[0].batch_size
         batch_idx = np.zeros((k_pad, self.s_max, batch_size), np.int32)
         for i, p in enumerate(plans):
@@ -623,9 +816,11 @@ class CohortRunner:
         scales[:k] = [p.corrupt_scale for p in plans]
         self.cohorts_run += 1
         self.h2d_bytes_total += (batch_idx.nbytes + slots.nbytes
-                                 + n_steps.nbytes + scales.nbytes)
+                                 + n_steps.nbytes + scales.nbytes
+                                 + (dslots.nbytes if dslots is not None
+                                    else 0))
         return StagedCohort(
-            plans=plans, k=k, slots=slots_j,
+            plans=plans, k=k, slots=slots_j, data_slots=data_slots_j,
             batch_idx=jnp.asarray(batch_idx), keys=keys,
             n_steps=jnp.asarray(n_steps), corrupt=jnp.asarray(scales))
 
@@ -656,8 +851,13 @@ class CohortRunner:
             return self._gather(self._arena_params, staged.slots)
         new_stacked, self._arena_opt, screen = self.cohort_step(
             self._arena_params, self._arena_opt, self._arena_data,
-            staged.slots, staged.batch_idx, staged.keys, staged.n_steps,
-            self._noise_std, staged.corrupt)
+            staged.slots, staged.data_slots, staged.batch_idx, staged.keys,
+            staged.n_steps, self._noise_std, staged.corrupt)
+        if self.store is not None:
+            # every real member's arena opt row was just scatter-updated
+            # (dropped/screened members trained too — only their upload
+            # was discarded), so eviction must spill before reuse
+            self.store.note_trained([p.cid for p in staged.plans])
         self._last_screen = screen
         return new_stacked
 
@@ -819,8 +1019,10 @@ def run_fedavg_engine(
     inflight = deque()
     for rnd in range(start_rnd, rounds + 1):
         plans = []
-        for c in clients:
-            key, sub = jax.random.split(key)
+        # one compiled scan for the round's whole PRNG chain (bitwise the
+        # old per-client split loop; O(1) dispatches instead of O(N))
+        key, subs = split_key_chain(key, len(clients))
+        for c, sub in zip(clients, subs):
             p = runner.dispatch(c, global_params, sub, rnd - 1)
             if injector is not None and rnd > 1:
                 # leave/rejoin churn: the member rejoins late, stretching
@@ -860,10 +1062,15 @@ def run_fedavg_engine(
         chunks = [plans[i:i + cfg.max_cohort]
                   for i in range(0, len(plans), cfg.max_cohort)]
         stacked_chunks, screen_handles = [], []
-        for ch in chunks:
+        for ci, ch in enumerate(chunks):
             stacked_chunks.append(
                 runner.submit_cohort(runner.stage_cohort(ch)))
             screen_handles.append(runner.take_screen_handle())
+            if ci + 1 < len(chunks):
+                # tiered store: stage the NEXT chunk's hot slots while
+                # this chunk's compiled step executes (same-round plans
+                # only — their dispatch-time globals are current)
+                runner.prefetch_plans(chunks[ci + 1])
         log.cohort_sizes.extend(len(ch) for ch in chunks)
         if screener is not None:
             # judge every DELIVERED member against the compiled step's
@@ -1038,11 +1245,22 @@ def run_async_engine(
         if checkpoint is not None:
             checkpoint.mark(sum(log.update_counts.values()))
     else:
-        for c in clients:
-            key, sub = jax.random.split(key)
+        # startup schedule: one compiled scan for the N-wide PRNG chain
+        # (bitwise the old per-client split loop), O(1)-per-client
+        # dispatches (the batch permutations materialize lazily at
+        # staging), and a single O(N) heapify instead of N pushes —
+        # pop-order-identical since every (duration, cid) is distinct
+        key, subs = split_key_chain(key, len(clients))
+        entries = []
+        for c, sub in zip(clients, subs):
             plan = runner.dispatch(c, global_params, sub, server_version)
             pending[c.cid] = plan
-            heapq.heappush(heap, (plan.duration, c.cid))
+            entries.append((plan.duration, c.cid))
+        heap.extend(entries)
+        heapq.heapify(heap)
+        # tiered store: warm the hot set for the first cohorts (restore
+        # skips this — the snapshot already reflects it)
+        runner.prefetch_upcoming(heap, pending)
 
     done = False
     # pipelined submit/drain: cohorts in flight are capped at
@@ -1188,6 +1406,9 @@ def run_async_engine(
                     # leave/rejoin churn delays the next local round
                     t_next += injector.redispatch_delay(c.cid, p.t_complete)
                 heapq.heappush(heap, (t_next, c.cid))
+            # tiered store: stage the heap head's members while the
+            # submitted cohort executes (O(lookahead * log N) peek)
+            runner.prefetch_upcoming(heap, pending)
             if runner.pipelined:
                 inflight.append(jax.tree_util.tree_leaves(new_stacked)
                                 + jax.tree_util.tree_leaves(global_params))

@@ -11,6 +11,12 @@ input the remaining iterations read:
 * the device-resident client arena (params + optimizer state, with the
   queued dispatch writes flushed first — flushing early is a bitwise
   no-op, the scatters write the same values either way);
+* on tiered runs (``StoreConfig.hot_slots``), the complete
+  :class:`~repro.engine.statestore.TieredStateStore` state: residency
+  maps, LRU ticks, dirty/prefetched sets, the host cold rows and the
+  pending dispatch-params trees (deduped by identity so clients that
+  pulled the same globals version restore sharing one tree, keeping
+  the deferred-write flush batching identical);
 * every pending :class:`~repro.engine.cohort.LocalRoundPlan` (batch
   index plan, dispatch key, duration, epsilon, pulled version) and the
   serialized event heap, ghost duplicate entries included;
@@ -200,8 +206,14 @@ def _snapshot_common(runner, clients, log, injector, global_params, key,
             "epsilon": float(p.epsilon),
             "model_version": int(p.model_version),
             "has_personal": p.personal_snapshot is not None,
+            # lazy dispatch defers the permutation draws to staging; an
+            # unmaterialized plan snapshots WITHOUT indices — the saved
+            # client RNG stream still owes those draws, so resume re-derives
+            # the identical plan at staging time
+            "materialized": p.batch_idx is not None,
         }
-        flat[f"plan_batch_idx/{cid}"] = np.asarray(p.batch_idx)
+        if p.batch_idx is not None:
+            flat[f"plan_batch_idx/{cid}"] = np.asarray(p.batch_idx)
         flat[f"plan_key/{cid}"] = np.asarray(jax.device_get(p.key))
         if p.personal_snapshot is not None:
             _add_tree(flat, f"plan_personal/{cid}", p.personal_snapshot)
@@ -217,7 +229,31 @@ def _snapshot_common(runner, clients, log, injector, global_params, key,
         "screening": (runner.screening.state_dict()
                       if runner.screening is not None else None),
         "runner": {k: int(getattr(runner, k)) for k in _RUNNER_COUNTERS},
+        "store": {"hot_slots": runner.cfg.store.hot_slots,
+                  "lookahead": int(runner.cfg.store.lookahead)},
     }
+    if runner.store is not None:
+        store = runner.store
+        ss = store.state_meta()
+        # Pending dispatch params are globals-tree REFERENCES; dedupe by
+        # identity so the restored store shares one tree per pulled version
+        # exactly like the live one (flush batching, memory).  Only pending
+        # cids' entries matter — stale map entries are never read again.
+        pp_map, tree_ids = {}, {}
+        for cid in pending:
+            tree = store.pending_params[cid]
+            idx = tree_ids.get(id(tree))
+            if idx is None:
+                idx = len(tree_ids)
+                tree_ids[id(tree)] = idx
+                _add_tree(flat, f"store_params/{idx}", tree)
+            pp_map[str(cid)] = idx
+        ss["pp_map"] = pp_map
+        ss["n_param_trees"] = len(tree_ids)
+        for cid in sorted(store.cold):
+            _add_tree(flat, f"store_cold/{cid}", store.cold[cid])
+        meta["store_state"] = ss
+        meta["store_cold"] = sorted(int(c) for c in store.cold)
     return flat, meta
 
 
@@ -233,6 +269,21 @@ def _restore_common(flat, meta, runner, clients, log, injector,
         raise ValueError(
             f"checkpoint has {meta['num_clients']} clients, the resuming "
             f"testbed has {len(clients)}")
+    cur_store = {"hot_slots": runner.cfg.store.hot_slots,
+                 "lookahead": int(runner.cfg.store.lookahead)}
+    saved_store = meta.get("store")
+    if saved_store is None:
+        # pre-store checkpoints are all-resident by construction; lookahead
+        # is inert without hot_slots, so inherit the current value
+        saved_store = {"hot_slots": None,
+                       "lookahead": cur_store["lookahead"]}
+    if saved_store != cur_store:
+        raise ValueError(
+            f"StoreConfig mismatch: the checkpoint was taken with "
+            f"{saved_store}, the resuming run has {cur_store} — hot-slot "
+            "count and lookahead fix the arena shapes and the "
+            "prefetch/eviction schedule, so resuming across them cannot "
+            "replay bit-identically; rerun with the original StoreConfig")
     if (injector is None) != (meta["injector"] is None):
         raise ValueError(
             "fault configuration mismatch: the checkpointed run and the "
@@ -251,6 +302,19 @@ def _restore_common(flat, meta, runner, clients, log, injector,
         runner._arena_params = _get_tree(
             flat, "arena_params", runner._arena_params)
         runner._arena_opt = _get_tree(flat, "arena_opt", runner._arena_opt)
+    if runner.store is not None:
+        ss = meta["store_state"]
+        runner.store.load_state_meta(ss)
+        # cold rows share the arena-opt TREE STRUCTURE (not shapes); an
+        # int-leaf template keeps _get_tree on the host-array branch
+        row_tmpl = jax.tree_util.tree_map(lambda _: 0, runner._arena_opt)
+        runner.store.cold = {
+            int(c): _get_tree(flat, f"store_cold/{c}", row_tmpl)
+            for c in meta["store_cold"]}
+        ptrees = [_get_tree(flat, f"store_params/{i}", globals_)
+                  for i in range(int(ss["n_param_trees"]))]
+        runner.store.pending_params = {
+            int(c): ptrees[i] for c, i in ss["pp_map"].items()}
     for c in clients:
         cm = meta["clients"][str(c.cid)]
         c.rng.bit_generator.state = cm["rng"]
@@ -289,8 +353,9 @@ def _restore_pending(flat, meta, clients, globals_) -> dict:
             snapshot = _get_tree(flat, f"plan_personal/{cid}", tmpl)
         plan = LocalRoundPlan(
             cid=cid, params0=None, opt_state=None,
-            batch_idx=np.asarray(
-                _fetch(flat, f"plan_batch_idx/{cid}"), np.int32),
+            batch_idx=(np.asarray(
+                _fetch(flat, f"plan_batch_idx/{cid}"), np.int32)
+                if pm.get("materialized", True) else None),
             key=jax.numpy.asarray(_fetch(flat, f"plan_key/{cid}")),
             n_steps=int(pm["n_steps"]), duration=float(pm["duration"]),
             epsilon=float(pm["epsilon"]),

@@ -1,0 +1,21 @@
+"""Seeded REP006 violation: per-client Python loops inside store
+residency hot regions (prefetch/spill/acquire run once per cohort — an
+O(N) population walk there is the scale wall the tiered store removes)."""
+
+
+def prefetch_cids(store, cids):
+    for c in store.clients:                 # walks ALL N clients
+        if c.cid in cids:
+            store.stage(c.cid)
+
+
+def _evict_lru(store, keep):
+    ticks = {c.cid: store.seq[c.cid]
+             for c in store.clients}        # population comprehension
+    victim = min(ticks, key=ticks.get)
+    return store.spill(victim)
+
+
+def acquire_cohort(store, clients, cids):
+    return [store.slot_of[c.cid]
+            for c in clients if c.cid in cids]   # filters N to find K

@@ -1,0 +1,19 @@
+"""Clean twin of rep006_bad: residency regions walk the cohort or the
+prefetch batch — O(K) — and touch at most one INDEXED client; population
+walks live outside the store regions (startup, roster building)."""
+
+
+def prefetch_cids(store, cids):
+    for cid in cids:                        # the prefetch batch, O(K)
+        store.stage(cid)
+
+
+def _materialize_plans(store, plans):
+    for p in plans:                         # the cohort's plans, O(K)
+        c = store.clients[p.cid]            # one indexed client is fine
+        p.batch_idx = store.draw(c)
+
+
+def build_roster(clients):
+    # not a residency region: startup may walk the population freely
+    return {c.cid: c for c in clients}

@@ -261,8 +261,8 @@ def compiled_step():
     staged = runner.stage_cohort(plans)
     runner._ensure_state_arenas(params0)
     args = (runner._arena_params, runner._arena_opt, runner._arena_data,
-            staged.slots, staged.batch_idx, staged.keys, staged.n_steps,
-            runner._noise_std, staged.corrupt)
+            staged.slots, staged.data_slots, staged.batch_idx, staged.keys,
+            staged.n_steps, runner._noise_std, staged.corrupt)
     compiled = runner.cohort_step.lower(*args).compile()
     shapes = [tuple(s.shape) for s in jax.tree_util.tree_leaves(
         jax.eval_shape(lambda *a: runner.cohort_step(*a), *args))]

@@ -30,6 +30,7 @@ def _codes(findings):
     ("rep003", ["REP003"]),
     ("rep004", ["REP004"]),
     ("rep005", ["REP005", "REP005", "REP005"]),
+    ("rep006", ["REP006", "REP006", "REP006"]),
 ])
 def test_seeded_violation_fires(code, expected):
     findings = lint.run([_fixture(f"{code}_bad.py")])
@@ -40,7 +41,7 @@ def test_seeded_violation_fires(code, expected):
 
 
 @pytest.mark.parametrize(
-    "code", ["rep001", "rep002", "rep003", "rep004", "rep005"])
+    "code", ["rep001", "rep002", "rep003", "rep004", "rep005", "rep006"])
 def test_clean_twin_passes(code):
     findings = lint.run([_fixture(f"{code}_clean.py")])
     assert findings == [], [f.format() for f in findings]

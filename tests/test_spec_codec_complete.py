@@ -23,6 +23,8 @@ _SPECIAL = {
     ("TestbedConfig", "screening"): "__screening__",  # Optional[ScreeningConfig]
     ("EngineConfig", "client_axis"): "vmap",
     ("EngineConfig", "mesh"): "__mesh__",          # built lazily (devices)
+    ("EngineConfig", "store"): "__store__",        # see _bump
+    ("StoreConfig", "hot_slots"): 12,     # Optional[int], validated >= 1
     ("DPConfig", "granularity"): "per_microbatch",
     ("FLStepConfig", "server_opt"): "sgd",
     ("FLStepConfig", "compute_dtype"): "float32",
@@ -48,6 +50,12 @@ def _bump(cls_name, field, value):
     if special == "__screening__":
         from repro.core.screening import ScreeningConfig
         return _nondefault_instance(ScreeningConfig)
+    if special == "__store__":
+        # the generator flips device_arena False, and EngineConfig rejects
+        # a BOUNDED store on the host data path — bump lookahead only;
+        # hot_slots round-trips via the standalone StoreConfig case
+        from repro.engine import StoreConfig
+        return StoreConfig(lookahead=11)
     if special is not None:
         assert special != value, (cls_name, field.name)
         return special

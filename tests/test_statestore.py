@@ -1,0 +1,389 @@
+"""Tiered client-state store tests (engine/statestore.py + integration).
+
+The contract under test (STORE.md): a tiered run — device hot set bounded
+to ``StoreConfig.hot_slots``, host cold store, event-heap lookahead
+prefetch — produces params and a RunLog **bit-identical** to the
+all-resident arena, on the serial and pipelined drivers, across a
+crash/resume, and on a forced multi-device mesh; the store's counters
+satisfy the ledger law ``store_fetches == store_hot_hits +
+store_prefetch_hits + store_stall_waits``; and the lazy-dispatch fix
+keeps per-round work O(cohort), not O(population) (regression-counted at
+N=10k).  Dataset rows live in their own identity-deduped
+:class:`~repro.engine.statestore.DataArena`, which the Session keeps
+warm across client-state-only sweep axes (sigma) so the re-upload is
+skipped entirely.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+import pytest
+
+from repro.core.aggregation import FedAsync
+from repro.core.testbed import TestbedConfig, build_clients, build_partitions
+from repro.data.synthetic_ser import SERDataConfig
+from repro.engine import (
+    CohortRunner, EngineConfig, StoreConfig,
+    run_async_engine, run_fedavg_engine)
+from repro.engine.statestore import DataArena
+from repro.models.ser_cnn import SERConfig
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (CI: XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+_DIMS = dict(time_frames=12, n_mels=12)
+
+
+@pytest.fixture(scope="module")
+def store_tb():
+    """16 tiny clients — small enough that the all-resident reference
+    arena is cheap, big enough that hot_slots=6 forces real evictions."""
+    n = 16
+    return TestbedConfig(
+        use_dp=True, sigma=0.5, batch_size=16, num_clients=n,
+        data=SERDataConfig(n_total=36 * n, **_DIMS),
+        model=SERConfig(channels1=8, channels2=16, fc_dim=32, **_DIMS))
+
+
+@pytest.fixture(scope="module")
+def store_world(store_tb):
+    from repro.api.workloads import get_workload
+    splits, pooled = build_partitions(store_tb)
+    wl = get_workload(store_tb.workload)
+    params0 = wl.init(jr.PRNGKey(store_tb.seed), store_tb.model)
+    acc_fn = wl.shared_accuracy(store_tb.model)
+    return splits, pooled, params0, acc_fn
+
+
+def _runner(tb, splits, store, mesh=None, **kw):
+    clients = build_clients(tb, splits)
+    kw = {"staleness_window": 30.0, "max_cohort": 4,
+          "pipeline_depth": 2, **kw}
+    cfg = EngineConfig(store=store, mesh=mesh, **kw)
+    return clients, CohortRunner(clients, cfg)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _store_stats(log):
+    return {k: v for k, v in log.engine_stats.items()
+            if k.startswith("store_")}
+
+
+def _assert_ledger(stats):
+    assert stats["store_fetches"] == (
+        stats["store_hot_hits"] + stats["store_prefetch_hits"]
+        + stats["store_stall_waits"]), stats
+
+
+def _logs_equal_ex_stats(a, b):
+    """RunLog equality excluding engine_stats (H2D/store counters
+    legitimately differ between tiered and all-resident)."""
+    assert a.times == b.times
+    assert a.global_acc == b.global_acc
+    assert a.staleness == b.staleness
+    assert a.influence == b.influence
+    assert a.update_counts == b.update_counts
+    assert a.eps_trajectory == b.eps_trajectory
+    assert a.cohort_sizes == b.cohort_sizes
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_storeconfig_validation():
+    with pytest.raises(ValueError, match="hot_slots"):
+        StoreConfig(hot_slots=0)
+    with pytest.raises(ValueError, match="hot_slots"):
+        StoreConfig(hot_slots=2.5)
+    with pytest.raises(ValueError, match="lookahead"):
+        StoreConfig(lookahead=-1)
+    assert StoreConfig().hot_slots is None          # all-resident default
+
+
+def test_engineconfig_guards_tiering():
+    with pytest.raises(ValueError, match="max_cohort"):
+        EngineConfig(max_cohort=8, store=StoreConfig(hot_slots=4))
+    with pytest.raises(ValueError, match="device_arena"):
+        EngineConfig(device_arena=False, store=StoreConfig(hot_slots=8))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_split_key_chain_bitwise():
+    from repro.engine.engine import split_key_chain
+    key = jr.PRNGKey(7)
+    k_ref, subs_ref = key, []
+    for _ in range(9):
+        k_ref, sub = jr.split(k_ref)
+        subs_ref.append(np.asarray(sub))
+    k_new, subs = split_key_chain(jr.PRNGKey(7), 9)
+    assert np.array_equal(np.asarray(k_new), np.asarray(k_ref))
+    assert np.array_equal(subs, np.stack(subs_ref))
+
+
+def test_data_arena_dedupes_shared_rows(store_tb, store_world):
+    splits, _, _, _ = store_world
+    clients = build_clients(store_tb, splits)
+    put = lambda b: jnp.asarray(b)
+    distinct = DataArena.build(clients, 1, put)
+    assert distinct.pad_slot == len(clients)
+    assert np.array_equal(distinct.slot_of_cid,
+                          np.arange(len(clients), dtype=np.int32))
+    # every client referencing ONE dict uploads ONE row (+ the pad row)
+    shared = build_clients(store_tb, [splits[0]] * len(clients))
+    arena = DataArena.build(shared, 1, put)
+    assert arena.pad_slot == 1 and arena.n_slots == 2
+    assert set(arena.slot_of_cid.tolist()) == {0}
+    assert arena.nbytes < distinct.nbytes / 4
+
+
+# ---------------------------------------------------------------------------
+# tiered vs all-resident: bit-identical
+# ---------------------------------------------------------------------------
+
+def test_tiered_async_parity(store_tb, store_world):
+    splits, pooled, params0, acc_fn = store_world
+
+    def go(store):
+        clients, runner = _runner(store_tb, splits, store)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+            max_updates=40, seed=0, eval_every=10, runner=runner)
+
+    p_res, log_res = go(StoreConfig())
+    p_tier, log_tier = go(StoreConfig(hot_slots=6, lookahead=4))
+    assert _leaves_equal(p_res, p_tier)
+    _logs_equal_ex_stats(log_res, log_tier)
+    st = _store_stats(log_tier)
+    _assert_ledger(st)
+    assert st["store_fetches"] > 0
+    assert st["store_prefetch_hits"] > 0       # the prefetcher is live
+    assert st["store_evictions"] > 0           # hot 6 < 16 forces churn
+    assert st["store_spill_bytes"] > 0         # dirty rows really spill
+    # every device->host read went through the _in_store funnel: the
+    # pipelined scheduler still never blocks between eval boundaries
+    assert log_tier.engine_stats["host_syncs_between_evals"] == 0
+    assert log_tier.engine_stats["store_sync_reads"] > 0
+    assert all(v == 0 for v in _store_stats(log_res).values())
+
+
+def test_tiered_fedavg_parity(store_tb, store_world):
+    splits, pooled, params0, acc_fn = store_world
+
+    def go(store):
+        clients, runner = _runner(store_tb, splits, store)
+        return run_fedavg_engine(
+            clients, params0, acc_fn, pooled, rounds=3,
+            seed=0, eval_every=3, runner=runner)
+
+    p_res, log_res = go(StoreConfig())
+    p_tier, log_tier = go(StoreConfig(hot_slots=6, lookahead=4))
+    assert _leaves_equal(p_res, p_tier)
+    _logs_equal_ex_stats(log_res, log_tier)
+    st = _store_stats(log_tier)
+    _assert_ledger(st)
+    # a 16-client barrier round over 6 hot slots cycles every chunk
+    assert st["store_fetches"] >= 3 * 16
+    assert st["store_evictions"] > 0
+    assert st["store_prefetch_hits"] > 0       # next-chunk prefetch
+    assert log_tier.engine_stats["host_syncs_between_evals"] == 0
+
+
+def test_lookahead_zero_is_all_demand_misses(store_tb, store_world):
+    """Prefetch off: every non-resident member is a counted demand
+    stall, and the result is STILL bit-identical (the prefetcher is a
+    latency optimization, never a semantics change)."""
+    splits, pooled, params0, acc_fn = store_world
+
+    def go(store):
+        clients, runner = _runner(store_tb, splits, store)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+            max_updates=20, seed=0, eval_every=10, runner=runner)
+
+    p_res, log_res = go(StoreConfig())
+    p_tier, log_tier = go(StoreConfig(hot_slots=6, lookahead=0))
+    assert _leaves_equal(p_res, p_tier)
+    _logs_equal_ex_stats(log_res, log_tier)
+    st = _store_stats(log_tier)
+    _assert_ledger(st)
+    assert st["store_prefetch_hits"] == 0
+    assert st["store_stall_waits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# O(N) dispatch regression (satellite: lazy/batched startup)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_stays_o_cohort_at_10k_clients(store_tb, store_world,
+                                                monkeypatch):
+    """At N=10k (every client sharing ONE dataset row), a short tiered
+    run must draw batch permutations only for STAGED cohort members —
+    the old eager dispatch drew all N at startup (O(N * S) host work per
+    run, the wall this PR's lazy plans removed)."""
+    import repro.engine.engine as eng
+    splits, pooled, params0, acc_fn = store_world
+    n = 10_000
+    clients = build_clients(store_tb, [splits[0]] * n)
+    calls = {"n": 0}
+    real = eng.plan_batches
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(eng, "plan_batches", counting)
+    cfg = EngineConfig(staleness_window=30.0, max_cohort=4,
+                       pipeline_depth=2,
+                       store=StoreConfig(hot_slots=64, lookahead=8))
+    runner = CohortRunner(clients, cfg)
+    _, log = run_async_engine(
+        clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+        max_updates=12, seed=0, eval_every=12, runner=runner)
+    assert sum(log.update_counts.values()) >= 12
+    # staged members only: bounded by updates + in-flight slack, never N
+    assert 0 < calls["n"] < 100, calls["n"]
+    st = _store_stats(log)
+    _assert_ledger(st)
+    assert st["store_fetches"] > 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def _crash_resume(tb, splits, pooled, params0, acc_fn, store, mesh=None):
+    from repro.engine.resilience import CheckpointPolicy, SimulatedCrash
+
+    def go(**kw):
+        clients, runner = _runner(tb, splits, store, mesh=mesh)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+            max_updates=40, seed=0, eval_every=10, runner=runner, **kw)
+
+    p_ref, log_ref = go()
+    with tempfile.TemporaryDirectory() as d:
+        pol = CheckpointPolicy(d, every=8, crash_after_saves=2)
+        with pytest.raises(SimulatedCrash):
+            go(checkpoint=pol)
+        p_res, log_res = go(resume_from=d)
+        assert _leaves_equal(p_ref, p_res)
+        _logs_equal_ex_stats(log_ref, log_res)
+        # the resumed run replays the SAME residency/prefetch schedule:
+        # even the store counters land identical to the uninterrupted run
+        assert _store_stats(log_res) == _store_stats(log_ref)
+        _assert_ledger(_store_stats(log_res))
+        assert _store_stats(log_ref)["store_evictions"] > 0
+        # refusing a mismatched tier layout beats silently diverging
+        clients, runner = _runner(
+            tb, splits,
+            dataclasses.replace(store, hot_slots=store.hot_slots + 2),
+            mesh=mesh)
+        with pytest.raises(ValueError, match="StoreConfig mismatch"):
+            run_async_engine(
+                clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+                max_updates=40, seed=0, eval_every=10, runner=runner,
+                resume_from=d)
+
+
+def test_tiered_crash_resume_bit_identical(store_tb, store_world):
+    splits, pooled, params0, acc_fn = store_world
+    _crash_resume(store_tb, splits, pooled, params0, acc_fn,
+                  StoreConfig(hot_slots=6, lookahead=4))
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device mesh (CI engine-mesh job)
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_tiered_mesh_parity(store_tb, store_world):
+    from repro.engine import cohort_mesh
+    splits, pooled, params0, acc_fn = store_world
+    mesh = cohort_mesh(8)
+
+    def go(store):
+        clients, runner = _runner(store_tb, splits, store, mesh=mesh,
+                                  max_cohort=8)
+        return run_async_engine(
+            clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+            max_updates=24, seed=0, eval_every=8, runner=runner)
+
+    p_res, log_res = go(StoreConfig())
+    p_tier, log_tier = go(StoreConfig(hot_slots=8, lookahead=6))
+    assert _leaves_equal(p_res, p_tier)
+    _logs_equal_ex_stats(log_res, log_tier)
+    st = _store_stats(log_tier)
+    _assert_ledger(st)
+    assert st["store_evictions"] > 0
+    assert log_tier.engine_stats["host_syncs_between_evals"] == 0
+
+
+@multi_device
+def test_tiered_mesh_crash_resume(store_tb, store_world):
+    from repro.engine import cohort_mesh
+    splits, pooled, params0, acc_fn = store_world
+    _crash_resume(store_tb, splits, pooled, params0, acc_fn,
+                  StoreConfig(hot_slots=8, lookahead=6),
+                  mesh=cohort_mesh(8))
+
+
+# ---------------------------------------------------------------------------
+# Session keeps the dataset arena warm (satellite: sigma-only sweeps
+# skip the re-upload)
+# ---------------------------------------------------------------------------
+
+def test_session_sweep_reuses_data_arena(store_tb):
+    from repro.api import ExperimentSpec, RunBudget, Session, StrategySpec
+    sess = Session()
+    spec = ExperimentSpec(
+        testbed=store_tb,
+        strategy=StrategySpec("fedasync", alpha=0.5),
+        run=RunBudget(max_updates=10, eval_every=10),
+        engine=EngineConfig(staleness_window=30.0, max_cohort=4))
+    sess.run(spec)
+    arena0 = sess._runner.data_arena
+    leaves0 = {k: id(v) for k, v in arena0.leaves.items()}
+    sigma2 = dataclasses.replace(store_tb, sigma=1.5)
+    sess.run(dataclasses.replace(spec, testbed=sigma2))
+    assert sess.events["data_arena_builds"] == 1
+    assert sess.events["data_arena_reuses"] == 1
+    # the second scenario's runner holds the SAME device buffers — the
+    # dataset bytes crossed the H2D link exactly once
+    assert sess._runner.data_arena is arena0
+    assert {k: id(v) for k, v in sess._runner.data_arena.leaves.items()} \
+        == leaves0
+    assert len(sess._data_arenas) == 1
+
+
+# ---------------------------------------------------------------------------
+# audit: the ledger law is enforced
+# ---------------------------------------------------------------------------
+
+def test_store_ledger_audit_fires(store_tb, store_world):
+    from repro.analysis.audits import AuditFailure, audit_engine_stats
+    splits, pooled, params0, acc_fn = store_world
+    clients, runner = _runner(store_tb, splits,
+                              StoreConfig(hot_slots=6, lookahead=4))
+    _, log = run_async_engine(
+        clients, params0, acc_fn, pooled, FedAsync(alpha=0.5),
+        max_updates=20, seed=0, eval_every=10, runner=runner)
+    audit_engine_stats(log.engine_stats)       # the real run balances
+    bad = dict(log.engine_stats)
+    bad["store_hot_hits"] += 1                 # cook the books
+    with pytest.raises(AuditFailure, match="store ledger"):
+        audit_engine_stats(bad)
